@@ -1,0 +1,6 @@
+"""Benchmark package. FP64 must be real FP64 here (the paper's outer Krylov
+layers and the eq. (6) 1e-9 criterion depend on it), so enable x64 before
+any benchmark module builds jit functions."""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,58 @@
+"""Fig. 9 analogue: E8MY PackSELL SpMV — performance and backward error.
+
+Sweeps the delta width D (mantissa Y = 22 − D) against FP32/FP16/BF16 SELL
+with FP32 input/output vectors and the paper's row scaling G⁻¹A. Reports
+median time, speedup over FP32 SELL, and the eq. (5) backward error.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packsell as pk
+from repro.core import sell as sl
+from repro.core import testmats
+from repro.solvers.operators import row_scale
+
+from . import common
+
+D_GRID = (1, 2, 4, 6, 8, 10, 12)
+
+
+def run(scale: str | None = None) -> None:
+    scale = scale or common.SCALE
+    suite = testmats.suite(scale)
+    C, sigma = 32, 256
+    for name, a0 in suite.items():
+        a, _ = row_scale(a0)
+        a = a.tocsr()
+        a.sort_indices()
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
+
+        base = {}
+        for kind, dt in (("fp32", "float32"), ("fp16", "float16"),
+                         ("bf16", "bfloat16")):
+            mm = sl.from_csr(a, C=C, sigma=sigma, value_dtype=dt)
+            fn = jax.jit(lambda x, mm=mm: sl.sell_spmv_jnp(mm, x))
+            t = common.time_fn(fn, x)
+            be = common.backward_error(fn(x), a, np.asarray(x))
+            base[kind] = t
+            common.emit("e8my_baseline", f"{name}_{kind}",
+                        t_us=t * 1e6, backward_error=be)
+
+        for D in D_GRID:
+            mm = pk.from_csr(a, C=C, sigma=sigma, D=D, codec="e8m")
+            fn = jax.jit(lambda x, mm=mm: pk.packsell_spmv_jnp(mm, x))
+            t = common.time_fn(fn, x)
+            be = common.backward_error(fn(x), a, np.asarray(x))
+            common.emit(
+                "e8my_sweep", f"{name}_D{D}",
+                mantissa=22 - D,
+                t_us=t * 1e6,
+                speedup_vs_fp32sell=base["fp32"] / t,
+                speedup_vs_fp16sell=base["fp16"] / t,
+                backward_error=be,
+                dummy_frac=mm.n_dummy / max(a.nnz, 1),
+            )

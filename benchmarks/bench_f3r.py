@@ -1,0 +1,74 @@
+"""Fig. 10 analogue: F3R solver — FP64 vs FP16-SELL vs PackSELL-FP16.
+
+FP16-F3R and PackSELL-F3R must show identical convergence (the paper:
+"Since FP16 values are directly embedded in PackSELL, FP16-F3R and
+PackSELL-F3R exhibit identical convergence") — asserted here — so the
+wall-clock difference isolates the format. Also reports the FP64 GMRES
+reference of the paper's right plot.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import testmats
+from repro.solvers import f3r, gmres, precond
+from repro.solvers.operators import OperatorSet, sym_scale
+
+from . import common
+
+
+def _problems(scale: str) -> dict:
+    if scale == "tiny":
+        return {"hpcg_6": testmats.hpcg(6, 6, 6),
+                "hpgmp_6": testmats.hpgmp(6, 6, 6)}
+    if scale == "small":
+        return {"hpcg_12": testmats.hpcg(12, 12, 12),
+                "hpgmp_12": testmats.hpgmp(12, 12, 12),
+                "stencil1d_40k": testmats.stencil_1d(40_000, 3)}
+    return {"hpcg_24": testmats.hpcg(24, 24, 24),
+            "hpgmp_24": testmats.hpgmp(24, 24, 24),
+            "stencil1d_150k": testmats.stencil_1d(150_000, 3)}
+
+
+def run(scale: str | None = None) -> None:
+    scale = scale or common.SCALE
+    for name, a0 in _problems(scale).items():
+        a, _ = sym_scale(a0)
+        ops = OperatorSet(a, C=32, sigma=256)
+        rng = np.random.default_rng(3)
+        b = jnp.asarray(rng.random(a.shape[0]))  # paper: U[0,1) rhs
+
+        results = {}
+        for variant in ("fp64", "fp16", "packsell"):
+            cfg = f3r.presets(variant)
+            t = common.time_fn(
+                lambda: f3r.solve(ops, b, cfg), warmup=1, repeats=3)
+            x, info = f3r.solve(ops, b, cfg)
+            relres = float(np.linalg.norm(
+                np.asarray(b, np.float64)
+                - a.astype(np.float64) @ np.asarray(x, np.float64))
+                / np.linalg.norm(np.asarray(b, np.float64)))
+            results[variant] = dict(t=t, iters=int(info.iters),
+                                    relres=relres)
+            common.emit("f3r", f"{name}_{variant}", t_s=t,
+                        outer_iters=int(info.iters), true_relres=relres)
+
+        # paper's invariant: identical convergence for fp16 vs packsell
+        same = results["fp16"]["iters"] == results["packsell"]["iters"]
+        common.emit(
+            "f3r_speedup", name,
+            packsell_vs_fp16=results["fp16"]["t"] / results["packsell"]["t"],
+            packsell_vs_fp64=results["fp64"]["t"] / results["packsell"]["t"],
+            identical_convergence=same,
+        )
+
+        # FP64 GMRES reference (restarted 100, AINV preconditioner)
+        A64 = ops.matvec("fp64")
+        M = precond.neumann_ainv(ops.diag(), A64, k=2, dtype=jnp.float64)
+        t = common.time_fn(
+            lambda: gmres.fgmres(A64, b, M=M, m=100, tol=1e-9,
+                                 max_cycles=200, dtype=jnp.float64),
+            warmup=1, repeats=1)
+        common.emit("f3r_gmres_ref", name, t_s=t,
+                    speedup_packsell_vs_gmres=t / results["packsell"]["t"])

@@ -1,0 +1,85 @@
+"""Fig. 11/12 + Table 3 analogue: inner-outer CG with E8MY inner SpMV.
+
+Four IO-CG variants (fp64 / fp32 / fp16 / best-E8MY) against the standard
+FP64 PCG baseline, for m_in ∈ {20, 50}; the E8MY grid reproduces the
+Table 3 "best format" selection.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import testmats
+from repro.solvers import iocg
+from repro.solvers.operators import OperatorSet, sym_scale
+
+from . import common
+
+E8M_GRID = (2, 6, 10, 12)      # delta widths D -> mantissa 22-D
+M_IN_GRID = (20, 50)
+
+
+def _problems(scale: str) -> dict:
+    if scale == "tiny":
+        return {"hpcg_6": testmats.hpcg(6, 6, 6)}
+    if scale == "small":
+        return {"hpcg_12": testmats.hpcg(12, 12, 12),
+                "stencil1d_40k": testmats.stencil_1d(40_000, 3)}
+    return {"hpcg_24": testmats.hpcg(24, 24, 24),
+            "stencil1d_150k": testmats.stencil_1d(150_000, 3)}
+
+
+def _true_relres(a, x, b) -> float:
+    return float(np.linalg.norm(
+        np.asarray(b, np.float64)
+        - a.astype(np.float64) @ np.asarray(x, np.float64))
+        / np.linalg.norm(np.asarray(b, np.float64)))
+
+
+def run(scale: str | None = None) -> None:
+    scale = scale or common.SCALE
+    for name, a0 in _problems(scale).items():
+        a, _ = sym_scale(a0)
+        ops = OperatorSet(a, C=32, sigma=256)
+        rng = np.random.default_rng(5)
+        b = jnp.asarray(rng.random(a.shape[0]))
+
+        # baseline: standard FP64 PCG
+        t_pcg = common.time_fn(lambda: iocg.pcg_reference(ops, b),
+                               warmup=1, repeats=3)
+        x, info = iocg.pcg_reference(ops, b)
+        common.emit("iocg_pcg_ref", name, t_s=t_pcg,
+                    iters=int(info.iters),
+                    true_relres=_true_relres(a, x, b))
+
+        for m_in in M_IN_GRID:
+            for variant in ("fp64", "fp32", "fp16"):
+                cfg = iocg.variant(variant, m_in=m_in)
+                t = common.time_fn(lambda: iocg.solve(ops, b, cfg),
+                                   warmup=1, repeats=3)
+                x, info = iocg.solve(ops, b, cfg)
+                common.emit(
+                    "iocg", f"{name}_min{m_in}_{variant}",
+                    t_s=t, outer_iters=int(info.iters),
+                    true_relres=_true_relres(a, x, b),
+                    speedup_vs_pcg=t_pcg / t)
+
+            # Table 3: best E8MY format over the D grid
+            best = None
+            for D in E8M_GRID:
+                cfg = iocg.variant(f"e8m{D}", m_in=m_in)
+                t = common.time_fn(lambda: iocg.solve(ops, b, cfg),
+                                   warmup=1, repeats=3)
+                x, info = iocg.solve(ops, b, cfg)
+                rr = _true_relres(a, x, b)
+                common.emit(
+                    "iocg_e8m_grid", f"{name}_min{m_in}_D{D}",
+                    mantissa=22 - D, t_s=t, outer_iters=int(info.iters),
+                    true_relres=rr, speedup_vs_pcg=t_pcg / t)
+                if rr < 1e-8 and (best is None or t < best[1]):
+                    best = (D, t)
+            if best is not None:
+                common.emit(
+                    "iocg_best_format", f"{name}_min{m_in}",
+                    best_format=f"E8M{22 - best[0]}",
+                    speedup_vs_pcg=t_pcg / best[1])

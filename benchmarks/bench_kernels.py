@@ -1,0 +1,50 @@
+"""Pallas kernel validation sweep: PackSELL/SELL kernels (interpret mode)
+against the pure-jnp oracle across matrix classes, codecs and block shapes.
+
+Interpret-mode wall-clock is meaningless (the kernel body runs in Python),
+so this bench reports *correctness* (max |Δ| vs oracle) plus the static
+VMEM working-set per grid step implied by the BlockSpecs — the quantity a
+real-TPU deployment must keep under ~16 MB/core.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import packsell as pk
+from repro.core import testmats
+from repro.kernels import ops
+
+from . import common
+
+
+def _vmem_bytes(mat: pk.PackSELLMatrix, sb: int, wb: int, full_x: bool,
+                hw: int = 4096) -> int:
+    C = mat.C
+    pack_tile = 4 * sb * wb * C
+    scratch = (4 + 4) * sb * C
+    out_tile = 4 * sb * C
+    x_bytes = 4 * (mat.m if full_x else 2 * hw)
+    return pack_tile + scratch + out_tile + x_bytes
+
+
+def run(scale: str | None = None) -> None:
+    suite = testmats.suite("tiny")
+    for name, a in suite.items():
+        x = jnp.asarray(
+            np.random.default_rng(1).standard_normal(a.shape[1])
+            .astype(np.float32))
+        for codec, D in (("fp16", 15), ("bf16", 15), ("e8m", 8)):
+            mat = pk.from_csr(a, C=128, sigma=256, D=D, codec=codec,
+                              bucket_strategy="uniform")
+            oracle = pk.packsell_spmv_jnp(mat, x)
+            y = ops.packsell_spmv(mat, x, force="full")
+            err = float(jnp.max(jnp.abs(y - oracle)))
+            wins = ops.band_plan(mat, sb=8, hw=4096)
+            rec = dict(max_abs_err_full=err,
+                       vmem_full_kb=_vmem_bytes(mat, 8, 32, True) / 1024)
+            if wins is not None:
+                yb = ops.packsell_spmv(mat, x, force="band")
+                rec["max_abs_err_band"] = float(jnp.max(jnp.abs(yb - oracle)))
+                rec["vmem_band_kb"] = _vmem_bytes(mat, 8, 32, False) / 1024
+            common.emit("kernel_check", f"{name}_{codec}_D{D}", **rec)

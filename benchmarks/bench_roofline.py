@@ -1,0 +1,52 @@
+"""§Roofline table: read the dry-run sweep artifact and print per-cell
+roofline terms (compute / memory / collective, dominant, fractions).
+
+The dry-run itself must run in its own process (512 placeholder devices);
+this bench only *reads* ``artifacts/dryrun_all.json``. Regenerate with:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes \
+        --out artifacts/dryrun_all.json
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from . import common
+
+_CANDIDATES = ("artifacts/dryrun_optimized.json", "artifacts/dryrun_all.json")
+ARTIFACT = os.environ.get("REPRO_DRYRUN_JSON", "")
+
+
+def _pick() -> str | None:
+    if ARTIFACT:
+        return ARTIFACT if os.path.exists(ARTIFACT) else None
+    for c in _CANDIDATES:
+        if os.path.exists(c):
+            return c
+    return None
+
+
+def run(scale: str | None = None) -> None:
+    path = _pick()
+    if path is None:
+        common.emit("roofline", "missing_artifact", path=str(_CANDIDATES))
+        return
+    common.emit("roofline", "source", path=path)
+    with open(path) as f:
+        cells = json.load(f)
+    for rec in cells:
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec["status"] != "ok":
+            common.emit("roofline", tag, status=rec["status"])
+            continue
+        r = rec["roofline"]
+        common.emit(
+            "roofline", tag,
+            t_compute_s=r["t_compute_s"],
+            t_memory_s=r["t_memory_s"],
+            t_collective_s=r["t_collective_s"],
+            dominant=r["dominant"],
+            roofline_fraction=r["roofline_fraction"],
+            useful_flops_ratio=r["useful_flops_ratio"],
+        )

@@ -1,0 +1,68 @@
+"""Fig. 5/6/8 analogue: FP16 SpMV across formats and matrix classes.
+
+PackSELL (W=32, D=15, fp16 embed) vs SELL-fp16 (cuSELL analogue) vs
+CSR-fp16 (cuCSR analogue) vs COO-fp16, per structural matrix class.
+Reports effective GFLOPS (2·nnz / t, padding excluded — paper §5.1) and
+the PackSELL speedups of Fig. 8.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packsell as pk
+from repro.core import sell as sl
+from repro.core import sparse as sps
+from repro.core import testmats
+
+from . import common
+
+
+def run(scale: str | None = None) -> None:
+    scale = scale or common.SCALE
+    suite = testmats.suite(scale)
+    C, sigma = 32, 256
+    for name, a in suite.items():
+        n, m = a.shape
+        nnz = a.nnz
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+
+        mats = {
+            "packsell_fp16": pk.from_csr(a, C=C, sigma=sigma, D=15,
+                                         codec="fp16"),
+            "sell_fp16": sl.from_csr(a, C=C, sigma=sigma,
+                                     value_dtype="float16"),
+            "csr_fp16": sps.csr_from_scipy(a, "float16"),
+            "coo_fp16": sps.coo_from_scipy(a, "float16"),
+        }
+        fns = {
+            "packsell_fp16": jax.jit(
+                lambda x, mm=mats["packsell_fp16"]: pk.packsell_spmv_jnp(
+                    mm, x)),
+            "sell_fp16": jax.jit(
+                lambda x, mm=mats["sell_fp16"]: sl.sell_spmv_jnp(mm, x)),
+            "csr_fp16": jax.jit(
+                lambda x, mm=mats["csr_fp16"]: mm.spmv(x)),
+            "coo_fp16": jax.jit(
+                lambda x, mm=mats["coo_fp16"]: mm.spmv(x)),
+        }
+        times, gflops = {}, {}
+        for k, fn in fns.items():
+            t = common.time_fn(fn, x)
+            times[k] = t
+            gflops[k] = 2.0 * nnz / t / 1e9
+        ps = mats["packsell_fp16"]
+        row_nnz = np.diff(a.indptr)
+        rsd = float(np.std(row_nnz) / max(np.mean(row_nnz), 1e-300))
+        common.emit(
+            "spmv_fp16", name, n=n, nnz=nnz, rsd=round(rsd, 4),
+            gflops_packsell=gflops["packsell_fp16"],
+            gflops_sell=gflops["sell_fp16"],
+            gflops_csr=gflops["csr_fp16"],
+            gflops_coo=gflops["coo_fp16"],
+            speedup_vs_sell=times["sell_fp16"] / times["packsell_fp16"],
+            speedup_vs_csr=times["csr_fp16"] / times["packsell_fp16"],
+            n_dummy=ps.n_dummy,
+        )

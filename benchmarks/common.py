@@ -1,0 +1,69 @@
+"""Shared benchmark utilities: timing, CSV emission, result collection.
+
+Wall-clock on this CPU container is a *relative* instrument (DESIGN.md §2):
+every figure reports PackSELL against the SELL/CSR baselines timed the same
+way, mirroring how the paper reports speedups rather than absolute device
+FLOPS. Roofline-based absolute analysis lives in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")   # tiny|small|medium
+
+_ROWS: list[dict] = []
+
+
+def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
+    """Median seconds per call of a jit-compatible fn (blocks on result)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(bench: str, case: str, **fields):
+    row = {"bench": bench, "case": case, **fields}
+    _ROWS.append(row)
+    kv = ",".join(f"{k}={_fmt(v)}" for k, v in fields.items())
+    print(f"{bench},{case},{kv}", flush=True)
+    return row
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def rows() -> list[dict]:
+    return _ROWS
+
+
+def save_rows(path: str):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_ROWS, f, indent=1, default=float)
+    print(f"[benchmarks] wrote {len(_ROWS)} rows -> {path}")
+
+
+def backward_error(y, a_csr, x) -> float:
+    """Paper eq. (5): ||y - Ax||_inf / (||A||_inf ||x||_inf)."""
+    y = np.asarray(y, np.float64)
+    x = np.asarray(x, np.float64)
+    exact = a_csr.astype(np.float64) @ x
+    num = np.max(np.abs(y - exact))
+    anorm = np.max(np.abs(a_csr).sum(axis=1))
+    xnorm = np.max(np.abs(x))
+    return float(num / max(anorm * xnorm, 1e-300))

@@ -1,0 +1,234 @@
+"""Value codecs + branch-free word pack/unpack for PackSELL (paper §4.2).
+
+A PackSELL word (W = 32) is laid out as::
+
+    flag = 1 :  [ value : V bits | delta : D bits | 1 ]     V = 31 - D
+    flag = 0 :  [ delta  : 31 bits              | 0 ]     (dummy / padding)
+
+``flag=0`` words carry no value; SELL padding reuses ``flag=0, delta=0`` so the
+compute path needs no masking at all (a padding word contributes ``v = 0`` and
+leaves the column cursor unchanged).
+
+The unpack path mirrors Fig. 3(b) of the paper and is fully branch-free, which
+on TPU means it vectorizes across the (8, 128) VREG on the VPU:
+
+    flag   = word & 1
+    shift  = (31 - D) * flag
+    delta  = (word << shift) >> (shift + 1)        # logical shifts on uint32
+    vbits  = word & (~((1 << (D+1)) - 1) * flag)   # zero low D+1 bits, or all
+    value  = codec.decode(vbits)
+
+Codecs supported (all W=32):
+
+* ``fp16``  — IEEE FP16 embedded in the top 16 bits (paper §4.2.2; D <= 15).
+* ``bf16``  — bfloat16 embedded in the top 16 bits. TPU adaptation: BF16 is the
+  native 16-bit type on TPU; FP16 is kept for paper fidelity.
+* ``e8m<Y>`` — the paper's E8MY: sign + 8 exponent + Y mantissa bits = the top
+  V = 9 + Y bits of an FP32 pattern, round-to-nearest at pack time, decoded by
+  a single mask + bitcast. Requires Y = 22 - D for a fully packed word.
+* ``fixed<F>`` — signed fixed-point with F fractional bits in V bits (beyond
+  paper: the "few-bit integer" representation its intro motivates).
+
+All pack/unpack entry points exist twice: a numpy version (host-side format
+construction) and a jnp version (device compute / Pallas kernel bodies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+W = 32  # word width in bits; the paper evaluates W=32 and so do we.
+
+
+def vbits_for(D: int) -> int:
+    """Value width V for a given delta width D (W = V + D + 1)."""
+    return W - D - 1
+
+
+def delta_mask(D: int) -> int:
+    """Low-bit mask covering the delta+flag field: (1 << (D+1)) - 1."""
+    return (1 << (D + 1)) - 1
+
+
+# ---------------------------------------------------------------------------
+# Codec definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """A V-bit value representation living in the top bits of a 32-bit word.
+
+    ``encode_np(values, D)`` returns uint32 payloads whose low ``D+1`` bits are
+    zero; ``decode(vbits)`` maps masked uint32 words (low bits already zeroed
+    by the unpack sequence) to the compute dtype.
+    """
+
+    name: str
+    min_D: int
+    max_D: int
+    encode_np: Callable[[np.ndarray, int], np.ndarray]
+    decode_jnp: Callable[[jnp.ndarray, int], jnp.ndarray]
+    decode_np: Callable[[np.ndarray, int], np.ndarray]
+    # Effective value bits actually used for a given D (for memory accounting).
+    value_bits: Callable[[int], int]
+
+
+# -- FP16 / BF16 direct embedding (top 16 bits) ------------------------------
+
+
+def _encode_f16_np(values: np.ndarray, D: int) -> np.ndarray:
+    assert D <= 15, "fp16 embed needs V >= 16 (D <= 15)"
+    h = values.astype(np.float16)
+    return h.view(np.uint16).astype(np.uint32) << np.uint32(16)
+
+
+def _decode_f16_jnp(vbits: jnp.ndarray, D: int) -> jnp.ndarray:
+    top = (vbits >> np.uint32(16)).astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(top, jnp.float16)
+
+
+def _decode_f16_np(vbits: np.ndarray, D: int) -> np.ndarray:
+    return (vbits >> np.uint32(16)).astype(np.uint16).view(np.float16)
+
+
+def _encode_bf16_np(values: np.ndarray, D: int) -> np.ndarray:
+    assert D <= 15, "bf16 embed needs V >= 16 (D <= 15)"
+    u = np.ascontiguousarray(values.astype(np.float32)).view(np.uint32)
+    # round-to-nearest-even truncation to the top 16 bits
+    low = np.uint32(16)
+    lsb = (u >> low) & np.uint32(1)
+    rounded = u + lsb + np.uint32((1 << 15) - 1)
+    return rounded & np.uint32(0xFFFF0000)
+
+
+def _decode_bf16_jnp(vbits: jnp.ndarray, D: int) -> jnp.ndarray:
+    # low 16 bits of the masked word may contain delta bits when D < 15:
+    # clear everything below the bf16 payload before bitcasting.
+    return jax.lax.bitcast_convert_type(vbits & np.uint32(0xFFFF0000), jnp.float32)
+
+
+def _decode_bf16_np(vbits: np.ndarray, D: int) -> np.ndarray:
+    return (vbits & np.uint32(0xFFFF0000)).view(np.float32)
+
+
+# -- E8MY: top V bits of an FP32 pattern (paper §4.2.2) ----------------------
+
+
+def _encode_e8m_np(values: np.ndarray, D: int) -> np.ndarray:
+    """Round an FP32 value to its top V = 31-D bits (RNE), low D+1 bits zero.
+
+    Bit-level equivalent of the paper's frexpf/ldexpf + round construction,
+    but round-to-nearest-even instead of round-half-away (documented in
+    DESIGN.md; difference is at most 1 ulp of the truncated format).
+    """
+    u = np.ascontiguousarray(values.astype(np.float32)).view(np.uint32).copy()
+    low = np.uint32(D + 1)
+    lsb = (u >> low) & np.uint32(1)
+    half = np.uint32((1 << D) - 1)  # (1 << (low-1)) - 1
+    rounded = u + lsb + half  # RNE: add half, ties to even via lsb
+    return rounded & ~np.uint32(delta_mask(D))
+
+
+def _decode_e8m_jnp(vbits: jnp.ndarray, D: int) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(vbits, jnp.float32)
+
+
+def _decode_e8m_np(vbits: np.ndarray, D: int) -> np.ndarray:
+    return vbits.view(np.float32)
+
+
+# -- Fixed point (beyond paper): signed V-bit integer with F fraction bits ---
+
+
+def _make_fixed(frac_bits: int):
+    def encode(values: np.ndarray, D: int) -> np.ndarray:
+        V = vbits_for(D)
+        scaled = np.round(values.astype(np.float64) * (1 << frac_bits))
+        lo, hi = -(1 << (V - 1)), (1 << (V - 1)) - 1
+        q = np.clip(scaled, lo, hi).astype(np.int64)
+        return (q.astype(np.uint32) << np.uint32(D + 1)) & np.uint32(0xFFFFFFFF)
+
+    def decode_jnp(vbits: jnp.ndarray, D: int) -> jnp.ndarray:
+        # arithmetic shift to sign-extend the V-bit payload
+        signed = jax.lax.bitcast_convert_type(vbits, jnp.int32) >> np.int32(D + 1)
+        return signed.astype(jnp.float32) * np.float32(2.0 ** (-frac_bits))
+
+    def decode_np(vbits: np.ndarray, D: int) -> np.ndarray:
+        signed = vbits.view(np.int32) >> np.int32(D + 1)
+        return signed.astype(np.float32) * np.float32(2.0 ** (-frac_bits))
+
+    return encode, decode_jnp, decode_np
+
+
+def make_codec(name: str) -> Codec:
+    if name == "fp16":
+        return Codec("fp16", 1, 15, _encode_f16_np, _decode_f16_jnp,
+                     _decode_f16_np, lambda D: 16)
+    if name == "bf16":
+        return Codec("bf16", 1, 15, _encode_bf16_np, _decode_bf16_jnp,
+                     _decode_bf16_np, lambda D: 16)
+    if name == "e8m":
+        # Y = 22 - D mantissa bits; V = 31 - D total.
+        return Codec("e8m", 1, 22, _encode_e8m_np, _decode_e8m_jnp,
+                     _decode_e8m_np, lambda D: vbits_for(D))
+    if name.startswith("fixed"):
+        frac = int(name[len("fixed"):])
+        enc, dec_j, dec_n = _make_fixed(frac)
+        return Codec(name, 1, 24, enc, dec_j, dec_n, lambda D: vbits_for(D))
+    raise ValueError(f"unknown codec {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Word-level pack / unpack
+# ---------------------------------------------------------------------------
+
+
+def pack_words_np(values: np.ndarray, deltas: np.ndarray, flags: np.ndarray,
+                  codec: Codec, D: int) -> np.ndarray:
+    """Pack (value, delta, flag) triples into uint32 words (Fig. 3a).
+
+    flags==1: value embedded, delta must fit D bits.
+    flags==0: delta occupies 31 bits, value ignored (dummy / padding).
+    """
+    deltas = deltas.astype(np.uint64)
+    flags = flags.astype(np.uint32)
+    assert np.all(deltas[flags == 1] < (1 << D)), "flag=1 delta overflows D bits"
+    assert np.all(deltas < (1 << (W - 1))), "delta overflows W-1 bits"
+    payload = codec.encode_np(np.asarray(values, dtype=np.float32), D)
+    word1 = payload | ((deltas.astype(np.uint32)) << np.uint32(1)) | np.uint32(1)
+    word0 = (deltas.astype(np.uint32)) << np.uint32(1)
+    return np.where(flags == 1, word1, word0)
+
+
+def unpack_words_jnp(words: jnp.ndarray, codec: Codec, D: int):
+    """Branch-free unpack (Fig. 3b). Returns (value, delta:uint32)."""
+    one = np.uint32(1)
+    flag = words & one
+    shift = np.uint32(W - 1 - D) * flag
+    delta = (words << shift) >> (shift + one)
+    vbits = words & (np.uint32(~np.uint32(delta_mask(D))) * flag)
+    value = codec.decode_jnp(vbits, D)
+    return value, delta
+
+
+def unpack_words_np(words: np.ndarray, codec: Codec, D: int):
+    """Numpy mirror of :func:`unpack_words_jnp` (host-side oracle)."""
+    words = words.astype(np.uint32)
+    flag = words & np.uint32(1)
+    shift = (np.uint32(W - 1 - D) * flag).astype(np.uint32)
+    delta = (words << shift) >> (shift + np.uint32(1))
+    vbits = words & (~np.uint32(delta_mask(D)) * flag)
+    value = codec.decode_np(vbits, D)
+    return value, delta, flag
+
+
+def quantize_np(values: np.ndarray, codec: Codec, D: int) -> np.ndarray:
+    """Round-trip values through the codec (what SpMV will actually see)."""
+    payload = codec.encode_np(np.asarray(values, np.float32), D)
+    return np.asarray(codec.decode_np(payload, D), dtype=np.float32)

@@ -1,0 +1,90 @@
+"""Delta encoding of column indices (paper §4.1, eqs. 2–4) + dummy insertion.
+
+All of this is host-side *format construction* (the paper builds formats on
+the CPU too); it is vectorized numpy over the CSR stream, no Python per-row
+loops on the hot path.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def lower_bandwidth(indptr: np.ndarray, indices: np.ndarray, n: int) -> int:
+    """k_left = max_i (i - j_min(i)) clipped at 0 (paper eq. 3 context)."""
+    row_nnz = np.diff(indptr)
+    rows = np.arange(n)[row_nnz > 0]
+    if rows.size == 0:
+        return 0
+    jmin = indices[indptr[:-1][row_nnz > 0]]
+    return int(max(0, np.max(rows - jmin)))
+
+
+def d0_for_rows(n: int, sigma: int, k_left: int) -> np.ndarray:
+    """Base column offset 𝔡_i, uniform within each σ-block (paper eq. 4)."""
+    block_start = (np.arange(n) // sigma) * sigma
+    return np.maximum(block_start - k_left, 0).astype(np.int64)
+
+
+def encode_rows(indptr: np.ndarray, indices: np.ndarray, d0: np.ndarray,
+                D: int):
+    """Compute per-element deltas and dummy-element placement.
+
+    Returns
+    -------
+    deltas : int64[nnz]    delta of each real element (vs predecessor / 𝔡_i)
+    needs_dummy : bool[nnz] whether a dummy word precedes this element
+    stored_len : int64[n]  stored words per row = nnz + dummies
+    """
+    n = len(indptr) - 1
+    nnz = len(indices)
+    row_nnz = np.diff(indptr)
+
+    prev = np.empty(nnz, dtype=np.int64)
+    prev[1:] = indices[:-1]
+    starts = indptr[:-1][row_nnz > 0]
+    prev[starts] = d0[np.arange(n)[row_nnz > 0]]
+
+    deltas = indices.astype(np.int64) - prev
+    if np.any(deltas < 0):
+        bad = np.nonzero(deltas < 0)[0][0]
+        raise ValueError(
+            f"negative delta at element {bad}: columns must be sorted "
+            f"ascending per row and d0 must not exceed the first column")
+
+    needs_dummy = deltas >= (1 << D)
+    row_of_elem = np.repeat(np.arange(n), row_nnz)
+    dummy_per_row = np.bincount(row_of_elem[needs_dummy], minlength=n)
+    stored_len = row_nnz.astype(np.int64) + dummy_per_row
+    return deltas, needs_dummy, stored_len
+
+
+def emit_word_stream(values: np.ndarray, deltas: np.ndarray,
+                     needs_dummy: np.ndarray):
+    """Expand (value, delta) elements into the stored word stream.
+
+    Elements with a large delta become two entries: a dummy carrying the
+    delta (flag=0) followed by the real element with delta 0 (flag=1)
+    (paper §4.3).
+
+    Returns (w_values f32, w_deltas int64, w_flags uint8, elem_out_pos int64,
+    n_words) where elem_out_pos[k] is the stream position of real element k.
+    """
+    nnz = len(deltas)
+    extra = needs_dummy.astype(np.int64)
+    # position of each real element in the expanded stream
+    elem_pos = np.arange(nnz, dtype=np.int64) + np.cumsum(extra)
+    n_words = int(nnz + extra.sum())
+
+    w_values = np.zeros(n_words, dtype=np.float32)
+    w_deltas = np.zeros(n_words, dtype=np.int64)
+    w_flags = np.zeros(n_words, dtype=np.uint8)
+
+    # real elements
+    w_values[elem_pos] = values
+    w_flags[elem_pos] = 1
+    w_deltas[elem_pos] = np.where(needs_dummy, 0, deltas)
+    # dummies sit immediately before their element
+    dummy_pos = elem_pos[needs_dummy] - 1
+    w_deltas[dummy_pos] = deltas[needs_dummy]
+    # (w_flags, w_values already 0 there)
+    return w_values, w_deltas, w_flags, elem_pos, n_words

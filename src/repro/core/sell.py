@@ -1,0 +1,140 @@
+"""SELL-C-σ baseline format (paper §3) — the comparison target for PackSELL.
+
+Mirrors the PackSELL bucket layout (DESIGN.md §2) so that kernel comparisons
+isolate the *format* difference (packed single array vs separate val/col
+arrays), exactly the contrast the paper draws against cuSPARSE SELL.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from .packsell import _bucket_slices, _ceil_to, _cumsum0, _sigma_sort
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SELLMatrix:
+    vals: tuple       # tuple of dtype[S_b, w_b, C]
+    cols: tuple       # tuple of int32[S_b, w_b, C]   (padding -> col 0, val 0)
+    outrows: tuple    # tuple of int32[S_b * C]
+    perm: jnp.ndarray
+
+    n: int
+    m: int
+    C: int
+    sigma: int
+    value_dtype: str
+    nnz: int
+    words_sell_padded: int
+    words_bucketed: int
+
+    _STATIC = ("n", "m", "C", "sigma", "value_dtype", "nnz",
+               "words_sell_padded", "words_bucketed")
+
+    @property
+    def shape(self):
+        return (self.n, self.m)
+
+    def tree_flatten(self):
+        return ((self.vals, self.cols, self.outrows, self.perm),
+                tuple(getattr(self, f) for f in self._STATIC))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    def memory_stats(self) -> dict:
+        vb = jnp.dtype(self.value_dtype).itemsize
+        n_slices = sum(int(v.shape[0]) for v in self.vals)
+        perm_bytes = self.perm.size * self.perm.dtype.itemsize
+        sell = (vb + 4) * self.words_sell_padded + 4 * (n_slices + 1) + perm_bytes
+        return dict(sell_bytes=sell, value_bytes=vb,
+                    words_sell_padded=self.words_sell_padded,
+                    words_bucketed=self.words_bucketed)
+
+    def spmv(self, x: jnp.ndarray, compute_dtype=jnp.float32) -> jnp.ndarray:
+        return sell_spmv_jnp(self, x, compute_dtype)
+
+
+def sell_spmv_jnp(mat: SELLMatrix, x: jnp.ndarray,
+                  compute_dtype=jnp.float32) -> jnp.ndarray:
+    """y = A @ x over SELL (paper §3 algorithm, vectorized over slices)."""
+    y = jnp.zeros((mat.n,), dtype=compute_dtype)
+    xc = x.astype(compute_dtype)
+    for val, col, outrow in zip(mat.vals, mat.cols, mat.outrows):
+        S, w, C = val.shape
+        t0 = jnp.zeros((S, C), dtype=compute_dtype)
+
+        def body(j, t, val=val, col=col):
+            v = val[:, j, :].astype(compute_dtype)
+            xv = jnp.take(xc, col[:, j, :], axis=0)
+            return t + v * xv
+
+        t = jax.lax.fori_loop(0, w, body, t0)
+        y = y.at[outrow].set(t.reshape(-1), mode="drop")
+    return y
+
+
+def from_csr(a: sp.csr_matrix, *, C: int = 128, sigma: int = 256,
+             value_dtype: str = "float32", bucket_strategy: str = "pow2",
+             device: bool = True) -> SELLMatrix:
+    if sigma % C != 0:
+        raise ValueError("sigma must be a multiple of C")
+    a = a.tocsr()
+    a.sort_indices()
+    n, m = a.shape
+    indptr = a.indptr.astype(np.int64)
+    indices = a.indices.astype(np.int64)
+    # keep full precision here; cast happens once into value_dtype below
+    values = a.data.astype(np.float64)
+    row_nnz = np.diff(indptr).astype(np.int64)
+    row_word_start = _cumsum0(row_nnz)
+
+    outrow, perm = _sigma_sort(row_nnz, n, sigma, C)
+    n_padded = len(outrow)
+    S = n_padded // C
+    lens_padded = np.zeros(n_padded, dtype=np.int64)
+    valid = outrow < n
+    lens_padded[valid] = row_nnz[outrow[valid]]
+    slice_width = lens_padded.reshape(S, C).max(axis=1)
+    words_sell_padded = int((slice_width * C).sum())
+
+    buckets = _bucket_slices(slice_width, bucket_strategy)
+    vals, cols, outrows = [], [], []
+    words_bucketed = 0
+    vals_g = values if a.nnz else np.zeros(1, np.float64)
+    inds_g = indices if a.nnz else np.zeros(1, np.int64)
+    for slice_ids, w_b in buckets:
+        rows = (slice_ids[:, None] * C + np.arange(C)[None, :]).reshape(-1)
+        orig = outrow[rows]
+        lens = lens_padded[rows]
+        starts = np.where(orig < n, row_word_start[np.minimum(orig, n - 1)], 0)
+        j = np.arange(w_b, dtype=np.int64)
+        idx = np.minimum(starts[:, None] + j[None, :], len(vals_g) - 1)
+        ok = j[None, :] < lens[:, None]
+        v = np.where(ok, vals_g[idx], 0.0).astype(value_dtype)
+        c = np.where(ok, inds_g[idx], 0).astype(np.int32)
+        Sb = len(slice_ids)
+        vals.append(np.ascontiguousarray(v.reshape(Sb, C, w_b).transpose(0, 2, 1)))
+        cols.append(np.ascontiguousarray(c.reshape(Sb, C, w_b).transpose(0, 2, 1)))
+        outrows.append(np.where(orig < n, orig, n).astype(np.int32))
+        words_bucketed += v.size
+
+    to_dev = jnp.asarray if device else (lambda v: v)
+    return SELLMatrix(
+        vals=tuple(to_dev(v) for v in vals),
+        cols=tuple(to_dev(c) for c in cols),
+        outrows=tuple(to_dev(o) for o in outrows),
+        perm=to_dev(perm),
+        n=n, m=m, C=C, sigma=sigma, value_dtype=value_dtype, nnz=int(a.nnz),
+        words_sell_padded=words_sell_padded, words_bucketed=int(words_bucketed),
+    )
+
+
+def from_dense(a: np.ndarray, **kw) -> SELLMatrix:
+    return from_csr(sp.csr_matrix(np.asarray(a)), **kw)

@@ -1,0 +1,66 @@
+"""CSR / COO baseline SpMV in JAX (the paper's cuCSR / cuCOO counterparts)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSRMatrix:
+    data: jnp.ndarray     # value_dtype[nnz]
+    indices: jnp.ndarray  # int32[nnz]
+    row_ids: jnp.ndarray  # int32[nnz]  (expanded indptr: segment ids)
+    n: int
+    m: int
+
+    def tree_flatten(self):
+        return ((self.data, self.indices, self.row_ids), (self.n, self.m))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def shape(self):
+        return (self.n, self.m)
+
+    def spmv(self, x: jnp.ndarray, compute_dtype=jnp.float32) -> jnp.ndarray:
+        prod = self.data.astype(compute_dtype) * \
+            jnp.take(x.astype(compute_dtype), self.indices, axis=0)
+        return jax.ops.segment_sum(prod, self.row_ids, num_segments=self.n)
+
+    def memory_stats(self) -> dict:
+        vb = self.data.dtype.itemsize
+        return dict(csr_bytes=vb * self.data.size + 4 * self.data.size
+                    + 4 * (self.n + 1))
+
+
+def csr_from_scipy(a: sp.csr_matrix, value_dtype="float32") -> CSRMatrix:
+    a = a.tocsr()
+    a.sort_indices()
+    row_ids = np.repeat(np.arange(a.shape[0]), np.diff(a.indptr))
+    return CSRMatrix(
+        data=jnp.asarray(a.data.astype(value_dtype)),
+        indices=jnp.asarray(a.indices.astype(np.int32)),
+        row_ids=jnp.asarray(row_ids.astype(np.int32)),
+        n=a.shape[0], m=a.shape[1])
+
+
+# COO shares the CSR segment-sum implementation (row ids are explicit in both
+# after expansion); kept as an alias with its own memory model.
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class COOMatrix(CSRMatrix):
+    def memory_stats(self) -> dict:
+        vb = self.data.dtype.itemsize
+        return dict(coo_bytes=(vb + 8) * self.data.size)
+
+
+def coo_from_scipy(a: sp.csr_matrix, value_dtype="float32") -> COOMatrix:
+    c = csr_from_scipy(a, value_dtype)
+    return COOMatrix(c.data, c.indices, c.row_ids, c.n, c.m)

@@ -1,0 +1,3 @@
+"""Data substrate: deterministic, resumable, sharding-aware token pipeline."""
+from .synthetic import (DataConfig, SyntheticTokenStream,  # noqa: F401
+                        markov_table, place_batch)

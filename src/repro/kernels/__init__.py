@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (SpMV).
+
+Modules: ``packsell_spmv`` (the paper's kernel, TPU-adapted), ``sell_spmv``
+(cuSELL-analogue baseline), ``ops`` (jit'd wrappers + kernel selection),
+``ref`` (pure-jnp oracles).
+"""
+from . import ops, ref  # noqa: F401

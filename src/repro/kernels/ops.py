@@ -1,0 +1,107 @@
+"""Jit'd public wrappers around the Pallas SpMV kernels.
+
+``packsell_spmv(mat, x)`` picks the band-windowed kernel automatically when
+every slice-block's column span fits the half-window budget (the paper's
+banded/RCM regime), otherwise runs the full-x-in-VMEM kernel, and finally
+applies the σ-permutation scatter (paper §4.4 line 15, done once outside the
+kernel exactly as implicit SELL-C-σ prescribes).
+
+On non-TPU backends the kernels execute with ``interpret=True`` (kernel body
+evaluated in Python/XLA on CPU) — numerically identical, used by the test
+suite to validate against the pure-jnp oracles in ``ref.py``.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packsell import PackSELLMatrix
+from repro.core.sell import SELLMatrix
+from . import packsell_spmv as _pk
+from . import sell_spmv as _sk
+
+# VMEM budget for a full x residency (fp32 elements)
+_FULL_X_LIMIT = int(os.environ.get("REPRO_FULL_X_LIMIT", 2_000_000))
+_DEF_HW = 4096  # default half-window (elements, multiple of 128)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def band_plan(mat: PackSELLMatrix, sb: int, hw: int):
+    """Host-side: per-bucket window ids (half-window units) if the band kernel
+    is feasible for every slice-block, else None.
+
+    Feasibility needs column locality *within each sb-slice block*; width
+    bucketing can interleave distant slices, so banded matrices should be
+    built with ``bucket_strategy='uniform'`` (contiguous slices) when the
+    band kernel is desired — cheap in the low-RSD regime the paper targets.
+    """
+    wins = []
+    for d0, maxcol in zip(mat.d0s, mat.maxcols):
+        d0 = np.asarray(d0)
+        mc = np.asarray(maxcol)
+        S = len(d0)
+        s_pad = -S % sb
+        if s_pad:
+            d0 = np.concatenate([d0, np.full(s_pad, d0[-1] if S else 0,
+                                             np.int32)])
+            mc = np.concatenate([mc, np.full(s_pad, mc[-1] if S else 0,
+                                             np.int32)])
+        d0b = d0.reshape(-1, sb).min(axis=1)
+        mcb = mc.reshape(-1, sb).max(axis=1)
+        win = d0b // hw
+        if np.any(mcb - win * hw >= 2 * hw):
+            return None
+        wins.append(win.astype(np.int32))
+    return wins
+
+
+def packsell_spmv(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
+                  wb: int = 32, hw: int = _DEF_HW,
+                  interpret: bool | None = None,
+                  force: str | None = None) -> jnp.ndarray:
+    """y = A @ x via the Pallas kernel. ``force`` in {None,'full','band'}."""
+    interpret = _interpret_default() if interpret is None else interpret
+    wins = None
+    if force != "full" and mat.m > 0:
+        wins = band_plan(mat, sb, hw)
+    if force == "band" and wins is None:
+        raise ValueError("band kernel infeasible for this matrix/hw")
+    use_band = wins is not None and (force == "band" or mat.m > _FULL_X_LIMIT
+                                     or force is None)
+    # default policy: prefer band when feasible (it bounds VMEM); tests
+    # exercise both paths explicitly via `force`.
+    y = jnp.zeros((mat.n,), dtype=jnp.float32)
+    for b, (pack, d0, outrow) in enumerate(
+            zip(mat.packs, mat.d0s, mat.outrows)):
+        if use_band:
+            t = _pk.packsell_spmv_band_bucket(
+                pack, d0, jnp.asarray(wins[b]), x, codec_name=mat.codec_name,
+                D=mat.D, hw=hw, sb=sb, wb=wb, interpret=interpret)
+        else:
+            if mat.m > _FULL_X_LIMIT:
+                raise ValueError(
+                    f"x too large for VMEM residency ({mat.m}) and band "
+                    f"kernel infeasible; increase hw or use jnp path")
+            t = _pk.packsell_spmv_bucket(
+                pack, d0, x, codec_name=mat.codec_name, D=mat.D, sb=sb,
+                wb=wb, interpret=interpret)
+        y = y.at[outrow].set(t.reshape(-1), mode="drop")
+    return y
+
+
+def sell_spmv(mat: SELLMatrix, x: jnp.ndarray, *, sb: int = 8, wb: int = 32,
+              interpret: bool | None = None) -> jnp.ndarray:
+    interpret = _interpret_default() if interpret is None else interpret
+    y = jnp.zeros((mat.n,), dtype=jnp.float32)
+    for val, col, outrow in zip(mat.vals, mat.cols, mat.outrows):
+        t = _sk.sell_spmv_bucket(val, col, x, sb=sb, wb=wb,
+                                 interpret=interpret)
+        y = y.at[outrow].set(t.reshape(-1), mode="drop")
+    return y

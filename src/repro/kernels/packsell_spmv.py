@@ -1,0 +1,205 @@
+"""Pallas TPU kernel for PackSELL SpMV (paper §4.4, TPU-adapted).
+
+Grid = (slice_blocks, width_blocks). Each kernel instance owns a
+``[SB, WB, C]`` VMEM tile of packed words (C = slice size = 128 lanes by
+default, SB slices stack on the sublane dimension → word tiles are
+VREG-aligned). The column cursor ``c`` and the accumulator carry across the
+width dimension in VMEM scratch — the classic reduction-grid pattern — so
+arbitrarily wide slices stream through a bounded VMEM footprint.
+
+Unpacking is the paper's branch-free sequence on int32 VREGs (VPU); the MXU
+is deliberately unused (SpMV is memory-bound; see DESIGN.md §2).
+
+Two variants:
+
+* ``full-x``  — the dense input vector is resident in VMEM (fits for
+  n ≲ 1–2M fp32 on a 16 MB VMEM part after tiling the pack stream).
+* ``band``    — for RCM/banded matrices (the paper's main regime) only an
+  ``XW``-wide window of ``x`` is prefetched per slice-block, selected via a
+  scalar-prefetched window id (HBM→VMEM streaming; the GPU kernel gets the
+  same effect implicitly through L2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import codecs as cd
+
+
+def _unpack(words: jnp.ndarray, codec: cd.Codec, D: int):
+    """Branch-free unpack on uint32 VREGs (paper Fig. 3b)."""
+    return cd.unpack_words_jnp(words, codec, D)
+
+
+def _kernel_full(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
+                 codec_name: str, D: int, nw: int, wb: int):
+    codec = cd.make_codec(codec_name)
+    wi = pl.program_id(1)
+
+    @pl.when(wi == 0)
+    def _init():
+        c_ref[...] = jnp.broadcast_to(
+            d0_ref[...][:, None], c_ref.shape).astype(jnp.int32)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c = c_ref[...]
+    acc = acc_ref[...]
+    pack = pack_ref[...]            # [SB, WB, C] uint32
+    x = x_ref[...]                  # [m_pad] f32
+    mlim = np.int32(x.shape[0] - 1)
+
+    def body(j, carry):
+        c, acc = carry
+        v, d = _unpack(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1),
+                      axis=0).reshape(c.shape)
+        return c, acc + v.astype(jnp.float32) * xv
+
+    c, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
+    c_ref[...] = c
+    acc_ref[...] = acc
+
+    @pl.when(wi == nw - 1)
+    def _fin():
+        y_ref[...] = acc
+
+
+def _kernel_band(win_ref, d0_ref, pack_ref, xlo_ref, xhi_ref, y_ref, c_ref,
+                 acc_ref, *, codec_name: str, D: int, nw: int, wb: int,
+                 hw: int):
+    """Band variant. The x window is two consecutive half-windows of ``hw``
+    elements starting at element ``win[si] * hw`` (delivered as two (1, hw)
+    blocks of the same array so the window can slide at half-window
+    granularity with plain Blocked indexing); coverage is guaranteed by the
+    wrapper when the slice-block's column span fits in ``hw`` elements."""
+    codec = cd.make_codec(codec_name)
+    si = pl.program_id(0)
+    wi = pl.program_id(1)
+
+    @pl.when(wi == 0)
+    def _init():
+        c_ref[...] = jnp.broadcast_to(
+            d0_ref[...][:, None], c_ref.shape).astype(jnp.int32)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c = c_ref[...]
+    acc = acc_ref[...]
+    pack = pack_ref[...]
+    x = jnp.concatenate([xlo_ref[...].reshape(-1),
+                         xhi_ref[...].reshape(-1)])   # [2*hw] window
+    base = win_ref[si] * np.int32(hw)
+    lim = np.int32(2 * hw - 1)
+
+    def body(j, carry):
+        c, acc = carry
+        v, d = _unpack(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        local = jnp.clip(c - base, 0, lim)
+        xv = jnp.take(x, local.reshape(-1), axis=0).reshape(c.shape)
+        return c, acc + v.astype(jnp.float32) * xv
+
+    c, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
+    c_ref[...] = c
+    acc_ref[...] = acc
+
+    @pl.when(wi == nw - 1)
+    def _fin():
+        y_ref[...] = acc
+
+
+def packsell_spmv_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
+                         *, codec_name: str, D: int, sb: int = 8,
+                         wb: int = 32, interpret: bool = True) -> jnp.ndarray:
+    """Run the full-x kernel over one width bucket. Returns y in stored-row
+    order, shape [S, C] float32. Caller applies the σ-permutation scatter."""
+    S, w, C = pack.shape
+    s_pad = -S % sb
+    w_pad = -w % wb
+    if s_pad or w_pad:
+        pack = jnp.pad(pack, ((0, s_pad), (0, w_pad), (0, 0)))
+        d0 = jnp.pad(d0, (0, s_pad))
+    Sp, wp, _ = pack.shape
+    m_pad = -x.shape[0] % 128
+    xp = jnp.pad(x.astype(jnp.float32), (0, m_pad))
+    nw = wp // wb
+    grid = (Sp // sb, nw)
+
+    kernel = functools.partial(_kernel_full, codec_name=codec_name, D=D,
+                               nw=nw, wb=wb)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb,), lambda si, wi: (si,)),
+            pl.BlockSpec((sb, wb, C), lambda si, wi: (si, wi, 0)),
+            pl.BlockSpec((xp.shape[0],), lambda si, wi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((sb, C), lambda si, wi: (si, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((sb, C), jnp.int32),
+                        pltpu.VMEM((sb, C), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        interpret=interpret,
+        name=f"packsell_spmv_{codec_name}_D{D}",
+    )(d0, pack, xp)
+    return y[:S]
+
+
+def packsell_spmv_band_bucket(pack: jnp.ndarray, d0: jnp.ndarray,
+                              win: jnp.ndarray, x: jnp.ndarray, *,
+                              codec_name: str, D: int, hw: int, sb: int = 8,
+                              wb: int = 32,
+                              interpret: bool = True) -> jnp.ndarray:
+    """Band-windowed variant: ``win[si]`` (scalar-prefetched, so the x DMA
+    can be issued ahead of the pack tiles) selects a 2×hw element window of
+    x for slice-block ``si``: elements [win*hw, win*hw + 2*hw). The wrapper
+    guarantees each slice-block's column span fits within hw, so coverage is
+    exact regardless of alignment."""
+    S, w, C = pack.shape
+    s_pad = -S % sb
+    w_pad = -w % wb
+    if s_pad or w_pad:
+        pack = jnp.pad(pack, ((0, s_pad), (0, w_pad), (0, 0)))
+        d0 = jnp.pad(d0, (0, s_pad))
+    Sp, wp, _ = pack.shape
+    # pad x to a whole number of half-windows plus one slack half-window
+    x_pad = (-x.shape[0]) % hw + hw
+    xp = jnp.pad(x.astype(jnp.float32), (0, x_pad)).reshape(-1, hw)
+    nw = wp // wb
+    grid = (Sp // sb, nw)
+
+    kernel = functools.partial(_kernel_band, codec_name=codec_name, D=D,
+                               nw=nw, wb=wb, hw=hw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb,), lambda si, wi, win: (si,)),
+            pl.BlockSpec((sb, wb, C), lambda si, wi, win: (si, wi, 0)),
+            pl.BlockSpec((1, hw), lambda si, wi, win: (win[si], 0)),
+            pl.BlockSpec((1, hw), lambda si, wi, win: (win[si] + 1, 0)),
+        ],
+        out_specs=pl.BlockSpec((sb, C), lambda si, wi, win: (si, 0)),
+        scratch_shapes=[pltpu.VMEM((sb, C), jnp.int32),
+                        pltpu.VMEM((sb, C), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        interpret=interpret,
+        name=f"packsell_spmv_band_{codec_name}_D{D}",
+    )(win, d0, pack, xp, xp)
+    return y[:S]

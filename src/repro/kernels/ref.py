@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth in kernel tests: the vectorized jnp SpMV paths in
+``repro.core`` (which are themselves validated against dense numpy in
+``tests/test_core_formats.py``), plus a direct dense oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codecs as cd
+from repro.core.packsell import PackSELLMatrix, decode_to_dense, packsell_spmv_jnp
+from repro.core.sell import SELLMatrix, sell_spmv_jnp
+
+
+def packsell_spmv_ref(mat: PackSELLMatrix, x: jnp.ndarray) -> jnp.ndarray:
+    return packsell_spmv_jnp(mat, x, compute_dtype=jnp.float32)
+
+
+def sell_spmv_ref(mat: SELLMatrix, x: jnp.ndarray) -> jnp.ndarray:
+    return sell_spmv_jnp(mat, x, compute_dtype=jnp.float32)
+
+
+def packsell_spmv_dense_oracle(mat: PackSELLMatrix, x: np.ndarray) -> np.ndarray:
+    """Slow exact oracle: decode to dense (quantized) and matvec in float64."""
+    return decode_to_dense(mat) @ np.asarray(x, dtype=np.float64)

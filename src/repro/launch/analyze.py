@@ -1,0 +1,154 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hotspot analyzer for one dry-run cell: ranks collectives and top
+byte/flop instructions by (cost × loop trips), with jax op provenance from
+HLO metadata. The instrument behind every §Perf hypothesis.
+
+    PYTHONPATH=src python -m repro.launch.analyze --arch dbrx-132b \
+        --shape train_4k [--multi-pod] [--top 25]
+"""
+import argparse            # noqa: E402
+import re                  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from repro.launch import hlo_cost as hc  # noqa: E402
+
+_OPNAME = re.compile(r'op_name="([^"]*)"')
+
+
+def _collect_instrs(hlo: str):
+    """(comp_name, opcode, result_bytes, wire_bytes, flops, op_name) rows."""
+    p = hc.parse(hlo)
+    rows = []
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and "->" in line:
+            m = hc._COMP_HDR.match(line)
+            if m:
+                cur = m.group(2)
+            continue
+        if line.startswith("}"):
+            continue
+        m = hc._INSTR.match(line)
+        if not m or cur is None:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        rhs_core = re.split(r",\s*(?:metadata=|backend_config=)", rhs)[0]
+        opcode = hc._opcode_of(rhs_core)
+        if opcode is None:
+            continue
+        head = rhs_core.split(opcode + "(", 1)[0]
+        res = hc._nbytes(hc._shapes_in(head))
+        if opcode in hc._SKIP_BYTES:      # match aggregate()'s byte rules
+            res = 0
+        wire = hc._wire_bytes(opcode, res, rhs) \
+            if opcode in hc.COLLECTIVES else 0.0
+        flops = 0.0
+        if opcode == "dot":
+            ops_ = hc._operand_names(rhs_core, opcode)
+            cd = re.search(r"lhs_contracting_dims={([0-9,]*)}", rhs)
+            lhs = p.sym_first(ops_[0]) if ops_ else None
+            k = 1
+            if cd is not None and lhs is not None and cd.group(1):
+                for idx in cd.group(1).split(","):
+                    k *= lhs[1][int(idx)]
+            nres = 1
+            shapes = hc._shapes_in(head)
+            if shapes:
+                for s in shapes[0][1]:
+                    nres *= s
+            flops = 2.0 * nres * k
+        om = _OPNAME.search(rhs)
+        rows.append((cur, opcode, res, wire, flops,
+                     om.group(1) if om else ""))
+    return p, rows
+
+
+def _trip_multipliers(p: hc._Parsed, entry: str) -> dict:
+    """comp name -> product of enclosing while trip counts."""
+    mult = defaultdict(float)
+
+    def walk(name, factor, depth=0):
+        if depth > 64:
+            return
+        mult[name] = mult[name] + factor if name in mult else factor
+        c = p.comps.get(name)
+        if c is None:
+            return
+        for callee in c.calls + c.fusion_calls:
+            walk(callee, factor, depth + 1)
+        for cnd, bdy in c.whiles:
+            t = hc._trip_count(p, cnd)
+            walk(bdy, factor * t, depth + 1)
+            walk(cnd, factor * t, depth + 1)
+
+    walk(entry, 1.0)
+    return mult
+
+
+def analyze_text(hlo: str, top: int = 20) -> None:
+    p, rows = _collect_instrs(hlo)
+    entry = p.entry or next(iter(p.comps))
+    mult = _trip_multipliers(p, entry)
+
+    agg = hc.aggregate(hlo)
+    print(f"entry={entry}")
+    print(f"flops={agg['flops']:.3e}  bytes={agg['bytes']:.3e}  "
+          f"coll_wire={agg['collective_bytes']:.3e}")
+    for k, v in sorted(agg["collectives"].items(),
+                       key=lambda kv: -kv[1]["bytes"]):
+        print(f"  {k:20s} wire={v['bytes']:.3e}  count={v['count']}")
+
+    def series(title, key):
+        print(f"\n--- top {top} by {title} (x trips) ---")
+        ranked = sorted(
+            ((key(r) * mult.get(r[0], 0.0), r) for r in rows
+             if key(r) > 0 and mult.get(r[0], 0.0) > 0),
+            key=lambda t: -t[0])[:top]
+        for total, (comp, opcode, res, wire, flops, opn) in ranked:
+            t = mult.get(comp, 0.0)
+            print(f"{total:11.3e}  x{t:<6.0f} {opcode:20s} "
+                  f"res={res:9.3e}  {opn[-90:]}")
+
+    series("collective wire bytes", lambda r: r[3])
+    series("memory bytes", lambda r: r[2])
+    series("flops", lambda r: r[4])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pod-compress", default=None, choices=("u16", "u8"))
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--hlo", default=None, help="analyze a saved HLO file")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    if args.hlo:
+        analyze_text(open(args.hlo).read(), args.top)
+        return
+
+    from repro.launch import dryrun
+    rec, compiled = dryrun.compile_cell(args.arch, args.shape,
+                                        args.multi_pod,
+                                        pod_wire=args.pod_compress,
+                                        microbatch=args.microbatch)
+    hlo = compiled.as_text()
+    if args.save_hlo:
+        with open(args.save_hlo, "w") as f:
+            f.write(hlo)
+        print(f"wrote {args.save_hlo}")
+    mem = rec.get("memory_analysis", {})
+    print(f"live bytes/device: {mem.get('live_bytes_per_device', 0)/1e9:.2f} "
+          f"GB")
+    analyze_text(hlo, args.top)
+
+
+if __name__ == "__main__":
+    main()

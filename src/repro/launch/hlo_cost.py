@@ -1,0 +1,366 @@
+"""While-aware cost model over post-partition HLO text.
+
+``compiled.cost_analysis()`` counts each while (scan) body ONCE, ignoring the
+trip count — our models are scans-of-layers with scans-of-chunks inside, so
+naive numbers are off by orders of magnitude. This module parses the
+optimized HLO, recovers counted-loop trip counts, and aggregates
+recursively:
+
+    total(comp) = own_costs(comp)
+                + Σ_child_call   total(child)          (full cost)
+                + Σ_child_fusion flops(child)          (bytes at boundary)
+                + Σ_child_while  trip(child) × total(body + cond)
+
+``compiled.as_text()`` emits the NON-verbose HLO dialect: operands are bare
+``%name`` references without shapes. We therefore build a symbol table
+(name → shape) from every instruction's result shape plus every
+computation's parameter declarations, and resolve operand shapes through it.
+
+Costs tracked per computation:
+  * dot FLOPs: 2 × |result| × Π(lhs contracting dims)   (lhs via symbols)
+  * bytes: result + operands of top-level instructions; fusion bodies count
+    FLOPs only (fused internals live in registers; the fusion instruction
+    itself contributes its boundary bytes)
+  * collective bytes/counts by opcode (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), result-shape sized
+
+This is the per-device cost of the SPMD-partitioned module: exactly the
+quantity the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\](?:\{[^}]*\})?")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_PARAM_DECL = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*"
+                         r"\[[0-9,]*\](?:\{[^}]*\})?))")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRANSCENDENTAL = ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "sine", "cosine", "logistic", "erf", "atan2")
+_SKIP_BYTES = ("parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "copy-start", "copy-done", "after-all",
+               "partition-id", "replica-id", "iota", "opt-barrier")
+
+
+def _shapes_in(text: str):
+    """All (dtype, dims) array shapes literally present in ``text``."""
+    out = []
+    for d, dims in _SHAPE_RE.findall(text):
+        if d not in _DTYPE_BYTES:
+            continue
+        sizes = [int(x) for x in dims.split(",")] if dims else []
+        out.append((d, sizes))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for d, sizes in shapes:
+        n = 1
+        for s in sizes:
+            n *= s
+        total += n * _DTYPE_BYTES[d]
+    return total
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: [0.0, 0]))
+    whiles: list = dataclasses.field(default_factory=list)  # (cond, body)
+    calls: list = dataclasses.field(default_factory=list)        # full cost
+    fusion_calls: list = dataclasses.field(default_factory=list)  # flops only
+    consts: dict = dataclasses.field(default_factory=dict)   # name -> int
+    compare_ops: list = dataclasses.field(default_factory=list)
+
+
+class _Parsed:
+    def __init__(self):
+        self.comps: dict[str, CompCost] = {}
+        self.symbols: dict[str, list] = {}   # name -> [(dtype, dims), ...]
+        self.entry: str | None = None
+
+    def sym_bytes(self, name: str) -> int:
+        return _nbytes(self.symbols.get(name, []))
+
+    def sym_first(self, name: str):
+        shapes = self.symbols.get(name)
+        return shapes[0] if shapes else None
+
+
+def _opcode_of(rhs: str) -> str | None:
+    """The opcode is the first identifier followed by '(' after the result
+    shape(s). Result shapes never contain '(' except tuple results, which
+    are wrapped in parens at the very start."""
+    pos = 0
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    pos = i + 1
+                    break
+    m = re.search(r"([a-z][a-z0-9\-]*)\(", rhs[pos:])
+    return m.group(1) if m else None
+
+
+def _operand_names(rhs: str, opcode: str) -> list[str]:
+    """%name references inside the opcode's argument parens."""
+    try:
+        inner = rhs.split(opcode + "(", 1)[1]
+    except IndexError:
+        return []
+    depth, end = 1, len(inner)
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND.findall(inner[:end])
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LEGACY_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(rhs: str) -> int:
+    m = _GROUPS_RE.search(rhs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LEGACY_RE.search(rhs)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # unknown: assume the smallest non-trivial group
+
+
+def _wire_bytes(opcode: str, result_bytes: int, rhs: str) -> float:
+    """Per-device ICI wire traffic of one collective, ring-algorithm model.
+
+    result_bytes is the (per-device) result shape size. With group size N:
+      all-gather      result is the gathered (global) tensor -> (N-1)/N x R
+      reduce-scatter  result is one shard; input = N x R     -> (N-1)   x R
+      all-reduce      ring RS + AG on the full payload       -> 2(N-1)/N x R
+      all-to-all      each device sends (N-1)/N of its data  -> (N-1)/N x R
+      collective-permute  point-to-point                     -> 1 x R
+    """
+    n = _group_size(rhs)
+    if opcode == "all-gather":
+        return result_bytes * (n - 1) / n
+    if opcode == "reduce-scatter":
+        return result_bytes * (n - 1)
+    if opcode == "all-reduce":
+        return result_bytes * 2 * (n - 1) / n
+    if opcode == "all-to-all":
+        return result_bytes * (n - 1) / n
+    return float(result_bytes)
+
+
+def parse(hlo: str) -> _Parsed:
+    p = _Parsed()
+    cur: CompCost | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and "->" in line:
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                name = hdr.group(2)
+                cur = CompCost()
+                p.comps[name] = cur
+                if hdr.group(1):
+                    p.entry = name
+                # parameter declarations carry shapes in both dialects
+                for pname, pshape in _PARAM_DECL.findall(hdr.group(3)):
+                    p.symbols[pname] = _shapes_in(pshape)
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # strip metadata/backend_config tails (they can contain shape-like
+        # or %name-like text)
+        rhs_core = re.split(r",\s*(?:metadata=|backend_config=|"
+                            r"frontend_attributes=)", rhs)[0]
+
+        opcode = _opcode_of(rhs_core)
+        if opcode is None:
+            continue
+
+        # result shape(s): everything before the opcode token
+        head = rhs_core.split(opcode + "(", 1)[0]
+        res_shapes = _shapes_in(head)
+        p.symbols[name] = res_shapes
+
+        cm = re.match(r"^s32\[\]\s+constant\((\d+)\)", rhs_core)
+        if cm:
+            cur.consts[name] = int(cm.group(1))
+
+        if opcode == "while":
+            cnd = re.search(r"condition=%?([\w.\-]+)", rhs)
+            bdy = re.search(r"body=%?([\w.\-]+)", rhs)
+            if cnd and bdy:
+                cur.whiles.append((cnd.group(1), bdy.group(1)))
+            continue
+
+        if opcode == "compare":
+            ops = _operand_names(rhs_core, opcode)
+            cur.compare_ops.append(ops)
+
+        callees = [c.group(1) for c in re.finditer(
+            r"(?:calls|to_apply)=%?([\w.\-]+)", rhs)]
+        if opcode == "conditional":
+            for cm3 in re.finditer(
+                    r"(?:true_computation|false_computation|"
+                    r"branch_computations)={?%?([\w.,%\- ]+?)}", rhs):
+                for nm in re.split(r"[,\s]+", cm3.group(1)):
+                    nm = nm.strip().lstrip("%")
+                    if nm:
+                        callees.append(nm)
+        if opcode == "fusion":
+            cur.fusion_calls.extend(callees)
+        elif callees and opcode in ("call", "conditional", "custom-call",
+                                    "async-start"):
+            cur.calls.extend(callees)
+        # reduce/scatter/map/sort to_apply bodies are scalar lambdas; their
+        # cost is negligible and already reflected at the boundary.
+
+        if opcode in COLLECTIVES:
+            nbytes = _nbytes(res_shapes)
+            wire = _wire_bytes(opcode, nbytes, rhs)
+            cur.coll[opcode][0] += wire
+            cur.coll[opcode][1] += 1
+            cur.bytes += 2 * nbytes   # read shard + write result
+            continue
+
+        if opcode == "dot":
+            n_res = 1
+            if res_shapes:
+                for s in res_shapes[0][1]:
+                    n_res *= s
+            ops = _operand_names(rhs_core, opcode)
+            cdims = re.search(r"lhs_contracting_dims={([0-9,]*)}", rhs)
+            k = 1
+            lhs = p.sym_first(ops[0]) if ops else None
+            if cdims is not None and lhs is not None and cdims.group(1):
+                for idx in cdims.group(1).split(","):
+                    k *= lhs[1][int(idx)]
+            cur.flops += 2.0 * n_res * k
+            cur.bytes += _nbytes(res_shapes) + sum(p.sym_bytes(o)
+                                                   for o in ops)
+            continue
+
+        if opcode in _SKIP_BYTES:
+            continue
+
+        ops = _operand_names(rhs_core, opcode)
+        cur.bytes += _nbytes(res_shapes) + sum(p.sym_bytes(o) for o in ops)
+        if opcode in _TRANSCENDENTAL and res_shapes:
+            n = 1
+            for s in res_shapes[0][1]:
+                n *= s
+            cur.transcendentals += n
+    return p
+
+
+def _trip_count(p: _Parsed, cond_name: str) -> int:
+    """Trip count from the condition computation: the constant operand of
+    its compare instruction (fallback: max s32[] constant in the comp)."""
+    c = p.comps.get(cond_name)
+    if c is None:
+        return 1
+    for ops in c.compare_ops:
+        for o in ops:
+            if o in c.consts:
+                return max(c.consts[o], 1)
+    if c.consts:
+        return max(max(c.consts.values()), 1)
+    return 1
+
+
+def aggregate(hlo: str, entry: str | None = None) -> dict:
+    p = parse(hlo)
+    if not p.comps:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "collective_bytes": 0.0, "transcendentals": 0.0}
+    entry = entry or p.entry or next(iter(p.comps))
+
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        c = p.comps.get(name)
+        if c is None or depth > 64:
+            return (0.0, 0.0, 0.0, {})
+        fl, by, tr = c.flops, c.bytes, c.transcendentals
+        coll = {k: [v[0], v[1]] for k, v in c.coll.items()}
+        memo[name] = (fl, by, tr, coll)  # provisional (guards cycles)
+        for callee in c.calls:
+            f2, b2, t2, c2 = total(callee, depth + 1)
+            fl += f2
+            by += b2
+            tr += t2
+            for k, v in c2.items():
+                coll.setdefault(k, [0.0, 0])
+                coll[k][0] += v[0]
+                coll[k][1] += v[1]
+        for callee in c.fusion_calls:   # flops only: bytes at boundary
+            f2, _, t2, c2 = total(callee, depth + 1)
+            fl += f2
+            tr += t2
+            for k, v in c2.items():
+                coll.setdefault(k, [0.0, 0])
+                coll[k][0] += v[0]
+                coll[k][1] += v[1]
+        for cnd, bdy in c.whiles:
+            trip = _trip_count(p, cnd)
+            f2, b2, t2, c2 = total(bdy, depth + 1)
+            fc, bc, tc, cc = total(cnd, depth + 1)
+            fl += trip * (f2 + fc)
+            by += trip * (b2 + bc)
+            tr += trip * (t2 + tc)
+            for k, v in list(c2.items()) + list(cc.items()):
+                coll.setdefault(k, [0.0, 0])
+                coll[k][0] += trip * v[0]
+                coll[k][1] += trip * v[1]
+        memo[name] = (fl, by, tr, coll)
+        return memo[name]
+
+    fl, by, tr, coll = total(entry)
+    coll_total = sum(v[0] for v in coll.values())
+    return {
+        "flops": fl,
+        "bytes": by,
+        "transcendentals": tr,
+        "collectives": {k: {"bytes": v[0], "count": v[1]}
+                        for k, v in coll.items()},
+        "collective_bytes": coll_total,
+    }

@@ -1,0 +1,61 @@
+"""Training launcher: ``--arch <id>`` selects an assigned architecture (or
+its reduced smoke variant), builds the mesh from the local topology, and
+runs the fault-tolerant Trainer.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduce \
+        --steps 20 --seq-len 128 --global-batch 4
+
+On a real TPU fleet the same entry point runs under multi-host jax.distributed
+initialization; the mesh axes and logical specs are identical (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.optim import OptConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--reduce", action="store_true",
+                    help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="gradient-accumulation microbatch size")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-compression", type=int, default=None)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduce:
+        cfg = configs.reduce(cfg)
+    print(f"[launch] {cfg.name} ({cfg.family}) "
+          f"~{cfg.param_count() / 1e6:.1f}M params on "
+          f"{jax.device_count()} device(s)")
+    tcfg = TrainerConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, log_every=max(args.steps // 10, 1),
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        microbatch=args.microbatch,
+        data_axis=args.data_axis, model_axis=args.model_axis,
+        grad_compression=args.grad_compression)
+    opt = OptConfig(lr_peak=args.lr, warmup=max(args.steps // 10, 1),
+                    total_steps=args.steps)
+    trainer = Trainer(cfg, opt, tcfg)
+    trainer.run()
+    print(f"[launch] done; checkpoints: {trainer.ckpt.steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Pure-JAX model stack for the assigned architectures."""
+from . import attention, config, io_spec, layers, moe, ssm, transformer  # noqa: F401
+from .config import SHAPES, ModelConfig, ShapeConfig, cell_applicable  # noqa: F401

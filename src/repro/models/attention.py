@@ -1,0 +1,221 @@
+"""GQA attention with chunked (flash-style) softmax and KV caching.
+
+``flash_attention`` never materializes the full S×S score matrix: queries are
+processed in chunks with an online-softmax running (max, sum, acc) over KV
+chunks — the standard memory-bounded formulation, required for the 32k
+prefill cells. A Pallas-fused variant is a §Perf hillclimb candidate
+(benchmarked separately); this jnp version is the portable baseline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import constrain, current_mesh
+
+from . import layers as L
+
+NEG_INF = -1e30
+
+
+def _score_shard_dim(KV: int, G: int, q_chunk: int) -> str | None:
+    """Which score dim the 'model' axis shards: KV heads, GQA groups, or the
+    query chunk. head_dim is NEVER sharded (a sharded contraction in the
+    score einsum makes GSPMD emit an all-reduce per KV chunk — measured as
+    the dominant collective of the qwen2-0.5b prefill cell, §Perf A1)."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    M = mesh.shape["model"]
+    if KV % M == 0:
+        return "kv"
+    if G % M == 0:
+        return "g"
+    if q_chunk % M == 0:
+        return "qc"
+    return None
+
+
+def _spec6(dim: str | None, which: str):
+    """P-spec builders for the chunked tensors (dims documented inline)."""
+    dp = ("pod", "data")
+    m = "model"
+    if which == "qp":      # [B, nq, qc, KV, G, hd]
+        return P(dp, None, m if dim == "qc" else None,
+                 m if dim == "kv" else None, m if dim == "g" else None, None)
+    if which == "kvp":     # [nk, B, kc, KV, hd]
+        return P(None, dp, None, m if dim == "kv" else None, None)
+    if which == "ms":      # [B, qc, G, KV]
+        return P(dp, m if dim == "qc" else None,
+                 m if dim == "g" else None, m if dim == "kv" else None)
+    if which == "acc":     # [B, qc, G, KV, hd]
+        return P(dp, m if dim == "qc" else None,
+                 m if dim == "g" else None, m if dim == "kv" else None, None)
+    raise ValueError(which)
+
+
+def init(key, cfg, dtype):
+    d = cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wq, sq = L.dense_init(k1, d, H * hd, dtype, bias=cfg.qkv_bias)
+    wk, sk = L.dense_init(k2, d, KV * hd, dtype, bias=cfg.qkv_bias)
+    wv, sv = L.dense_init(k3, d, KV * hd, dtype, bias=cfg.qkv_bias)
+    wo, so = L.dense_init(k4, H * hd, d, dtype, in_axis="model",
+                          out_axis=None)
+    return ({"wq": wq, "wk": wk, "wv": wv, "wo": wo},
+            {"wq": sq, "wk": sk, "wv": sv, "wo": so})
+
+
+def _qkv(p, cfg, x, positions, dtype):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense_apply(p["wq"], x, dtype).reshape(B, S, H, hd)
+    k = L.dense_apply(p["wk"], x, dtype).reshape(B, S, KV, hd)
+    v = L.dense_apply(p["wv"], x, dtype).reshape(B, S, KV, hd)
+    q, k = L.rope(q, k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+                    q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax attention.
+
+    q: [B, Sq, H, hd]; k,v: [B, Sk, KV, hd] (GQA: H % KV == 0).
+    q_offset: absolute position of q[0] (causal masking with a cache).
+    kv_len: optional [B] valid KV lengths (decode with ragged cache).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = np.float32(1.0 / np.sqrt(hd))
+    # bound the q unroll (§Perf A2) to <=16 chunks on long sequences
+    q_chunk = min(max(q_chunk, -(-Sq // 16)), Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = (Sq + q_chunk - 1) // q_chunk
+    nk = (Sk + kv_chunk - 1) // kv_chunk
+    # pad to whole chunks
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_chunk - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_chunk - Sk), (0, 0), (0, 0)))
+    # [B, nq, qc, KV, G, hd]
+    qp = qp.reshape(B, nq, q_chunk, KV, G, hd)
+    kp = kp.reshape(B, nk, kv_chunk, KV, hd)
+    vp = vp.reshape(B, nk, kv_chunk, KV, hd)
+
+    kp_t = kp.transpose(1, 0, 2, 3, 4)        # [nk, B, kc, KV, hd]
+    vp_t = vp.transpose(1, 0, 2, 3, 4)
+
+    # explicit score-compute sharding (§Perf A1): pick the dim the model
+    # axis shards; hd stays replicated so the score contraction is local.
+    # Decode (Sq == 1) keeps GSPMD's cache-driven layout — constraining
+    # here replicated the KV cache over 'model' (measured regression).
+    sdim = _score_shard_dim(KV, G, q_chunk) if Sq > 1 else None
+    if sdim is not None:
+        qp = constrain(qp, _spec6(sdim, "qp"))
+        kp_t = constrain(kp_t, _spec6(sdim, "kvp"))
+        vp_t = constrain(vp_t, _spec6(sdim, "kvp"))
+
+    def q_step(qi):
+        qc = qp[:, qi]                        # [B, qc, KV, G, hd]
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, s, acc = carry
+            kc, vc, ki = inp                  # [B, kc, KV, hd]
+            logits = jnp.einsum("bqkgh,bckh->bqgkc", qc.astype(jnp.float32),
+                                kc.astype(jnp.float32)) * scale
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            valid = jnp.broadcast_to(k_pos[None, :] < Sk,
+                                     (q_chunk, kv_chunk))
+            if causal:
+                valid = valid & (k_pos[None, :] <= q_pos[:, None])
+            logits = jnp.where(valid[None, :, None, None, :],
+                               logits, NEG_INF)
+            if kv_len is not None:
+                lv = k_pos[None, :] < kv_len[:, None]   # [B, kc]
+                logits = jnp.where(lv[:, None, None, None, :], logits,
+                                   NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            s_new = s * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqgkc,bckh->bqgkh", p, vc.astype(jnp.float32))
+            return (m_new, s_new, acc_new), None
+
+        # checkpoint: backward recomputes logits/p per kv chunk instead of
+        # saving [B, qc, G, KV, kc] fp32 residuals for every chunk pair
+        kv_step_ck = jax.checkpoint(kv_step)
+        m0 = jnp.full((B, q_chunk, G, KV), NEG_INF, jnp.float32)
+        s0 = jnp.zeros((B, q_chunk, G, KV), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, G, KV, hd), jnp.float32)
+        if sdim is not None:
+            m0 = constrain(m0, _spec6(sdim, "ms"))
+            s0 = constrain(s0, _spec6(sdim, "ms"))
+            a0 = constrain(a0, _spec6(sdim, "acc"))
+        # causal chunk skip (§Perf A2): kv chunks strictly above the
+        # diagonal are fully masked — don't compute them. Static per-q-chunk
+        # trip counts (the q loop is a Python unroll over nq).
+        nk_i = min(nk, (qi * q_chunk + q_chunk - 1) // kv_chunk + 1) \
+            if causal else nk
+        (m, s, acc), _ = jax.lax.scan(
+            kv_step_ck, (m0, s0, a0),
+            (kp_t[:nk_i], vp_t[:nk_i], jnp.arange(nk_i)))
+        out = acc / jnp.maximum(s[..., None], 1e-30)
+        return out                             # [B, qc, G, KV, hd]
+
+    outs = jnp.stack([q_step(qi) for qi in range(nq)], axis=0)
+    # outs: [nq, B, qc, G, KV, hd] -> [B, Sq, H, hd]
+    out = outs.transpose(1, 0, 2, 4, 3, 5).reshape(B, nq * q_chunk, KV * G,
+                                                   hd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def apply_full(p, cfg, x, positions, dtype, *, causal=True):
+    """Training / prefill path (no cache in, optionally cache out)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions, dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    y = L.dense_apply(p["wo"], out.reshape(B, S, -1), dtype)
+    return y, (k, v)
+
+
+def apply_decode(p, cfg, x, cache_k, cache_v, cache_len, dtype):
+    """Single-token decode. x: [B, 1, d]; cache: [B, Smax, KV, hd]."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = cache_len[:, None]            # [B, 1]
+    q, k, v = _qkv(p, cfg, x, positions, dtype)
+    # write the new K/V at cache_len (per-batch dynamic index)
+    idx = cache_len[:, None]                  # [B,1]
+    oh = jax.nn.one_hot(idx, cache_k.shape[1], dtype=cache_k.dtype)  # [B,1,S]
+    cache_k = cache_k + jnp.einsum("bos,bokh->bskh", oh, k.astype(cache_k.dtype))
+    cache_v = cache_v + jnp.einsum("bos,bokh->bskh", oh, v.astype(cache_v.dtype))
+    out = flash_attention(q, cache_k.astype(dtype), cache_v.astype(dtype),
+                          causal=False, kv_len=cache_len + 1,
+                          q_chunk=1, kv_chunk=4096)
+    y = L.dense_apply(p["wo"], out.reshape(B, 1, -1), dtype)
+    return y, cache_k, cache_v
+
+
+def cross_kv(p, cfg, enc_out, dtype):
+    """Project encoder memory to K/V once (reused by every decode step)."""
+    B, S, _ = enc_out.shape
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    k = L.dense_apply(p["wk"], enc_out, dtype).reshape(B, S, KV, hd)
+    v = L.dense_apply(p["wv"], enc_out, dtype).reshape(B, S, KV, hd)
+    return k, v
+
+
+def apply_cross(p, cfg, x, enc_k, enc_v, dtype):
+    """Cross-attention over fixed encoder memory (enc-dec decode/train)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = L.dense_apply(p["wq"], x, dtype).reshape(B, S, H, hd)
+    out = flash_attention(q, enc_k, enc_v, causal=False)
+    return L.dense_apply(p["wo"], out.reshape(B, S, -1), dtype)

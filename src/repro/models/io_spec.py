@@ -1,0 +1,64 @@
+"""Input ShapeDtypeStruct builders for every (arch × shape) dry-run cell.
+
+Shapes are *global* (the jit in_shardings distribute them over the mesh).
+Modality frontends are stubs per the assignment: ``patches`` / ``frames``
+are precomputed embeddings with hidden size 1024.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from .config import ModelConfig, ShapeConfig
+
+STUB_DIM = 1024
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def frontend_lens(cfg: ModelConfig, seq_len: int) -> tuple[int, int]:
+    """(frontend tokens, text tokens) for a given total sequence length."""
+    if cfg.frontend == "vision_stub":
+        p = min(cfg.frontend_len, seq_len // 2)
+        return p, seq_len - p
+    if cfg.frontend == "audio_stub":
+        return seq_len // 4, seq_len          # encoder frames, decoder tokens
+    return 0, seq_len
+
+
+def train_batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    fl, tl = frontend_lens(cfg, S)
+    spec = {
+        "tokens": _sds((B, tl), jnp.int32),
+        "labels": _sds((B, tl), jnp.int32),
+        "mask": _sds((B, tl), jnp.float32),
+    }
+    if cfg.frontend == "vision_stub":
+        spec["patches"] = _sds((B, fl, STUB_DIM), jnp.bfloat16)
+    if cfg.frontend == "audio_stub":
+        spec["frames"] = _sds((B, fl, STUB_DIM), jnp.bfloat16)
+    return spec
+
+
+def prefill_batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    fl, tl = frontend_lens(cfg, S)
+    spec = {"tokens": _sds((B, tl), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        spec["patches"] = _sds((B, fl, STUB_DIM), jnp.bfloat16)
+    if cfg.frontend == "audio_stub":
+        spec["frames"] = _sds((B, fl, STUB_DIM), jnp.bfloat16)
+    return spec
+
+
+def decode_spec(cfg: ModelConfig, shape: ShapeConfig) -> tuple[dict, dict]:
+    """(token spec, cache spec tree) for a serve_step with a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S // 4 if cfg.frontend == "audio_stub" else 0
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, S, enc_len=enc_len))
+    return {"tokens": _sds((B, 1), jnp.int32)}, cache

@@ -1,0 +1,88 @@
+"""Shared neural layers (pure JAX, functional): norms, RoPE, MLP, embeddings.
+
+Every ``init_*`` returns ``(params, specs)`` — a param pytree and a parallel
+tree of ``jax.sharding.PartitionSpec`` encoding the TP/DP layout (DESIGN.md
+§5). ``specs`` use logical axis names resolved by ``repro.parallel``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, in_axis=None,
+               out_axis="model", bias: bool = False):
+    scale = 1.0 / np.sqrt(d_in)
+    w = jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)
+    p = {"w": w}
+    s = {"w": P(in_axis, out_axis)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = P(out_axis)
+    return p, s
+
+
+def dense_apply(p, x, dtype):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype):
+    return {"g": jnp.ones((d,), dtype)}, {"g": P(None)}
+
+
+def rmsnorm_apply(p, x, eps: float, dtype):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(dtype)
+
+
+def swiglu_init(key, d: int, ff: int, dtype):
+    k1, k2, k3 = _split(key, 3)
+    wi, si = dense_init(k1, d, ff, dtype, out_axis="model")
+    wg, sg = dense_init(k2, d, ff, dtype, out_axis="model")
+    wo, so = dense_init(k3, ff, d, dtype, in_axis="model", out_axis=None)
+    return ({"wi": wi, "wg": wg, "wo": wo}, {"wi": si, "wg": sg, "wo": so})
+
+
+def swiglu_apply(p, x, dtype):
+    h = jax.nn.silu(dense_apply(p["wg"], x, dtype)) * \
+        dense_apply(p["wi"], x, dtype)
+    return dense_apply(p["wo"], h, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return {"w": w}, {"w": P(None, "model")}
+
+
+def embed_apply(p, tokens, dtype):
+    return jnp.take(p["w"].astype(dtype), tokens, axis=0)
+
+
+def rope(q, k, positions, theta: float):
+    """Rotary embeddings. q,k: [..., S, H, hd]; positions: [..., S]."""
+    hd = q.shape[-1]
+    half = hd // 2
+    freqs = (1.0 / (theta ** (np.arange(0, half) * 2.0 / hd))).astype(
+        np.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+        return jnp.concatenate([xf1 * cos - xf2 * sin,
+                                xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+    return rot(q), rot(k)

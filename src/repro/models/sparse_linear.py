@@ -1,0 +1,75 @@
+"""PackSELL sparse-weight linear layers (pruned-weight serving).
+
+This is the paper's kernel in the LM serving path (DESIGN.md §4.1): decode
+is memory-bound matvec — exactly the regime the paper targets — so a
+magnitude-pruned projection stored in PackSELL cuts the bytes per decode
+step by (1 − density) × compression_ratio, with the value codec (fp16 /
+bf16 / E8MY) choosing the accuracy/bandwidth point.
+
+``PackSELLLinear`` is built offline from a dense weight; at decode time
+``apply`` runs SpMV per batch element (the jnp path vmaps over the batch;
+the Pallas kernel path serves the single-request case).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import packsell as pk
+
+
+def prune_magnitude(w: np.ndarray, density: float) -> np.ndarray:
+    """Keep the top-``density`` fraction of |w| entries (global threshold).
+    Returns the pruned dense weight (zeros elsewhere)."""
+    if not (0.0 < density <= 1.0):
+        raise ValueError(density)
+    flat = np.abs(w).ravel()
+    k = max(int(round(density * flat.size)), 1)
+    if k >= flat.size:
+        return w.copy()
+    thresh = np.partition(flat, flat.size - k)[flat.size - k]
+    out = np.where(np.abs(w) >= thresh, w, 0.0)
+    return out
+
+
+@dataclasses.dataclass
+class PackSELLLinear:
+    """y = W x with W pruned + stored as PackSELL ([out, in] row-major)."""
+
+    mat: pk.PackSELLMatrix
+    density: float
+    dense_bytes: int
+
+    @classmethod
+    def from_dense(cls, w: np.ndarray, *, density: float = 0.3,
+                   codec: str = "bf16", D: int = 15, C: int = 128,
+                   sigma: int = 256) -> "PackSELLLinear":
+        """``w``: [in, out] dense kernel (column-major convention used by
+        ``layers.dense_init``); stored transposed so rows = outputs."""
+        wp = prune_magnitude(np.asarray(w, np.float32), density)
+        csr = sp.csr_matrix(wp.T)     # [out, in]
+        mat = pk.from_csr(csr, C=C, sigma=sigma, D=D, codec=codec)
+        return cls(mat=mat, density=density,
+                   dense_bytes=w.size * np.dtype(np.float32).itemsize)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: [in] or [..., in] → [..., out]. Batched inputs go through the
+        SpMM path: one pass over the packed words for the whole batch."""
+        if x.ndim == 1:
+            return pk.packsell_spmv_jnp(self.mat, x)
+        lead = x.shape[:-1]
+        flat = x.reshape(-1, x.shape[-1])
+        y = pk.packsell_spmm_jnp(self.mat, flat.T).T
+        return y.reshape(*lead, -1)
+
+    def memory_ratio(self) -> float:
+        """Stored bytes vs the dense fp32 weight."""
+        return self.mat.memory_stats()["packsell_bytes"] / self.dense_bytes
+
+    def decode_bytes_per_token(self) -> int:
+        """Bytes streamed per matvec (the decode-step cost)."""
+        return self.mat.memory_stats()["packsell_bytes"]

@@ -1,0 +1,683 @@
+"""Model assembly for all families: init, train forward, prefill, decode.
+
+Layers are stacked ([L, ...] leading dim) and applied with ``lax.scan`` +
+``jax.checkpoint`` (keeps the HLO compact — essential for 80 dry-run compiles
+— and implements the activation-recompute policy). The LM head loss is
+computed in sequence chunks so the [B, S, vocab] logits tensor never
+materializes (vocab up to 256k).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import constrain, constrain_batch
+from . import attention as attn
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig
+
+PyTree = Any
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (+ spec trees)
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, dtype):
+    """One decoder block of the arch family (pre-norm residual)."""
+    keys = jax.random.split(key, 8)
+    p, s = {}, {}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        p["ln1"], s["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["attn"], s["attn"] = attn.init(keys[0], cfg, dtype)
+        p["ln2"], s["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+        if fam == "moe":
+            p["moe"], s["moe"] = moe_mod.init(keys[1], cfg, dtype)
+        else:
+            p["mlp"], s["mlp"] = L.swiglu_init(keys[1], cfg.d_model,
+                                               cfg.d_ff, dtype)
+        if fam == "encdec":
+            p["ln3"], s["ln3"] = L.rmsnorm_init(cfg.d_model, dtype)
+            p["xattn"], s["xattn"] = attn.init(keys[2], cfg, dtype)
+    elif fam in ("ssm", "hybrid"):
+        p["ln1"], s["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["ssm"], s["ssm"] = ssm_mod.init(keys[0], cfg, dtype)
+    else:
+        raise ValueError(fam)
+    return p, s
+
+
+def _enc_block_init(key, cfg: ModelConfig, dtype):
+    keys = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["ln1"], s["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["attn"], s["attn"] = attn.init(keys[0], cfg, dtype)
+    p["ln2"], s["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["mlp"], s["mlp"] = L.swiglu_init(keys[1], cfg.d_model, cfg.d_ff, dtype)
+    return p, s
+
+
+def _stack_init(block_init, key, n: int, cfg, dtype):
+    """Init n blocks with a vmapped single-block init, stacked on a new
+    leading layer dim; specs gain a leading None."""
+    keys = jax.random.split(key, n)
+    holder = {}
+
+    def params_only(k):
+        p, s = block_init(k, cfg, dtype)
+        holder["s"] = s           # specs are static python data
+        return p
+
+    stacked = jax.vmap(params_only)(keys)
+    specs = jax.tree.map(lambda sp: P(*(None,) + tuple(sp)), holder["s"],
+                         is_leaf=lambda x: isinstance(x, P))
+    return stacked, specs
+
+
+def init_params(cfg: ModelConfig, key) -> tuple[PyTree, PyTree]:
+    dtype = _pdt(cfg)
+    k = jax.random.split(key, 10)
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.embed_init(k[0], cfg.vocab_padded,
+                                          cfg.d_model, dtype)
+    p["blocks"], s["blocks"] = _stack_init(_block_init, k[1], cfg.n_layers,
+                                           cfg, dtype)
+    p["lnf"], s["lnf"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["head"], s["head"] = L.dense_init(k[2], cfg.d_model,
+                                            cfg.vocab_padded, dtype,
+                                            out_axis="model")
+    if cfg.family == "hybrid":
+        # one shared attention+MLP block reused every cfg.attn_every layers
+        sp, ss_ = {}, {}
+        sp["ln1"], ss_["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+        sp["attn"], ss_["attn"] = attn.init(k[3], cfg, dtype)
+        sp["ln2"], ss_["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+        sp["mlp"], ss_["mlp"] = L.swiglu_init(k[4], cfg.d_model, cfg.d_ff,
+                                              dtype)
+        p["shared"], s["shared"] = sp, ss_
+    if cfg.family == "encdec":
+        p["enc_blocks"], s["enc_blocks"] = _stack_init(
+            _enc_block_init, k[5], cfg.enc_layers, cfg, dtype)
+        p["enc_lnf"], s["enc_lnf"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.frontend == "vision_stub":
+        p["projector"], s["projector"] = L.dense_init(
+            k[6], 1024, cfg.d_model, dtype, out_axis=None)
+    if cfg.frontend == "audio_stub":
+        p["projector"], s["projector"] = L.dense_init(
+            k[7], 1024, cfg.d_model, dtype, out_axis=None)
+    return p, s
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct tree, spec tree) — no allocation (dry-run path).
+
+    Specs are static python data constructed eagerly during tracing, so a
+    single eval_shape of init yields both."""
+    holder = {}
+
+    def run(key):
+        p, s = init_params(cfg, key)
+        holder["s"] = s
+        return p
+
+    shapes = jax.eval_shape(run, jax.random.PRNGKey(0))
+    return shapes, holder["s"]
+
+
+def param_specs(cfg: ModelConfig) -> PyTree:
+    return abstract_params(cfg)[1]
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg: ModelConfig, bp, x, positions, dtype, layer_idx=None,
+                 shared=None):
+    fam = cfg.family
+    aux = {}
+    _sp = P(("pod", "data"), "model", None)   # sequence-parallel residual
+    if fam in ("dense", "moe", "vlm"):
+        h, _ = attn.apply_full(bp["attn"], cfg,
+                               L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps,
+                                               dtype),
+                               positions, dtype, causal=True)
+        # §Perf C2: pin each branch output to the SP layout so the backward
+        # of the row-parallel projection reduce-scatters instead of
+        # all-reducing the full [B, S, d] activation gradient
+        x = x + constrain(h, _sp)
+        z = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps, dtype)
+        if fam == "moe":
+            m, aux = moe_mod.apply(bp["moe"], cfg, z, dtype)
+        else:
+            m = L.swiglu_apply(bp["mlp"], z, dtype)
+        x = x + constrain(m, _sp)
+    elif fam in ("ssm", "hybrid"):
+        h, _ = ssm_mod.apply_full(
+            bp["ssm"], cfg, L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps,
+                                            dtype), dtype)
+        x = x + h
+        if fam == "hybrid" and shared is not None and layer_idx is not None:
+            def attn_branch(x):
+                h, _ = attn.apply_full(
+                    shared["attn"], cfg,
+                    L.rmsnorm_apply(shared["ln1"], x, cfg.norm_eps, dtype),
+                    positions, dtype, causal=True)
+                x = x + h
+                m = L.swiglu_apply(
+                    shared["mlp"],
+                    L.rmsnorm_apply(shared["ln2"], x, cfg.norm_eps, dtype),
+                    dtype)
+                return x + m
+
+            use = (layer_idx % cfg.attn_every) == (cfg.attn_every - 1)
+            x = jax.lax.cond(use, attn_branch, lambda x: x, x)
+    # sequence-parallel residual stream: the scan carry (saved for remat) is
+    # sharded over the model axis on the sequence dim; GSPMD all-gathers at
+    # the next block's projections and reduce-scatters after (Megatron SP)
+    x = constrain(x, P(("pod", "data"), "model", None))
+    return x, aux
+
+
+def _cast_block(bp, dtype, spec_tree=None):
+    """Per-layer master->compute cast (§Perf B4a): keeps ONE layer's
+    compute params live inside the scan instead of materializing the cast
+    of the whole stack up front (measured 0.79 GB/layer on dbrx-132b).
+
+    ``spec_tree`` (§Perf C3) = the stacked-block specs; each leaf's
+    per-layer spec (leading layer dim stripped) is re-asserted so the cast
+    is the ZeRO all-gather point and its transpose reduce-scatters the
+    gradient — without it GSPMD emits full tuple all-reduces of the block
+    grads over every DP axis."""
+    def one(t, sp=None):
+        if jnp.issubdtype(t.dtype, jnp.inexact):
+            t = t.astype(dtype)
+            if sp is not None:
+                t = constrain(t, P(*tuple(sp)[1:]))
+        return t
+
+    if spec_tree is None:
+        return jax.tree.map(one, bp)
+    sp_leaves = jax.tree.flatten(spec_tree,
+                                 is_leaf=lambda s: isinstance(s, P))[0]
+    leaves, treedef = jax.tree.flatten(bp)
+    return jax.tree.unflatten(
+        treedef, [one(t, sp) for t, sp in zip(leaves, sp_leaves)])
+
+
+def _scan_blocks(cfg, blocks, x, positions, dtype, shared=None,
+                 block_specs=None):
+    """lax.scan over stacked layers with activation checkpointing."""
+    n_layers = jax.tree.leaves(blocks)[0].shape[0]
+
+    def body(carry, inp):
+        x, aux_lb, aux_z = carry
+        bp, idx = inp
+        bp = _cast_block(bp, dtype, block_specs)
+        x, aux = _apply_block(cfg, bp, x, positions, dtype, layer_idx=idx,
+                              shared=shared)
+        aux_lb = aux_lb + aux.get("moe_lb", 0.0)
+        aux_z = aux_z + aux.get("moe_z", 0.0)
+        return (x, aux_lb, aux_z), None
+
+    # full per-layer remat: only the (sequence-parallel) carry is saved
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux_lb, aux_z), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (blocks, jnp.arange(n_layers)))
+    return x, {"moe_lb": aux_lb, "moe_z": aux_z}
+
+
+# ---------------------------------------------------------------------------
+# Losses (chunked over sequence; logits never fully materialized)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(cfg, head_w, x, labels, mask, *, chunk: int = 512):
+    """x: [B, S, d]; labels, mask: [B, S]. Returns (sum_loss, count)."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    nc = (S + chunk - 1) // chunk
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xs = x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    vpad = head_w.shape[-1]
+    # keep the contraction dim (d) unsharded and vocab sharded — critical for
+    # tied embeddings whose transpose would otherwise flip the sharding and
+    # force a full-vocab all-reduce of the logits
+    head_w = constrain(head_w, P(None, "model"))
+
+    def step(carry, inp):
+        xc, lc, mc = inp
+        logits = (xc @ head_w.astype(xc.dtype)).astype(jnp.float32)
+        logits = constrain(logits, P(("pod", "data"), None, "model"))
+        if vpad > cfg.vocab:   # mask padded vocab columns
+            logits = jnp.where(jnp.arange(vpad) < cfg.vocab, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((logz - ll) * mc)
+        return carry + loss, None
+
+    # §Perf B4b: recompute per-chunk logits in the backward instead of
+    # saving [nc, B, chunk, vocab/16] fp32 residuals (1.6 GB/device each)
+    step = jax.checkpoint(step)
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xs, ls, ms))
+    return total, jnp.maximum(mask.sum(), 1.0)
+
+
+def _logits_last(cfg, params, x):
+    """Logits for the last position only (decode). x: [B, 1, d]. Padded
+    vocab columns are masked so sampling/argmax never picks them."""
+    head = params["head"]["w"] if "head" in params else params["embed"]["w"].T
+    head = constrain(head, P(None, "model"))
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if head.shape[-1] > cfg.vocab:
+        logits = jnp.where(jnp.arange(head.shape[-1]) < cfg.vocab,
+                           logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, batch, dtype):
+    """Token (+frontend) embedding. Returns (x, positions, labels, mask)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    # keep the embedding gather output d-sharded (§Perf B4c): the table is
+    # [vocab, d/16]-sharded, so the local gather result is [B, S, d/16] —
+    # without this pin GSPMD materialized the full 25.8 GB activation
+    x = constrain(x, P(("pod", "data"), None, "model"))
+    labels = batch.get("labels")
+    if cfg.frontend == "vision_stub":
+        patches = batch["patches"].astype(dtype)           # [B, Pn, 1024]
+        proj = L.dense_apply(params["projector"], patches, dtype)
+        x = jnp.concatenate([proj, x], axis=1)
+        if labels is not None:
+            pad = jnp.zeros((B, proj.shape[1]), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((B, proj.shape[1]), jnp.float32),
+                 batch["mask"].astype(jnp.float32)], axis=1)
+        else:
+            mask = None
+    else:
+        mask = batch.get("mask")
+        mask = mask.astype(jnp.float32) if mask is not None else (
+            jnp.ones(tokens.shape, jnp.float32) if labels is not None
+            else None)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    return x, positions, labels, mask
+
+
+def _encode(cfg, params, batch, dtype):
+    frames = batch["frames"].astype(dtype)                 # [B, Se, 1024]
+    h = L.dense_apply(params["projector"], frames, dtype)
+    B, Se, _ = h.shape
+    pos = jnp.broadcast_to(jnp.arange(Se)[None, :], (B, Se))
+
+    def body(x, bp):
+        bp = _cast_block(bp, dtype)
+        a, _ = attn.apply_full(bp["attn"], cfg,
+                               L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps,
+                                               dtype),
+                               pos, dtype, causal=False)
+        x = x + a
+        m = L.swiglu_apply(bp["mlp"],
+                           L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps,
+                                           dtype), dtype)
+        return x + m, None
+
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return L.rmsnorm_apply(params["enc_lnf"], h, cfg.norm_eps, dtype)
+
+
+def _decode_stack_full(cfg, params, x, positions, enc_out, dtype):
+    """Enc-dec decoder over full sequences (train)."""
+    def body(carry, bp):
+        x = carry
+        bp = _cast_block(bp, dtype)
+        h, _ = attn.apply_full(bp["attn"], cfg,
+                               L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps,
+                                               dtype),
+                               positions, dtype, causal=True)
+        x = x + h
+        ek, ev = attn.cross_kv(bp["xattn"], cfg, enc_out, dtype)
+        x = x + attn.apply_cross(bp["xattn"], cfg,
+                                 L.rmsnorm_apply(bp["ln3"], x, cfg.norm_eps,
+                                                 dtype), ek, ev, dtype)
+        m = L.swiglu_apply(bp["mlp"],
+                           L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps,
+                                           dtype), dtype)
+        return x + m, None
+
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+
+def n_attn_caches(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        return 0
+    return cfg.n_layers
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    """Zeroed decode cache for a batch (shapes only matter for dry-run)."""
+    dt = _dt(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    cache = {}
+    na = n_attn_caches(cfg)
+    if na:
+        cache["k"] = jnp.zeros((na, batch, max_len, KV, hd), dt)
+        cache["v"] = jnp.zeros((na, batch, max_len, KV, hd), dt)
+        cache["len"] = jnp.zeros((batch,), jnp.int32)
+    if cfg.family in ("ssm", "hybrid"):
+        ch = cfg.d_inner + 2 * cfg.ssm_state
+        cache["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, ch), dt)
+        cache["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+             cfg.ssm_head_dim), jnp.float32)
+        if cfg.family == "ssm":
+            cache["len"] = jnp.zeros((batch,), jnp.int32)
+    if cfg.family == "encdec":
+        cache["ek"] = jnp.zeros((cfg.n_layers, batch, enc_len, KV, hd), dt)
+        cache["ev"] = jnp.zeros((cfg.n_layers, batch, enc_len, KV, hd), dt)
+    return cache
+
+
+def forward_prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Process a prompt; returns (last-position logits, populated cache)."""
+    dtype = _dt(cfg)
+    if cfg.family == "encdec":
+        return _prefill_encdec(cfg, params, batch, max_len)
+    x, pos, _, _ = _embed_inputs(cfg, params, batch, dtype)
+    x = constrain_batch(x)
+    B, S, _ = x.shape
+    shared = params.get("shared")
+    na = cfg.attn_every if cfg.family == "hybrid" else 1
+
+    def body(carry, inp):
+        x = carry
+        bp, idx = inp
+        ys = {}
+        if cfg.family in ("dense", "moe", "vlm"):
+            h, (k, v) = attn.apply_full(
+                bp["attn"], cfg,
+                L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps, dtype),
+                pos, dtype, causal=True)
+            x = x + h
+            z = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps, dtype)
+            if cfg.family == "moe":
+                m, _ = moe_mod.apply(bp["moe"], cfg, z, dtype)
+            else:
+                m = L.swiglu_apply(bp["mlp"], z, dtype)
+            x = x + m
+            ys = {"k": k.astype(dtype), "v": v.astype(dtype)}
+        else:  # ssm / hybrid
+            h, st = ssm_mod.apply_full(
+                bp["ssm"], cfg,
+                L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps, dtype), dtype)
+            x = x + h
+            ys = {"conv": st["conv"], "ssm": st["ssm"]}
+            if cfg.family == "hybrid":
+                def attn_branch(x):
+                    zq = L.rmsnorm_apply(shared["ln1"], x, cfg.norm_eps,
+                                         dtype)
+                    h, (k, v) = attn.apply_full(shared["attn"], cfg, zq, pos,
+                                                dtype, causal=True)
+                    x = x + h
+                    m = L.swiglu_apply(
+                        shared["mlp"],
+                        L.rmsnorm_apply(shared["ln2"], x, cfg.norm_eps,
+                                        dtype), dtype)
+                    return x + m, k.astype(dtype), v.astype(dtype)
+
+                def skip(x):
+                    KV, hd = cfg.n_kv_heads, cfg.head_dim
+                    z = jnp.zeros((B, S, KV, hd), dtype)
+                    return x, z, z
+
+                use = (idx % cfg.attn_every) == (cfg.attn_every - 1)
+                x, k, v = jax.lax.cond(use, attn_branch, skip, x)
+                ys["k"], ys["v"] = k, v
+        # sequence-parallel residual stream (§Perf A3), same as train path:
+        # turns the per-layer full-activation all-reduce into RS+AG and
+        # shards the inter-matmul elementwise work over 'model'. SSM/hybrid
+        # keep the batch-only layout — the SSD conv/scan over a seq-sharded
+        # carry forced per-chunk gathers (measured 4x memory regression).
+        if cfg.family in ("ssm", "hybrid"):
+            x = constrain(x, P(("pod", "data"), None, None))
+        else:
+            x = constrain(x, P(("pod", "data"), "model", None))
+        return x, ys
+
+    x, ys = jax.lax.scan(body, x, (params["blocks"],
+                                   jnp.arange(cfg.n_layers)))
+    x = L.rmsnorm_apply(params["lnf"], x, cfg.norm_eps, dtype)
+    logits = _logits_last(cfg, params, x[:, -1:, :])
+
+    cache = init_cache(cfg, B, max_len)
+    if "k" in ys:
+        k, v = ys["k"], ys["v"]              # [L, B, S, KV, hd]
+        if cfg.family == "hybrid":           # keep only the attn layers
+            sel = np.nonzero(np.arange(cfg.n_layers) % cfg.attn_every ==
+                             (cfg.attn_every - 1))[0]
+            k = k[sel]
+            v = v[sel]
+        cache["k"] = cache["k"].at[:, :, :S].set(k)
+        cache["v"] = cache["v"].at[:, :, :S].set(v)
+    if "conv" in ys:
+        cache["conv"] = ys["conv"]
+        cache["ssm"] = ys["ssm"]
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache
+
+
+def _prefill_encdec(cfg, params, batch, max_len: int):
+    dtype = _dt(cfg)
+    enc_out = _encode(cfg, params, batch, dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, bp):
+        h, (k, v) = attn.apply_full(
+            bp["attn"], cfg,
+            L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps, dtype),
+            pos, dtype, causal=True)
+        x = x + h
+        ek, ev = attn.cross_kv(bp["xattn"], cfg, enc_out, dtype)
+        x = x + attn.apply_cross(bp["xattn"], cfg,
+                                 L.rmsnorm_apply(bp["ln3"], x, cfg.norm_eps,
+                                                 dtype), ek, ev, dtype)
+        m = L.swiglu_apply(bp["mlp"],
+                           L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps,
+                                           dtype), dtype)
+        return x + m, {"k": k.astype(dtype), "v": v.astype(dtype),
+                       "ek": ek.astype(dtype), "ev": ev.astype(dtype)}
+
+    x, ys = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm_apply(params["lnf"], x, cfg.norm_eps, dtype)
+    logits = _logits_last(cfg, params, x[:, -1:, :])
+    cache = init_cache(cfg, B, max_len, enc_len=ys["ek"].shape[2])
+    cache["k"] = cache["k"].at[:, :, :S].set(ys["k"])
+    cache["v"] = cache["v"].at[:, :, :S].set(ys["v"])
+    cache["ek"], cache["ev"] = ys["ek"], ys["ev"]
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+    return logits, cache
+
+
+def forward_decode(cfg: ModelConfig, params, token, cache):
+    """One decode step. token: [B, 1] int32. Returns (logits, new cache)."""
+    dtype = _dt(cfg)
+    B = token.shape[0]
+    x = L.embed_apply(params["embed"], token, dtype)
+    x = constrain_batch(x)
+    clen = cache["len"]
+    shared = params.get("shared")
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, inp):
+            bp, ck, cv = inp
+            h, ck, cv = attn.apply_decode(
+                bp["attn"], cfg,
+                L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps, dtype),
+                ck, cv, clen, dtype)
+            x = x + h
+            z = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps, dtype)
+            if cfg.family == "moe":
+                m, _ = moe_mod.apply(bp["moe"], cfg, z, dtype)
+            else:
+                m = L.swiglu_apply(bp["mlp"], z, dtype)
+            return x + m, {"k": ck, "v": cv}
+
+        x, ys = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                       cache["v"]))
+        new_cache = {**cache, "k": ys["k"], "v": ys["v"],
+                     "len": clen + 1}
+    elif cfg.family == "ssm":
+        def body(x, inp):
+            bp, conv, st = inp
+            h, nc = ssm_mod.apply_decode(
+                bp["ssm"], cfg,
+                L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps, dtype),
+                {"conv": conv, "ssm": st}, dtype)
+            return x + h, nc
+
+        x, ys = jax.lax.scan(body, x, (params["blocks"], cache["conv"],
+                                       cache["ssm"]))
+        new_cache = {**cache, "conv": ys["conv"], "ssm": ys["ssm"],
+                     "len": clen + 1}
+    elif cfg.family == "hybrid":
+        ak, av = cache["k"], cache["v"]
+
+        def body(carry, inp):
+            x, ak, av = carry
+            bp, conv, st, idx = inp
+            h, nc = ssm_mod.apply_decode(
+                bp["ssm"], cfg,
+                L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps, dtype),
+                {"conv": conv, "ssm": st}, dtype)
+            x = x + h
+            aidx = idx // cfg.attn_every
+
+            def attn_branch(args):
+                x, ak, av = args
+                h, nk, nv = attn.apply_decode(
+                    shared["attn"], cfg,
+                    L.rmsnorm_apply(shared["ln1"], x, cfg.norm_eps, dtype),
+                    ak[aidx], av[aidx], clen, dtype)
+                x = x + h
+                m = L.swiglu_apply(
+                    shared["mlp"],
+                    L.rmsnorm_apply(shared["ln2"], x, cfg.norm_eps, dtype),
+                    dtype)
+                return x + m, ak.at[aidx].set(nk), av.at[aidx].set(nv)
+
+            use = (idx % cfg.attn_every) == (cfg.attn_every - 1)
+            x, ak, av = jax.lax.cond(use, attn_branch,
+                                     lambda a: a, (x, ak, av))
+            return (x, ak, av), nc
+
+        (x, ak, av), ys = jax.lax.scan(
+            body, (x, ak, av),
+            (params["blocks"], cache["conv"], cache["ssm"],
+             jnp.arange(cfg.n_layers)))
+        new_cache = {**cache, "conv": ys["conv"], "ssm": ys["ssm"],
+                     "k": ak, "v": av, "len": clen + 1}
+    elif cfg.family == "encdec":
+        def body(x, inp):
+            bp, ck, cv, ek, ev = inp
+            h, ck, cv = attn.apply_decode(
+                bp["attn"], cfg,
+                L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps, dtype),
+                ck, cv, clen, dtype)
+            x = x + h
+            x = x + attn.apply_cross(
+                bp["xattn"], cfg,
+                L.rmsnorm_apply(bp["ln3"], x, cfg.norm_eps, dtype),
+                ek.astype(dtype), ev.astype(dtype), dtype)
+            m = L.swiglu_apply(bp["mlp"],
+                               L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps,
+                                               dtype), dtype)
+            return x + m, {"k": ck, "v": cv}
+
+        x, ys = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                       cache["v"], cache["ek"],
+                                       cache["ev"]))
+        new_cache = {**cache, "k": ys["k"], "v": ys["v"], "len": clen + 1}
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm_apply(params["lnf"], x, cfg.norm_eps, dtype)
+    logits = _logits_last(cfg, params, x)
+    return logits, new_cache
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    """Returns scalar loss (CE + MoE aux)."""
+    dtype = _dt(cfg)
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch, dtype)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = L.embed_apply(params["embed"], tokens, dtype)
+        pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = _decode_stack_full(cfg, params, x, pos, enc_out, dtype)
+        aux = {"moe_lb": 0.0, "moe_z": 0.0}
+        labels, mask = batch["labels"], batch["mask"].astype(jnp.float32)
+    else:
+        x, pos, labels, mask = _embed_inputs(cfg, params, batch, dtype)
+        x = constrain_batch(x)
+        shared = params.get("shared")
+        x, aux = _scan_blocks(cfg, params["blocks"], x, pos, dtype,
+                              shared=shared,
+                              block_specs=param_specs(cfg)["blocks"])
+    x = L.rmsnorm_apply(params["lnf"], x, cfg.norm_eps, dtype)
+    head = params["head"]["w"] if "head" in params else params["embed"]["w"].T
+    total, count = chunked_ce_loss(cfg, head, x, labels, mask)
+    loss = total / count
+    return loss + 0.01 * aux["moe_lb"] + 0.001 * aux["moe_z"]

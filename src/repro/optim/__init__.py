@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW + ZeRO sharding, schedules, grad compression."""
+from . import adamw, compression  # noqa: F401
+from .adamw import (OptConfig, TrainState, apply_updates, init_state,  # noqa: F401
+                    lr_at, zero_spec, zero_spec_tree)

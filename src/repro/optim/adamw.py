@@ -1,0 +1,148 @@
+"""AdamW with ZeRO-1/3-style state sharding (pure JAX, no optax).
+
+The train state holds fp32 *master* params and Adam moments, all sharded over
+``model`` × ``data`` (``zero_spec`` adds the data axis to the first free dim
+of each param spec). The compute params are materialized per step as
+``bf16 = cast(constrain(master, param_spec))`` — GSPMD turns that into an
+all-gather over ``data``; its transpose in backward is exactly the ZeRO
+reduce-scatter of gradients. No hand-written collectives needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import constrain
+
+PyTree = Any
+
+
+def zero_spec(spec: P, shape=None, data_size: int = 16) -> P:
+    """Add ZeRO sharding over the FULL DP domain ('pod','data') on the
+    largest unsharded dim the axes divide evenly (§Perf C4: sharding the
+    master/moments across pods turns the pod-axis gradient all-reduce into
+    a reduce-scatter — half the ring wire — and halves optimizer bytes).
+    On meshes without a 'pod' axis the name is filtered out downstream."""
+    entries = list(spec)
+    if shape is not None and len(entries) < len(shape):
+        entries += [None] * (len(shape) - len(entries))
+    best, best_dim = None, 0
+    for i, e in enumerate(entries):
+        if e is not None:
+            continue
+        dim = shape[i] if shape is not None else 0
+        if shape is None:
+            best = i
+            break
+        if dim % data_size == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best is None:
+        return P(*entries)
+    entries[best] = ("pod", "data")
+    return P(*entries)
+
+
+def zero_spec_tree(spec_tree, shape_tree=None, data_size: int = 16):
+    if shape_tree is None:
+        return jax.tree.map(zero_spec, spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+    spec_leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda s: isinstance(s, P))
+    shape_leaves = jax.tree.leaves(shape_tree)
+    out = [zero_spec(s, sh.shape, data_size)
+           for s, sh in zip(spec_leaves, shape_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    step: jnp.ndarray
+    master: PyTree      # fp32, ZeRO-sharded
+    m: PyTree           # fp32, ZeRO-sharded
+    v: PyTree           # fp32, ZeRO-sharded
+
+    def tree_flatten(self):
+        return ((self.step, self.master, self.m, self.v), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_state(params: PyTree) -> TrainState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return TrainState(jnp.zeros((), jnp.int32), f32(params), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr_peak: float = 3e-4
+    warmup: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step):
+    warm = cfg.lr_peak * (step + 1) / max(cfg.warmup, 1)
+    t = jnp.clip((step - cfg.warmup) /
+                 max(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * cfg.lr_peak * (1 + jnp.cos(np.pi * t))
+    return jnp.where(step < cfg.warmup, warm, cos).astype(jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(state: TrainState, grads: PyTree, opt: OptConfig,
+                  zero_specs: PyTree | None = None) -> TrainState:
+    """One AdamW step on the (sharded) master params."""
+    step = state.step + 1
+    lr = lr_at(opt, state.step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt.clip_norm / (gnorm + 1e-12))
+
+    def upd(g, mm, vv, p, spec=None):
+        g = g.astype(jnp.float32) * scale
+        if spec is not None:
+            g = constrain(g, spec)
+        mm = opt.b1 * mm + (1 - opt.b1) * g
+        vv = opt.b2 * vv + (1 - opt.b2) * g * g
+        mhat = mm / (1 - opt.b1 ** step.astype(jnp.float32))
+        vhat = vv / (1 - opt.b2 ** step.astype(jnp.float32))
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + opt.eps)
+                      + opt.weight_decay * p)
+        return p, mm, vv
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    m_leaves = jax.tree.leaves(state.m)
+    v_leaves = jax.tree.leaves(state.v)
+    p_leaves = jax.tree.leaves(state.master)
+    if zero_specs is None:
+        s_leaves = [None] * len(g_leaves)
+    else:
+        s_leaves = jax.tree.flatten(
+            zero_specs, is_leaf=lambda s: isinstance(s, P))[0]
+    new_p, new_m, new_v = [], [], []
+    for g, mm, vv, p, sp in zip(g_leaves, m_leaves, v_leaves, p_leaves,
+                                s_leaves):
+        p2, m2, v2 = upd(g, mm, vv, p, sp)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return TrainState(step, jax.tree.unflatten(treedef, new_p),
+                      jax.tree.unflatten(treedef, new_m),
+                      jax.tree.unflatten(treedef, new_v))

@@ -1,0 +1,126 @@
+"""E8MY gradient compression for data-parallel reduction (beyond paper).
+
+Applies the paper's E8MY idea (§4.2.2) to the DP gradient all-reduce: each
+shard truncates its fp32 gradient to the top V bits (RNE) before the psum and
+keeps the truncation error in an fp32 *error-feedback* buffer added to the
+next step's gradient — the standard EF-SGD construction, so convergence is
+preserved while inter-pod DCI traffic drops ~2× (E8M10 ≈ 19 bits on the
+wire after packing; here we model it as a bf16/E8MY-valued psum).
+
+Used through ``compressed_psum`` inside a ``shard_map`` over the DP axes —
+see ``repro/train/trainer.py`` (opt-in: TrainerConfig.grad_compression).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def e8m_truncate(x: jnp.ndarray, mantissa_bits: int) -> jnp.ndarray:
+    """Round fp32 to E8M<mantissa_bits> (RNE), staying in fp32 storage."""
+    drop = 23 - mantissa_bits
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    lsb = (u >> np.uint32(drop)) & np.uint32(1)
+    half = np.uint32((1 << (drop - 1)) - 1)
+    r = (u + lsb + half) & ~np.uint32((1 << drop) - 1)
+    return jax.lax.bitcast_convert_type(r, jnp.float32)
+
+
+def compress(grad: jnp.ndarray, err: jnp.ndarray, mantissa_bits: int):
+    """(gradient + error feedback) -> (quantized gradient, new error)."""
+    g = grad.astype(jnp.float32) + err
+    q = e8m_truncate(g, mantissa_bits)
+    return q, g - q
+
+
+def compressed_psum(grad_tree, err_tree, axis_name, mantissa_bits: int = 10):
+    """Quantize -> psum over the DP axis -> new error feedback."""
+    def one(g, e):
+        q, e2 = compress(g, e, mantissa_bits)
+        return jax.lax.psum(q, axis_name), e2
+
+    out = jax.tree.map(one, grad_tree, err_tree)
+    summed = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    errs = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return summed, errs
+
+
+# ---------------------------------------------------------------------------
+# Integer-wire compressed reduction (§Perf C — the paper's packing idea on
+# the inter-pod link). A float psum cannot carry a narrow wire format
+# (XLA re-widens the dtype around the collective), so the reduction is done
+# GShard-style by hand: quantize -> all_to_all the shards (INTEGER wire) ->
+# local dequant+sum -> quantize -> all_gather (INTEGER wire) -> dequant.
+# Wire cost per device: payload/2 + payload/2 = 1x quantized payload vs
+# 2x fp32 payload for a ring all-reduce -> 4x (uint16) / 8x (uint8) less
+# DCI traffic. Runs inside a shard_map manual region over ``axis_name``.
+# ---------------------------------------------------------------------------
+
+
+def _f32_to_u16(x: jnp.ndarray) -> jnp.ndarray:
+    """Top 16 bits of an RNE-rounded fp32 == the bf16 bit pattern."""
+    r = e8m_truncate(x, 7)
+    u = jax.lax.bitcast_convert_type(r, jnp.uint32)
+    return (u >> np.uint32(16)).astype(jnp.uint16)
+
+
+def _u16_to_f32(u: jnp.ndarray) -> jnp.ndarray:
+    w = u.astype(jnp.uint32) << np.uint32(16)
+    return jax.lax.bitcast_convert_type(w, jnp.float32)
+
+
+def _f32_to_u8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Scale-normalized float8_e4m3 wire byte."""
+    y = (x / scale).astype(jnp.float8_e4m3fn)
+    return jax.lax.bitcast_convert_type(y, jnp.uint8)
+
+
+def _u8_to_f32(u: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    y = jax.lax.bitcast_convert_type(u, jnp.float8_e4m3fn)
+    return y.astype(jnp.float32) * scale
+
+
+def compressed_wire_reduce(g: jnp.ndarray, axis_name: str, n_shards: int,
+                           wire: str = "u16") -> jnp.ndarray:
+    """Mean-reduce ``g`` over ``axis_name`` with an integer wire format.
+
+    Must run inside a shard_map manual region over ``axis_name`` (size
+    ``n_shards``). Semantics: RS(quantized) + local sum + AG(quantized) —
+    i.e. one quantization before and one after the sum, like bf16-reduce
+    hardware offload.
+    """
+    shape = g.shape
+    flat = g.reshape(-1).astype(jnp.float32) / n_shards
+    pad = -flat.size % n_shards
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n_shards, -1)            # [n, m]
+
+    if wire == "u16":
+        sent = _f32_to_u16(chunks)
+        recv = jax.lax.all_to_all(sent, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        part = jnp.sum(_u16_to_f32(recv), axis=0)  # my shard, reduced
+        out = jax.lax.all_gather(_f32_to_u16(part), axis_name)
+        flat_out = _u16_to_f32(out).reshape(-1)
+    elif wire == "u8":
+        scale = jnp.maximum(jnp.max(jnp.abs(chunks)), 1e-30) / 448.0
+        scale = jax.lax.pmax(scale, axis_name)     # shared scalar scale
+        sent = _f32_to_u8(chunks, scale)
+        recv = jax.lax.all_to_all(sent, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        part = jnp.sum(_u8_to_f32(recv, scale), axis=0)
+        # the sum of n quantized chunks can exceed ±448·scale: fresh scale
+        # for the gather leg (e4m3fn has no inf — overflow would be NaN)
+        scale2 = jnp.maximum(jnp.max(jnp.abs(part)), 1e-30) / 448.0
+        scale2 = jax.lax.pmax(scale2, axis_name)
+        out = jax.lax.all_gather(_f32_to_u8(part, scale2), axis_name)
+        flat_out = _u8_to_f32(out, scale2).reshape(-1)
+    else:
+        raise ValueError(wire)
+    if pad:
+        flat_out = flat_out[:-pad]
+    return flat_out.reshape(shape)

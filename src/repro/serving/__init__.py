@@ -1,0 +1,2 @@
+"""Serving substrate: KV-cache decode engine with continuous batching."""
+from .engine import DecodeEngine, Request, ServeConfig  # noqa: F401

@@ -1,0 +1,100 @@
+"""Restarted (flexible) GMRES with modified Gram-Schmidt Arnoldi.
+
+FGMRES stores the preconditioned basis Z so the preconditioner may itself be
+an inner Krylov solve — the building block of the paper's F3R hierarchy.
+Fully jit-compatible: the Arnoldi cycle is a fori_loop with masked MGS, the
+restart loop is a while_loop.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .cg import SolveInfo
+
+Matvec = Callable[[jnp.ndarray], jnp.ndarray]
+
+_EPS = 1e-30
+
+
+def _fgmres_cycle(matvec: Matvec, M: Matvec, b, x, m: int, dtype):
+    """One FGMRES(m) cycle from iterate x. Returns (x_new, relres_est)."""
+    n = b.shape[0]
+    r = b - matvec(x).astype(dtype)
+    beta = jnp.linalg.norm(r)
+    V = jnp.zeros((m + 1, n), dtype=dtype).at[0].set(
+        r / jnp.where(beta == 0, 1.0, beta))
+    Z = jnp.zeros((m, n), dtype=dtype)
+    H = jnp.zeros((m + 1, m), dtype=dtype)
+
+    def arnoldi(j, carry):
+        V, Z, H = carry
+        z = M(V[j]).astype(dtype)
+        w = matvec(z).astype(dtype)
+        # masked modified Gram-Schmidt against v_0..v_j
+        mask = (jnp.arange(m + 1) <= j).astype(dtype)
+        h = (V @ w) * mask                      # [m+1]
+        w = w - V.T @ h
+        # single reorthogonalization pass (cheap, stabilizes fp32 layers)
+        h2 = (V @ w) * mask
+        w = w - V.T @ h2
+        h = h + h2
+        hnext = jnp.linalg.norm(w)
+        V = V.at[j + 1].set(w / jnp.where(hnext < _EPS, 1.0, hnext))
+        H = H.at[:, j].set(h).at[j + 1, j].set(hnext)
+        Z = Z.at[j].set(z)
+        return V, Z, H
+
+    V, Z, H = jax.lax.fori_loop(0, m, arnoldi, (V, Z, H))
+    e1 = jnp.zeros((m + 1,), dtype=dtype).at[0].set(beta)
+    y, *_ = jnp.linalg.lstsq(H, e1)
+    x_new = x + Z.T @ y
+    res = jnp.linalg.norm(e1 - H @ y)
+    return x_new, res
+
+
+def fgmres(matvec: Matvec, b: jnp.ndarray, *, M: Matvec | None = None,
+           m: int = 30, tol: float = 1e-9, max_cycles: int = 100, x0=None,
+           dtype=None) -> tuple[jnp.ndarray, SolveInfo]:
+    dtype = dtype or b.dtype
+    b = b.astype(dtype)
+    x0 = jnp.zeros_like(b) if x0 is None else x0.astype(dtype)
+    M = M or (lambda r: r)
+    bnorm = jnp.linalg.norm(b)
+    bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
+    hdtype = jnp.float64 if dtype == jnp.float64 else jnp.float32
+    hist0 = jnp.full((max_cycles + 1,), -1.0, dtype=hdtype)
+    r0 = jnp.linalg.norm(b - matvec(x0).astype(dtype)) / bnorm
+    hist0 = hist0.at[0].set(r0.astype(hdtype))
+
+    def cond(s):
+        k, x, hist, relres = s
+        return jnp.logical_and(k < max_cycles, relres >= tol)
+
+    def body(s):
+        k, x, hist, _ = s
+        x, res = _fgmres_cycle(matvec, M, b, x, m, dtype)
+        relres = (res / bnorm).astype(dtype)
+        hist = hist.at[k + 1].set(relres.astype(hdtype))
+        return (k + 1, x, hist, relres)
+
+    s0 = (jnp.asarray(0), x0, hist0, r0.astype(dtype))
+    k, x, hist, relres = jax.lax.while_loop(cond, body, s0)
+    return x, SolveInfo(k, relres, hist)
+
+
+def fgmres_fixed_cycles(matvec: Matvec, M: Matvec, m: int, cycles: int = 1,
+                        dtype=jnp.float32) -> Matvec:
+    """FGMRES(m) × cycles from x0 = 0, packaged as a (flexible)
+    preconditioner — the middle layers of F3R."""
+
+    def apply(rhs: jnp.ndarray) -> jnp.ndarray:
+        b = rhs.astype(dtype)
+        x = jnp.zeros_like(b)
+        for _ in range(cycles):
+            x, _ = _fgmres_cycle(matvec, M, b, x, m, dtype)
+        return x
+
+    return apply

@@ -1,0 +1,59 @@
+"""Inner-outer CG (paper §5.2.2): FP64 flexible CG preconditioned by m_in
+iterations of lower-precision PCG whose SpMV runs in FP32 / FP16 / E8MY.
+
+Variants (paper Fig. 11): fp64 / fp32 / fp16 / e8m<D> — the last one is the
+PackSELL-enabled solver that tunes the mantissa width Y = 22 - D.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from . import precond
+from .cg import SolveInfo, fcg, pcg_fixed_iters
+from .operators import OperatorSet
+
+
+@dataclasses.dataclass
+class IOCGConfig:
+    m_in: int = 50             # inner PCG iterations (paper: 20 / 50 / 80)
+    inner_spmv: str = "fp32"   # 'fp64'|'fp32'|'fp16'|'packsell_e8m<D>'
+    ainv_terms: int = 2
+    tol: float = 1e-9
+    maxiter: int = 2000        # outer FCG iterations
+
+
+def variant(name: str, m_in: int = 50) -> IOCGConfig:
+    if name == "fp64":
+        return IOCGConfig(m_in=m_in, inner_spmv="fp64")
+    if name == "fp32":
+        return IOCGConfig(m_in=m_in, inner_spmv="fp32")
+    if name == "fp16":
+        return IOCGConfig(m_in=m_in, inner_spmv="fp16")
+    if name.startswith("e8m"):  # e8m<D> with D the delta width
+        return IOCGConfig(m_in=m_in, inner_spmv=f"packsell_{name}")
+    raise ValueError(name)
+
+
+def solve(ops: OperatorSet, b: jnp.ndarray,
+          config: IOCGConfig) -> tuple[jnp.ndarray, SolveInfo]:
+    A_out = ops.matvec("fp64")
+    A_in = ops.matvec(config.inner_spmv)
+    inner_dtype = jnp.float64 if config.inner_spmv == "fp64" else jnp.float32
+    M_in = precond.neumann_ainv(ops.diag(), A_in, k=config.ainv_terms,
+                                dtype=inner_dtype)
+    M = pcg_fixed_iters(A_in, M_in, config.m_in, dtype=inner_dtype)
+    return fcg(A_out, b, M=M, tol=config.tol, maxiter=config.maxiter,
+               dtype=b.dtype)
+
+
+def pcg_reference(ops: OperatorSet, b: jnp.ndarray, *, tol: float = 1e-9,
+                  maxiter: int = 20000,
+                  ainv_terms: int = 2) -> tuple[jnp.ndarray, SolveInfo]:
+    """The paper's baseline: standard full-precision PCG with the same
+    approximate-inverse preconditioner."""
+    from .cg import pcg
+    A = ops.matvec("fp64")
+    M = precond.neumann_ainv(ops.diag(), A, k=ainv_terms, dtype=jnp.float64)
+    return pcg(A, b, M=M, tol=tol, maxiter=maxiter, dtype=b.dtype)

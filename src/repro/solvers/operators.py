@@ -1,0 +1,93 @@
+"""Linear operators over the sparse formats, with per-precision variants.
+
+The paper's solvers (§5.2) mix SpMV precisions inside one Krylov hierarchy:
+an FP64 operator for the outer iteration and FP16 / E8MY PackSELL operators
+inside. ``OperatorSet`` builds all requested variants of one matrix once and
+hands out matvec callables; solvers are written against plain callables so
+any format/precision combination plugs in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import packsell as pk
+from repro.core import sell as sl
+from repro.core import sparse as sps
+
+Matvec = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def row_scale(a: sp.csr_matrix) -> tuple[sp.csr_matrix, np.ndarray]:
+    """G^{-1} A with g_i = sum_j |a_ij| (paper §5.1.2 scaling for SpMV)."""
+    g = np.asarray(np.abs(a).sum(axis=1)).ravel()
+    g = np.where(g == 0, 1.0, g)
+    return sp.diags(1.0 / g) @ a, g
+
+
+def sym_scale(a: sp.csr_matrix) -> tuple[sp.csr_matrix, np.ndarray]:
+    """Ḡ^{-1} A Ḡ^{-1} with ḡ_i = sqrt(|a_ii|) (paper §5.2 scaling)."""
+    d = np.sqrt(np.abs(a.diagonal()))
+    d = np.where(d == 0, 1.0, d)
+    dinv = sp.diags(1.0 / d)
+    s = (dinv @ a @ dinv).tocsr()
+    s.sort_indices()
+    return s, d
+
+
+@dataclasses.dataclass
+class OperatorSet:
+    """All precision variants of one (scaled) matrix, built lazily."""
+
+    csr: sp.csr_matrix
+    C: int = 32
+    sigma: int = 256
+    _cache: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return self.csr.shape[0]
+
+    def diag(self) -> np.ndarray:
+        return self.csr.diagonal()
+
+    def matvec(self, kind: str) -> Matvec:
+        """kind: 'fp64' | 'fp32' | 'fp16' | 'bf16' | 'packsell_fp16' |
+        'packsell_bf16' | 'packsell_e8m<D>' (e.g. packsell_e8m8)."""
+        if kind in self._cache:
+            return self._cache[kind][0]
+        if kind in ("fp64", "fp32", "fp16", "bf16"):
+            dtype = {"fp64": "float64", "fp32": "float32", "fp16": "float16",
+                     "bf16": "bfloat16"}[kind]
+            mat = sl.from_csr(self.csr, C=self.C, sigma=self.sigma,
+                              value_dtype=dtype)
+            comp = jnp.float64 if kind == "fp64" else jnp.float32
+            fn = lambda x, mat=mat, comp=comp: sl.sell_spmv_jnp(mat, x, comp)
+        elif kind.startswith("packsell_"):
+            sub = kind[len("packsell_"):]
+            if sub in ("fp16", "bf16"):
+                codec, D = sub, 15
+            elif sub.startswith("e8m"):
+                # packsell_e8mD where D is the *delta* width (Y = 22 - D)
+                codec, D = "e8m", int(sub[3:])
+            else:
+                raise ValueError(kind)
+            mat = pk.from_csr(self.csr, C=self.C, sigma=self.sigma, D=D,
+                              codec=codec)
+            fn = lambda x, mat=mat: pk.packsell_spmv_jnp(mat, x, jnp.float32)
+        elif kind == "csr64":
+            mat = sps.csr_from_scipy(self.csr, "float64")
+            fn = lambda x, mat=mat: mat.spmv(x, jnp.float64)
+        else:
+            raise ValueError(kind)
+        self._cache[kind] = (fn, mat)
+        return fn
+
+    def stored(self, kind: str):
+        """The underlying format object (for memory stats)."""
+        self.matvec(kind)
+        return self._cache[kind][1]

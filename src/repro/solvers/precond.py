@@ -1,0 +1,46 @@
+"""Preconditioners applied via SpMV-style kernels.
+
+The paper uses SD-AINV (a sparse approximate inverse, applied as SpMV). That
+exact factorization is external to the paper; we implement the same *role* —
+an approximate inverse whose application is a small fixed number of SpMV
+calls — as a truncated scaled Neumann series (documented divergence,
+DESIGN.md §6):
+
+    M r = sum_{k=0}^{K-1} (I - D^{-1} A)^k D^{-1} r
+
+evaluated by the Jacobi-style recurrence ``z <- D^{-1} r + (I - D^{-1}A) z``,
+so every application is K-1 SpMVs in whatever precision the supplied matvec
+uses (FP16 PackSELL inside F3R, exactly like the paper's inner layers).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Matvec = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def identity() -> Matvec:
+    return lambda r: r
+
+
+def jacobi(diag: np.ndarray, dtype=jnp.float32) -> Matvec:
+    dinv = jnp.asarray(np.where(diag == 0, 1.0, 1.0 / diag), dtype=dtype)
+    return lambda r: dinv * r.astype(dtype)
+
+
+def neumann_ainv(diag: np.ndarray, matvec: Matvec, k: int = 2,
+                 dtype=jnp.float32) -> Matvec:
+    """Truncated Neumann approximate inverse (SD-AINV role), K SpMV terms."""
+    dinv = jnp.asarray(np.where(diag == 0, 1.0, 1.0 / diag), dtype=dtype)
+
+    def apply(r: jnp.ndarray) -> jnp.ndarray:
+        r = r.astype(dtype)
+        z = dinv * r
+        for _ in range(k - 1):
+            z = z + dinv * (r - matvec(z).astype(dtype))
+        return z
+
+    return apply

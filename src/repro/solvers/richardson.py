@@ -1,0 +1,25 @@
+"""Preconditioned Richardson iteration — the innermost layer of F3R."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Matvec = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def richardson_fixed_iters(matvec: Matvec, M: Matvec, iters: int,
+                           dtype=jnp.float32) -> Matvec:
+    """x_{k+1} = x_k + M (b - A x_k), x_0 = M b, fixed iteration count."""
+
+    def apply(rhs: jnp.ndarray) -> jnp.ndarray:
+        b = rhs.astype(dtype)
+        x = M(b).astype(dtype)
+
+        def body(_, x):
+            return x + M(b - matvec(x).astype(dtype)).astype(dtype)
+
+        return jax.lax.fori_loop(0, iters, body, x)
+
+    return apply

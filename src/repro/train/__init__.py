@@ -1,0 +1,4 @@
+"""Training substrate: trainer loop, checkpointing, fault tolerance."""
+from .checkpoint import CheckpointManager, restore_resharded  # noqa: F401
+from .fault import PreemptionGuard, StepMonitor  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

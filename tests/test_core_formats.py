@@ -1,0 +1,190 @@
+"""Unit tests: codecs, delta encoding, PackSELL/SELL construction + SpMV."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import codecs as cd
+from repro.core import delta as de
+from repro.core import packsell, sell, sparse, testmats
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec,D", [("fp16", 15), ("fp16", 8), ("bf16", 15),
+                                     ("e8m", 1), ("e8m", 8), ("e8m", 15),
+                                     ("fixed16", 10)])
+def test_codec_roundtrip_words(codec, D):
+    rng = np.random.default_rng(0)
+    c = cd.make_codec(codec)
+    vals = rng.standard_normal(256).astype(np.float32)
+    deltas = rng.integers(0, 1 << D, size=256)
+    flags = np.ones(256, dtype=np.uint8)
+    words = cd.pack_words_np(vals, deltas, flags, c, D)
+    v_np, d_np, f_np = cd.unpack_words_np(words, c, D)
+    v_j, d_j = cd.unpack_words_jnp(jnp.asarray(words), c, D)
+    np.testing.assert_array_equal(d_np, deltas)
+    np.testing.assert_array_equal(np.asarray(d_j), deltas)
+    np.testing.assert_allclose(np.asarray(v_j, np.float32),
+                               np.asarray(v_np, np.float32))
+    # quantization error bounded by the codec's precision
+    want = cd.quantize_np(vals, c, D)
+    np.testing.assert_allclose(np.asarray(v_np, np.float32), want, rtol=0,
+                               atol=0)
+
+
+def test_dummy_words_carry_large_deltas():
+    c = cd.make_codec("fp16")
+    D = 4
+    deltas = np.array([0, 3, 100, (1 << 30) + 5], dtype=np.int64)
+    flags = np.array([1, 1, 0, 0], dtype=np.uint8)
+    words = cd.pack_words_np(np.zeros(4, np.float32), deltas, flags, c, D)
+    v, d, f = cd.unpack_words_np(words, c, D)
+    np.testing.assert_array_equal(d, deltas)
+    np.testing.assert_array_equal(f, flags)
+    assert np.all(np.asarray(v, np.float32)[f == 0] == 0.0)
+
+
+def test_e8m_matches_bf16_at_d15():
+    # E8M7 (D=15) is bit-identical to RNE bf16 truncation
+    rng = np.random.default_rng(1)
+    vals = (rng.standard_normal(512) *
+            10.0 ** rng.integers(-3, 3, 512)).astype(np.float32)
+    e = cd.quantize_np(vals, cd.make_codec("e8m"), 15)
+    b = cd.quantize_np(vals, cd.make_codec("bf16"), 15)
+    np.testing.assert_array_equal(e, b)
+
+
+def test_e8m_error_decreases_with_mantissa():
+    rng = np.random.default_rng(2)
+    vals = rng.standard_normal(4096).astype(np.float32)
+    errs = []
+    for D in (15, 10, 5, 1):  # Y = 7, 12, 17, 21
+        q = cd.quantize_np(vals, cd.make_codec("e8m"), D)
+        errs.append(np.abs(q - vals).max())
+    assert errs == sorted(errs, reverse=True) or errs[0] > errs[-1]
+    # E8M21 (D=1): 2 dropped bits -> tiny error
+    assert errs[-1] <= 2.0 ** -19
+
+
+# ---------------------------------------------------------------------------
+# delta encoding
+# ---------------------------------------------------------------------------
+
+def test_delta_encoding_banded_has_no_dummies():
+    a = testmats.stencil_1d(300, 2)
+    indptr, indices = a.indptr.astype(np.int64), a.indices.astype(np.int64)
+    k_left = de.lower_bandwidth(indptr, indices, a.shape[0])
+    assert k_left == 2
+    d0 = de.d0_for_rows(a.shape[0], 256, k_left)
+    deltas, needs_dummy, stored = de.encode_rows(indptr, indices, d0, D=15)
+    assert needs_dummy.sum() == 0
+    assert np.all(deltas >= 0)
+
+
+def test_delta_encoding_scattered_needs_dummies():
+    a = testmats.scattered(400, nnz_per_row=6, seed=3)
+    indptr, indices = a.indptr.astype(np.int64), a.indices.astype(np.int64)
+    k_left = de.lower_bandwidth(indptr, indices, a.shape[0])
+    d0 = de.d0_for_rows(a.shape[0], 256, k_left)
+    _, needs_dummy, _ = de.encode_rows(indptr, indices, d0, D=2)
+    assert needs_dummy.sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# format construction + SpMV vs dense oracle
+# ---------------------------------------------------------------------------
+
+MATS = list(testmats.suite("tiny").items())
+
+
+def _tol_for(codec, D):
+    if codec in ("fp16", "bf16"):
+        return 2e-2
+    return max(2.0 ** -(22 - D), 1e-6) * 40
+
+
+@pytest.mark.parametrize("name,a", MATS, ids=[m[0] for m in MATS])
+@pytest.mark.parametrize("codec,D", [("fp16", 15), ("e8m", 2), ("e8m", 12)])
+def test_packsell_spmv_matches_dense(name, a, codec, D):
+    mat = packsell.from_csr(a, C=8, sigma=32, D=D, codec=codec)
+    dense_q = packsell.decode_to_dense(mat)
+    # decode must reproduce the quantized matrix exactly
+    want = cd.quantize_np(a.toarray().astype(np.float32),
+                          cd.make_codec(codec), D)
+    np.testing.assert_allclose(dense_q, want, rtol=0, atol=0)
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    y = np.asarray(mat.spmv(jnp.asarray(x)))
+    y_ref = want.astype(np.float64) @ x
+    scale = np.abs(want).sum(axis=1) @ np.abs(x) / max(a.shape[0], 1) + 1e-30
+    assert np.max(np.abs(y - y_ref)) / max(np.abs(y_ref).max(), 1e-30) < 1e-5
+
+
+@pytest.mark.parametrize("name,a", MATS, ids=[m[0] for m in MATS])
+def test_sell_spmv_matches_dense(name, a):
+    mat = sell.from_csr(a, C=8, sigma=32, value_dtype="float32")
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    y = np.asarray(mat.spmv(jnp.asarray(x)))
+    y_ref = a.astype(np.float64) @ x
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("name,a", MATS, ids=[m[0] for m in MATS])
+def test_csr_coo_spmv(name, a):
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    for build in (sparse.csr_from_scipy, sparse.coo_from_scipy):
+        mat = build(a)
+        y = np.asarray(mat.spmv(jnp.asarray(x)))
+        np.testing.assert_allclose(y, a.astype(np.float64) @ x,
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bucket", ["pow2", "uniform", "exact"])
+def test_bucket_strategies_agree(bucket):
+    a = testmats.powerlaw(300, mean_deg=4, seed=7)
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    ref = None
+    mat = packsell.from_csr(a, C=4, sigma=16, D=8, codec="e8m",
+                            bucket_strategy=bucket)
+    y = np.asarray(mat.spmv(jnp.asarray(x)))
+    want = cd.quantize_np(a.toarray().astype(np.float32),
+                          cd.make_codec("e8m"), 8).astype(np.float64) @ x
+    np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+
+def test_memory_footprint_ratio_banded():
+    """Paper Fig. 7: dense-banded matrices approach the 0.75 lower bound."""
+    a = testmats.random_banded(4096, 40, 30, seed=9)
+    pmat = packsell.from_csr(a, C=32, sigma=256, D=15, codec="fp16")
+    smat = sell.from_csr(a, C=32, sigma=256, value_dtype="float16")
+    r = pmat.memory_stats()["packsell_bytes"] / smat.memory_stats()["sell_bytes"]
+    assert pmat.n_dummy == 0
+    assert 0.6 < r < 0.8  # 32 bits vs 48 bits ≈ 0.67 + perm/offsets
+
+
+def test_empty_and_tiny_matrices():
+    a = sp.csr_matrix((8, 8))
+    mat = packsell.from_csr(a, C=4, sigma=8, D=5, codec="e8m")
+    y = np.asarray(mat.spmv(jnp.ones(8, jnp.float32)))
+    np.testing.assert_array_equal(y, np.zeros(8))
+    a2 = sp.csr_matrix(np.eye(3, dtype=np.float32))
+    mat2 = packsell.from_csr(a2, C=4, sigma=8, D=5, codec="e8m")
+    y2 = np.asarray(mat2.spmv(jnp.arange(3).astype(jnp.float32)))
+    np.testing.assert_allclose(y2, [0.0, 1.0, 2.0])
+
+
+def test_rectangular_matrix():
+    a = testmats.scattered(96, m=200, nnz_per_row=4, seed=10)
+    mat = packsell.from_csr(a, C=8, sigma=16, D=6, codec="e8m")
+    x = np.random.default_rng(11).standard_normal(200).astype(np.float32)
+    want = cd.quantize_np(a.toarray().astype(np.float32),
+                          cd.make_codec("e8m"), 6).astype(np.float64) @ x
+    np.testing.assert_allclose(np.asarray(mat.spmv(jnp.asarray(x))), want,
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,143 @@
+"""Property-based tests (hypothesis) on the format's invariants:
+pack/unpack bijectivity, delta-encoding reconstruction, SpMV linearity,
+format-agreement between PackSELL / SELL / CSR, and σ-permutation identity.
+"""
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import codecs as cd
+from repro.core import packsell as pk
+from repro.core import sell as sl
+from repro.core import sparse as sps
+
+
+# ---------------------------------------------------------------------------
+# random sparse matrices as a hypothesis strategy
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def sparse_mats(draw, max_n=96, max_m=96):
+    n = draw(st.integers(1, max_n))
+    m = draw(st.integers(1, max_m))
+    density = draw(st.floats(0.01, 0.35))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    a = sp.random(n, m, density=density, random_state=rng,
+                  data_rvs=lambda k: rng.standard_normal(k))
+    a = a.tocsr()
+    a.sort_indices()
+    return a
+
+
+FORMATS = st.sampled_from([("fp16", 15), ("bf16", 15), ("e8m", 1),
+                           ("e8m", 4), ("e8m", 12)])
+LAYOUT = st.sampled_from([(8, 16), (16, 32), (4, 8)])   # (C, sigma)
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+
+@given(sparse_mats(), FORMATS, LAYOUT)
+@settings(max_examples=30, deadline=None)
+def test_decode_matches_quantized_matrix(a, fmt, layout):
+    """decode(encode(A)) == codec-quantized A: the format loses exactly the
+    value-codec precision, never structure."""
+    codec, D = fmt
+    C, sigma = layout
+    mat = pk.from_csr(a, C=C, sigma=sigma, D=D, codec=codec, device=False)
+    dec = pk.decode_to_dense(mat)
+    cobj = cd.make_codec(codec)
+    want = np.zeros(a.shape)
+    coo = a.tocoo()
+    qvals = cobj.decode_np(cobj.encode_np(coo.data.astype(np.float32), D),
+                           D).astype(np.float64)
+    for r, c, v in zip(coo.row, coo.col, qvals):
+        want[r, c] += v
+    np.testing.assert_allclose(dec, want, rtol=0, atol=0)
+
+
+@given(sparse_mats(), FORMATS, LAYOUT)
+@settings(max_examples=20, deadline=None)
+def test_spmv_matches_decoded_dense(a, fmt, layout):
+    codec, D = fmt
+    C, sigma = layout
+    mat = pk.from_csr(a, C=C, sigma=sigma, D=D, codec=codec)
+    x = np.random.default_rng(0).standard_normal(a.shape[1]) \
+        .astype(np.float32)
+    y = np.asarray(pk.packsell_spmv_jnp(mat, jnp.asarray(x)))
+    want = pk.decode_to_dense(mat) @ x.astype(np.float64)
+    np.testing.assert_allclose(y, want, rtol=2e-4, atol=2e-4)
+
+
+@given(sparse_mats(), LAYOUT)
+@settings(max_examples=20, deadline=None)
+def test_spmv_linearity(a, layout):
+    C, sigma = layout
+    mat = pk.from_csr(a, C=C, sigma=sigma, D=1, codec="e8m")  # E8M21
+    rng = np.random.default_rng(1)
+    x1 = jnp.asarray(rng.standard_normal(a.shape[1]), jnp.float32)
+    x2 = jnp.asarray(rng.standard_normal(a.shape[1]), jnp.float32)
+    y = np.asarray(pk.packsell_spmv_jnp(mat, 2.0 * x1 - 3.0 * x2))
+    y12 = 2.0 * np.asarray(pk.packsell_spmv_jnp(mat, x1)) \
+        - 3.0 * np.asarray(pk.packsell_spmv_jnp(mat, x2))
+    np.testing.assert_allclose(y, y12, rtol=1e-3, atol=1e-3)
+
+
+@given(sparse_mats(), LAYOUT)
+@settings(max_examples=20, deadline=None)
+def test_formats_agree(a, layout):
+    """PackSELL(E8M21) ≈ SELL(fp32) ≈ CSR(fp32) on the same matrix."""
+    C, sigma = layout
+    x = jnp.asarray(np.random.default_rng(2)
+                    .standard_normal(a.shape[1]), jnp.float32)
+    y_pk = np.asarray(pk.packsell_spmv_jnp(
+        pk.from_csr(a, C=C, sigma=sigma, D=1, codec="e8m"), x))
+    y_sl = np.asarray(sl.sell_spmv_jnp(
+        sl.from_csr(a, C=C, sigma=sigma, value_dtype="float32"), x))
+    y_cs = np.asarray(sps.csr_from_scipy(a, "float32").spmv(x))
+    np.testing.assert_allclose(y_pk, y_sl, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(y_sl, y_cs, rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200))
+@settings(max_examples=30, deadline=None)
+def test_empty_and_dense_rows(seed, n):
+    """Degenerate structures: empty rows, a full row, single column."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, 8), np.float32)
+    if n >= 2:
+        a[1, :] = rng.standard_normal(8)      # dense row
+    a[n // 2, 3] = 5.0                        # lone element
+    mat = pk.from_dense(a, C=8, sigma=16, D=4, codec="e8m")
+    x = jnp.asarray(rng.standard_normal(8), jnp.float32)
+    y = np.asarray(pk.packsell_spmv_jnp(mat, x))
+    want = pk.decode_to_dense(mat) @ np.asarray(x, np.float64)
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 2**20), st.integers(1, 15))
+@settings(max_examples=100, deadline=None)
+def test_dummy_insertion_threshold(delta, D):
+    """Deltas < 2^D need no dummy; larger ones round-trip via a dummy."""
+    n = 1
+    m = delta + 2
+    a = sp.csr_matrix((np.array([1.5, 2.5]),
+                       np.array([0, delta + 1]),
+                       np.array([0, 2])), shape=(n, m))
+    mat = pk.from_csr(a, C=1, sigma=1, D=D, codec="fp16", device=False)
+    expected_dummies = 0 if (delta + 1) < 2 ** D else \
+        int(np.ceil(0)) + 1 if (delta + 1) < 2 ** 31 else None
+    # reconstruction is exact regardless of dummy count
+    dec = pk.decode_to_dense(mat)
+    assert dec[0, 0] == 1.5
+    assert dec[0, delta + 1] == 2.5
+    if (delta + 1) < 2 ** D:
+        assert mat.n_dummy == 0
+    else:
+        assert mat.n_dummy >= 1

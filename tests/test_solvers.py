@@ -1,0 +1,119 @@
+"""Solver stack tests: convergence to the paper's criterion (eq. 6) on SPD
+and nonsymmetric systems, mixed-precision behaviour, F3R and IO-CG."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+import scipy.sparse.linalg as spla
+
+from repro.core import testmats
+from repro.solvers import (OperatorSet, f3r, fcg, fgmres, iocg, pcg, precond,
+                           sym_scale)
+
+TOL = 1e-9
+
+
+def _spd_system(n=600, seed=0):
+    a = testmats.stencil_3d(8, 8, 9, neighbours=27)  # n=576 SPD
+    a_s, d = sym_scale(a.tocsr())
+    rng = np.random.default_rng(seed)
+    b = rng.random(a.shape[0])
+    return a_s, jnp.asarray(b, jnp.float64)
+
+
+def _true_relres(csr, x, b):
+    r = np.asarray(b) - csr @ np.asarray(x)
+    return np.linalg.norm(r) / np.linalg.norm(np.asarray(b))
+
+
+def test_pcg_converges_spd():
+    a, b = _spd_system()
+    ops = OperatorSet(a, C=8, sigma=32)
+    M = precond.jacobi(ops.diag(), dtype=jnp.float64)
+    x, info = pcg(ops.matvec("fp64"), b, M=M, tol=TOL, maxiter=2000)
+    assert _true_relres(a, x, b) < 5 * TOL
+    assert int(info.iters) < 2000
+    # residual history is monotone-ish and recorded
+    h = np.asarray(info.history)
+    assert h[0] > 0 and h[int(info.iters)] < TOL
+
+
+def test_fcg_with_inner_pcg_converges():
+    a, b = _spd_system()
+    ops = OperatorSet(a, C=8, sigma=32)
+    cfg = iocg.IOCGConfig(m_in=20, inner_spmv="fp32", tol=TOL)
+    x, info = iocg.solve(ops, b, cfg)
+    assert _true_relres(a, x, b) < 5 * TOL
+
+
+@pytest.mark.parametrize("variant", ["fp32", "e8m8", "e8m12"])
+def test_iocg_variants_converge(variant):
+    a, b = _spd_system()
+    ops = OperatorSet(a, C=8, sigma=32)
+    cfg = iocg.variant(variant, m_in=20)
+    x, info = iocg.solve(ops, b, cfg)
+    assert _true_relres(a, x, b) < 5 * TOL
+
+
+def test_iocg_e8m_converges_like_fp32_and_beats_fp16_outer_iters():
+    """Paper Fig. 12: E8MY (large Y) tracks FP32 convergence; FP16 degrades
+    with large m_in."""
+    a, b = _spd_system()
+    ops = OperatorSet(a, C=8, sigma=32)
+    it = {}
+    for v in ["fp32", "e8m8", "fp16"]:
+        cfg = iocg.variant(v, m_in=50)
+        x, info = iocg.solve(ops, b, cfg)
+        it[v] = int(info.iters)
+        assert _true_relres(a, x, b) < 1e-6, v
+    assert it["e8m8"] <= it["fp16"]
+
+
+def test_fgmres_nonsymmetric():
+    a = testmats.hpgmp(6, 6, 6)
+    a_s, _ = sym_scale(a.tocsr())
+    rng = np.random.default_rng(1)
+    b = jnp.asarray(rng.random(a.shape[0]), jnp.float64)
+    ops = OperatorSet(a_s, C=8, sigma=32)
+    M = precond.jacobi(ops.diag(), dtype=jnp.float64)
+    x, info = fgmres(ops.matvec("fp64"), b, M=M, m=30, tol=TOL,
+                     max_cycles=50)
+    assert _true_relres(a_s, x, b) < 5 * TOL
+
+
+@pytest.mark.parametrize("variant", ["fp64", "fp16", "packsell"])
+def test_f3r_variants_converge(variant):
+    a, b = _spd_system()
+    ops = OperatorSet(a, C=8, sigma=32)
+    cfg = f3r.presets(variant)
+    x, info = f3r.solve(ops, b, cfg)
+    assert _true_relres(a, x, b) < 5 * TOL, variant
+
+
+def test_f3r_fp16_and_packsell_identical_convergence():
+    """Paper §5.2.1: FP16 values embed exactly in PackSELL, so FP16-F3R and
+    PackSELL-F3R must take the same outer iterations."""
+    a, b = _spd_system()
+    ops = OperatorSet(a, C=8, sigma=32)
+    _, i16 = f3r.solve(ops, b, f3r.presets("fp16"))
+    _, ipk = f3r.solve(ops, b, f3r.presets("packsell"))
+    assert int(i16.iters) == int(ipk.iters)
+
+
+def test_backward_error_definition():
+    """Paper eq. (5): backward error of low-precision SpMV."""
+    a = testmats.random_banded(800, 40, 9, seed=2)
+    from repro.solvers.operators import row_scale
+    a_s, _ = row_scale(a.tocsr())
+    ops = OperatorSet(a_s.tocsr(), C=8, sigma=32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(a.shape[0]), jnp.float32)
+    y16 = np.asarray(ops.matvec("packsell_fp16")(x))
+    y_exact = a_s @ np.asarray(x, np.float64)
+    anorm = np.abs(a_s).max(axis=1).toarray().ravel().max()
+    be16 = np.abs(y16 - y_exact).max() / (anorm * np.abs(np.asarray(x)).max())
+    y8m = np.asarray(ops.matvec("packsell_e8m2")(x))
+    be8m = np.abs(y8m - y_exact).max() / (anorm * np.abs(np.asarray(x)).max())
+    assert be8m < be16  # E8M20 ≈ FP32-level accuracy, far below FP16
+    assert be16 < 1e-2
