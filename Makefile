@@ -1,0 +1,18 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test verify bench bench-spmv
+
+test:
+	python -m pytest -x -q
+
+# tier-1 tests + tiny-scale spmv benchmark smoke (what CI runs)
+verify:
+	bash scripts/ci.sh
+
+bench:
+	python -m benchmarks.run
+
+# regenerate the checked-in perf-trajectory file (small scale)
+bench-spmv:
+	python -m benchmarks.run --only spmv --scale small

@@ -1,19 +1,31 @@
-"""Pallas kernel validation sweep: PackSELL/SELL kernels (interpret mode)
-against the pure-jnp oracle across matrix classes, codecs and block shapes.
+"""Pallas kernel validation sweep + SpMVPlan engine benchmarks.
 
-Interpret-mode wall-clock is meaningless (the kernel body runs in Python),
-so this bench reports *correctness* (max |Δ| vs oracle) plus the static
-VMEM working-set per grid step implied by the BlockSpecs — the quantity a
-real-TPU deployment must keep under ~16 MB/core.
+Three sections:
+
+* correctness — PackSELL/SELL kernels (interpret mode) against the pure-jnp
+  oracle across matrix classes, codecs and block shapes. Interpret-mode
+  wall-clock is meaningless (the kernel body runs in Python), so this
+  reports max |Δ| vs oracle plus the static VMEM working-set per grid step
+  implied by the BlockSpecs — the quantity a real-TPU deployment must keep
+  under ~16 MB/core.
+* autotune — :func:`autotune` sweeps (sb, wb) per bucket shape, times the
+  bucket kernel, and records the winner into the matrix's cached SpMVPlan
+  (``plan.retile``).
+* dispatch — plan-cached single-dispatch ``packsell_spmv`` vs the seed
+  per-call path (host band planning + eager per-bucket loop-decode +
+  per-bucket σ-scatter on every call), steady-state, cold build excluded.
 """
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import packsell as pk
 from repro.core import testmats
 from repro.kernels import ops
+from repro.kernels import packsell_spmv as _pk
+from repro.kernels import plan as kplan
 
 from . import common
 
@@ -26,6 +38,89 @@ def _vmem_bytes(mat: pk.PackSELLMatrix, sb: int, wb: int, full_x: bool,
     out_tile = 4 * sb * C
     x_bytes = 4 * (mat.m if full_x else 2 * hw)
     return pack_tile + scratch + out_tile + x_bytes
+
+
+# ---------------------------------------------------------------------------
+# Autotune: per-bucket (sb, wb) sweep recorded into the plan
+# ---------------------------------------------------------------------------
+
+
+def autotune(mat: pk.PackSELLMatrix, x: jnp.ndarray, *,
+             sbs=(2, 4, 8), wbs=(8, 16, 32), force: str = "full",
+             hw: int = 4096, interpret: bool | None = None,
+             repeats: int = 3):
+    """Sweep (sb, wb) per bucket shape and install the fastest tiling into
+    the matrix's cached SpMVPlan. Returns (plan, records); each record is
+    ``dict(bucket, sb, wb, seconds)``. No-op for the 'jnp' variant (no
+    tiles). Winners persist: every later ``ops.packsell_spmv`` /
+    ``plan.spmv`` call with the same plan key dispatches the tuned tiling.
+    """
+    plan = kplan.get_plan(mat, hw=hw, force=force, interpret=interpret)
+    if plan.variant == "jnp":
+        return plan, []
+    interp = plan.interpret
+    records, winners = [], []
+    for b, (pack, d0, maxcol) in enumerate(
+            zip(mat.packs, mat.d0s, mat.maxcols)):
+        best_tile, best_t = plan.tiles[b], np.inf
+        for sb in sbs:
+            for wb in wbs:
+                if plan.variant == "band":
+                    win = kplan.bucket_band_windows(d0, maxcol, sb, hw)
+                    if win is None:
+                        continue
+                    winj = jnp.asarray(win)
+
+                    def fn(x, pack=pack, d0=d0, winj=winj, sb=sb, wb=wb):
+                        return _pk.packsell_spmv_band_bucket(
+                            pack, d0, winj, x, codec_name=mat.codec_name,
+                            D=mat.D, hw=hw, sb=sb, wb=wb, interpret=interp)
+                else:
+                    def fn(x, pack=pack, d0=d0, sb=sb, wb=wb):
+                        return _pk.packsell_spmv_bucket(
+                            pack, d0, x, codec_name=mat.codec_name,
+                            D=mat.D, sb=sb, wb=wb, interpret=interp)
+
+                t = common.time_fn(jax.jit(fn), x, warmup=1,
+                                   repeats=repeats)
+                records.append(dict(bucket=b, sb=sb, wb=wb, seconds=t))
+                if t < best_t:
+                    best_tile, best_t = (sb, wb), t
+        winners.append(best_tile)
+    plan.retile(winners)
+    return plan, records
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: plan-cached single dispatch vs the seed per-call path
+# ---------------------------------------------------------------------------
+
+
+def _seed_percall_spmv(mat: pk.PackSELLMatrix, x: jnp.ndarray) -> jnp.ndarray:
+    """The pre-plan hot path, reproduced for comparison: re-run host-side
+    band planning, then the eager sequential-decode SpMV with one
+    full-length σ-scatter per width bucket (what the seed's solver matvecs
+    executed on every call)."""
+    kplan.band_plan(mat, 8, 4096)
+    return pk.packsell_spmv_jnp(mat, x, decode="loop")
+
+
+def bench_dispatch(scale: str) -> None:
+    suite = testmats.suite(scale)
+    for name, a in suite.items():
+        x = jnp.asarray(
+            np.random.default_rng(3).standard_normal(a.shape[1])
+            .astype(np.float32))
+        mat = pk.from_csr(a, C=32, sigma=256, D=15, codec="fp16")
+        plan = kplan.get_plan(mat)
+        t_cached = common.time_fn(lambda x: plan.spmv(mat, x), x,
+                                  warmup=2, repeats=5)
+        t_seed = common.time_fn(lambda x: _seed_percall_spmv(mat, x), x,
+                                warmup=1, repeats=3)
+        common.emit("dispatch", name,
+                    t_plan_cached_s=t_cached, t_seed_percall_s=t_seed,
+                    speedup=t_seed / t_cached, variant=plan.variant,
+                    cache=str(kplan.cache_stats()["hits"]) + "h")
 
 
 def run(scale: str | None = None) -> None:
@@ -48,3 +143,20 @@ def run(scale: str | None = None) -> None:
                 rec["max_abs_err_band"] = float(jnp.max(jnp.abs(yb - oracle)))
                 rec["vmem_band_kb"] = _vmem_bytes(mat, 8, 32, False) / 1024
             common.emit("kernel_check", f"{name}_{codec}_D{D}", **rec)
+
+    # autotune the full-x kernel tiling on a banded tiny matrix and report
+    # the per-bucket winners the plan will dispatch from now on
+    a = testmats.random_banded(2048, 40, 8, seed=11)
+    mat = pk.from_csr(a, C=128, sigma=256, D=15, codec="fp16",
+                      bucket_strategy="uniform")
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(a.shape[1])
+                    .astype(np.float32))
+    plan, records = autotune(mat, x, force="full")
+    for b, (sb, wb) in enumerate(plan.tiles):
+        trials = [r for r in records if r["bucket"] == b]
+        common.emit("autotune", f"banded_bucket{b}", sb=sb, wb=wb,
+                    best_s=min(r["seconds"] for r in trials),
+                    worst_s=max(r["seconds"] for r in trials),
+                    n_trials=len(trials))
+
+    bench_dispatch(scale or common.SCALE)

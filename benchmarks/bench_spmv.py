@@ -4,8 +4,17 @@ PackSELL (W=32, D=15, fp16 embed) vs SELL-fp16 (cuSELL analogue) vs
 CSR-fp16 (cuCSR analogue) vs COO-fp16, per structural matrix class.
 Reports effective GFLOPS (2·nnz / t, padding excluded — paper §5.1) and
 the PackSELL speedups of Fig. 8.
+
+Also benchmarks the execution-engine changes per matrix class — the
+scan-parallel cumsum decode vs the seed ``fori_loop`` word walk, and
+cold (plan build + trace) vs plan-cached dispatch — and records them in
+``BENCH_spmv.json`` at the repo root so later PRs have a perf trajectory.
 """
 from __future__ import annotations
+
+import json
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -15,14 +24,54 @@ from repro.core import packsell as pk
 from repro.core import sell as sl
 from repro.core import sparse as sps
 from repro.core import testmats
+from repro.kernels import plan as kplan
 
 from . import common
+
+_JSON_PATH = os.environ.get(
+    "REPRO_BENCH_SPMV_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_spmv.json"))
+
+
+def _bench_engine(name: str, a, x: jnp.ndarray) -> dict:
+    """Per-matrix engine numbers: the seed fori_loop spmv vs the engine's
+    cumsum-decode dispatch, and dispatch cold-vs-cached."""
+    mat = pk.from_csr(a, C=32, sigma=256, D=15, codec="fp16")
+
+    # seed decode path: the sequential fori_loop word walk with per-bucket
+    # σ-scatter, jitted with the matrix as an *argument* (not a closure
+    # constant, so XLA cannot constant-fold any of it away).
+    f_loop = jax.jit(lambda mat, x: pk.packsell_spmv_jnp(mat, x,
+                                                         decode="loop"))
+    t_loop = common.time_fn(f_loop, mat, x)
+
+    # engine scan path: cumsum column decode — run once at plan build (the
+    # plan's cursor cache) — then value-unpack + gather + reduce per call,
+    # with the fused inverse-permutation epilogue. Cold = plan build + first
+    # traced call; cached = steady-state single-dispatch calls.
+    kplan.clear_cache()
+    t0 = time.perf_counter()
+    plan = kplan.get_plan(mat)
+    jax.block_until_ready(plan.spmv(mat, x))
+    t_cold = time.perf_counter() - t0
+    t_scan = common.time_fn(lambda x: plan.spmv(mat, x), x)
+
+    rec = dict(
+        decode_loop_s=t_loop, decode_scan_s=t_scan,
+        decode_speedup=t_loop / t_scan,
+        dispatch_cold_s=t_cold, dispatch_cached_s=t_scan,
+        plan_variant=plan.variant,
+    )
+    common.emit("spmv_engine", name, **rec)
+    return rec
 
 
 def run(scale: str | None = None) -> None:
     scale = scale or common.SCALE
     suite = testmats.suite(scale)
     C, sigma = 32, 256
+    engine_rows = {}
     for name, a in suite.items():
         n, m = a.shape
         nnz = a.nnz
@@ -66,3 +115,16 @@ def run(scale: str | None = None) -> None:
             speedup_vs_csr=times["csr_fp16"] / times["packsell_fp16"],
             n_dummy=ps.n_dummy,
         )
+        engine_rows[name] = dict(n=n, nnz=nnz, **_bench_engine(name, a, x))
+
+    payload = dict(
+        scale=scale, backend=jax.default_backend(),
+        note=("cold = plan build + first traced dispatch; cached = "
+              "steady-state single-dispatch calls; decode timings are "
+              "jitted loop vs cumsum-scan column decode"),
+        cases=engine_rows,
+    )
+    with open(_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    print(f"[bench_spmv] wrote {_JSON_PATH}")

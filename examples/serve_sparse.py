@@ -19,6 +19,7 @@ def main():
 
     # --- 1) batched serving with continuous batching ---------------------
     eng = DecodeEngine(cfg, params, ServeConfig(slots=4, max_len=96))
+    eng.warmup()        # compile the pool decode step before traffic lands
     rng = np.random.default_rng(0)
     for _ in range(8):
         eng.submit(rng.integers(1, cfg.vocab, size=int(rng.integers(4, 12))),

@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite plus a benchmark smoke run.
+#   scripts/ci.sh          # tests + tiny spmv bench smoke
+#   scripts/ci.sh fast     # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "fast" ]]; then
+  echo "== smoke: benchmarks (spmv, tiny scale) =="
+  # writes artifacts/bench_results.json and BENCH_spmv.json; the tiny-scale
+  # JSON is a smoke artifact only — the checked-in BENCH_spmv.json is
+  # regenerated at small scale (make bench-spmv), so restore it afterwards.
+  cp BENCH_spmv.json /tmp/BENCH_spmv.json.orig 2>/dev/null || true
+  python -m benchmarks.run --only spmv --scale tiny
+  if [[ -f /tmp/BENCH_spmv.json.orig ]]; then
+    mv /tmp/BENCH_spmv.json.orig BENCH_spmv.json
+  fi
+fi
+
+echo "== ci.sh: OK =="

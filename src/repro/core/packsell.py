@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from functools import partial
 from typing import Sequence
 
@@ -121,64 +122,138 @@ class PackSELLMatrix:
         return packsell_spmv_jnp(self, x, compute_dtype)
 
 
+# Width-chunk for the scan decode: parallel within a chunk, cursor carried
+# across chunks. Bounds the [S, chunk, C] intermediates so wide buckets stay
+# cache-resident (the full-width scan loses its edge past a few hundred
+# words); buckets narrower than the chunk decode in one shot.
+_SCAN_CHUNK = int(os.environ.get("REPRO_SCAN_CHUNK", 128))
+
+
+def _bucket_cols_scan(pack, d0, codec, D):
+    """Scan-parallel column decode (DESIGN.md §2.4): cursors are prefix sums
+    of the deltas, so all [S, w, C] columns come out of ONE associative scan
+    (``cumsum`` over the width axis) instead of a sequential w-step word
+    walk. Returns (value [S, w, C], col int32 [S, w, C])."""
+    v, d = cd.unpack_words_jnp(pack, codec, D)
+    cols = d0[:, None, None].astype(jnp.int32) + \
+        jnp.cumsum(d.astype(jnp.int32), axis=1)
+    return v, cols
+
+
+def _bucket_spmv_scan(pack, d0, xc, codec, D, mlim, compute_dtype):
+    """One bucket's stored-row outputs [S, C] via the cumsum decode: per
+    width-chunk, one scan + one gather + one reduction (vs the loop decode's
+    w sequential gather steps)."""
+    S, w, C = pack.shape
+    carry = jnp.broadcast_to(d0[:, None], (S, C)).astype(jnp.int32)
+    t = jnp.zeros((S, C), dtype=compute_dtype)
+    for j0 in range(0, w, _SCAN_CHUNK):
+        pc = pack[:, j0:j0 + _SCAN_CHUNK, :]
+        v, d = cd.unpack_words_jnp(pc, codec, D)
+        cols = carry[:, None, :] + jnp.cumsum(d.astype(jnp.int32), axis=1)
+        xv = jnp.take(xc, jnp.minimum(cols, mlim).reshape(-1),
+                      axis=0).reshape(cols.shape)
+        t = t + jnp.sum(v.astype(compute_dtype) * xv, axis=1)
+        carry = cols[:, -1, :]
+    return t
+
+
+def _bucket_spmv_loop(pack, d0, xc, codec, D, mlim, compute_dtype):
+    """One bucket's stored-row outputs [S, C] via the sequential word walk
+    (the paper's per-word recurrence; kept as the oracle/benchmark baseline
+    for the scan decode)."""
+    S, w, C = pack.shape
+    c0 = jnp.broadcast_to(d0[:, None], (S, C)).astype(jnp.int32)
+    t0 = jnp.zeros((S, C), dtype=compute_dtype)
+
+    def body(j, carry):
+        c, t = carry
+        v, d = cd.unpack_words_jnp(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        xv = jnp.take(xc, jnp.minimum(c, mlim), axis=0)
+        t = t + v.astype(compute_dtype) * xv
+        return c, t
+
+    _, t = jax.lax.fori_loop(0, w, body, (c0, t0))
+    return t
+
+
+def _bucket_spmm_scan(pack, d0, xc, codec, D, mlim, compute_dtype):
+    """Multi-RHS bucket outputs [S, C, nb] via the chunked cumsum decode."""
+    S, w, C = pack.shape
+    nb = xc.shape[1]
+    carry = jnp.broadcast_to(d0[:, None], (S, C)).astype(jnp.int32)
+    t = jnp.zeros((S, C, nb), dtype=compute_dtype)
+    for j0 in range(0, w, _SCAN_CHUNK):
+        pc = pack[:, j0:j0 + _SCAN_CHUNK, :]
+        v, d = cd.unpack_words_jnp(pc, codec, D)
+        cols = carry[:, None, :] + jnp.cumsum(d.astype(jnp.int32), axis=1)
+        xv = jnp.take(xc, jnp.minimum(cols, mlim).reshape(-1),
+                      axis=0).reshape(cols.shape + (nb,))
+        t = t + jnp.sum(v.astype(compute_dtype)[..., None] * xv, axis=1)
+        carry = cols[:, -1, :]
+    return t
+
+
+def _bucket_spmm_loop(pack, d0, xc, codec, D, mlim, compute_dtype):
+    S, w, C = pack.shape
+    nb = xc.shape[1]
+    c0 = jnp.broadcast_to(d0[:, None], (S, C)).astype(jnp.int32)
+    t0 = jnp.zeros((S, C, nb), dtype=compute_dtype)
+
+    def body(j, carry):
+        c, t = carry
+        v, d = cd.unpack_words_jnp(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        xv = jnp.take(xc, jnp.minimum(c, mlim).reshape(-1),
+                      axis=0).reshape(S, C, nb)
+        t = t + v.astype(compute_dtype)[..., None] * xv
+        return c, t
+
+    _, t = jax.lax.fori_loop(0, w, body, (c0, t0))
+    return t
+
+
 def packsell_spmv_jnp(mat: PackSELLMatrix, x: jnp.ndarray,
-                      compute_dtype=jnp.float32) -> jnp.ndarray:
+                      compute_dtype=jnp.float32,
+                      decode: str = "scan") -> jnp.ndarray:
     """y = A @ x over the bucketed PackSELL layout (paper §4.4 algorithm).
 
     The per-word recurrence is exactly the paper's: unpack → advance column
     cursor by delta → fused multiply-accumulate. Padding and dummy words
     contribute v = 0 so no masking is required.
+
+    ``decode='scan'`` (default) decodes all column cursors in one
+    associative prefix-sum over the width axis; ``decode='loop'`` keeps the
+    sequential ``fori_loop`` word walk (benchmark baseline).
     """
+    body = {"scan": _bucket_spmv_scan, "loop": _bucket_spmv_loop}[decode]
     codec = mat.codec
-    D = mat.D
-    mlim = np.int32(mat.m - 1)
+    mlim = np.int32(max(mat.m - 1, 0))
     y = jnp.zeros((mat.n,), dtype=compute_dtype)
     xc = x.astype(compute_dtype)
     for pack, d0, outrow in zip(mat.packs, mat.d0s, mat.outrows):
-        S, w, C = pack.shape
-        c0 = jnp.broadcast_to(d0[:, None], (S, C)).astype(jnp.int32)
-        t0 = jnp.zeros((S, C), dtype=compute_dtype)
-
-        def body(j, carry, pack=pack):
-            c, t = carry
-            v, d = cd.unpack_words_jnp(pack[:, j, :], codec, D)
-            c = c + d.astype(jnp.int32)
-            xv = jnp.take(xc, jnp.minimum(c, mlim), axis=0)
-            t = t + v.astype(compute_dtype) * xv
-            return c, t
-
-        _, t = jax.lax.fori_loop(0, w, body, (c0, t0))
+        t = body(pack, d0, xc, codec, mat.D, mlim, compute_dtype)
         y = y.at[outrow].set(t.reshape(-1), mode="drop")
     return y
 
 
 def packsell_spmm_jnp(mat: PackSELLMatrix, x: jnp.ndarray,
-                      compute_dtype=jnp.float32) -> jnp.ndarray:
+                      compute_dtype=jnp.float32,
+                      decode: str = "scan") -> jnp.ndarray:
     """Y = A @ X for X: [m, nb] (multi-RHS SpMV; block-Krylov / batched
     pruned-weight serving). One pass over the packed words serves all nb
     right-hand sides — nb× arithmetic intensity vs nb separate SpMVs,
     which is exactly how the memory-bound regime wants it."""
+    body = {"scan": _bucket_spmm_scan, "loop": _bucket_spmm_loop}[decode]
     codec = mat.codec
-    D = mat.D
     nb = x.shape[1]
-    mlim = np.int32(mat.m - 1)
+    mlim = np.int32(max(mat.m - 1, 0))
     y = jnp.zeros((mat.n, nb), dtype=compute_dtype)
     xc = x.astype(compute_dtype)
     for pack, d0, outrow in zip(mat.packs, mat.d0s, mat.outrows):
         S, w, C = pack.shape
-        c0 = jnp.broadcast_to(d0[:, None], (S, C)).astype(jnp.int32)
-        t0 = jnp.zeros((S, C, nb), dtype=compute_dtype)
-
-        def body(j, carry, pack=pack):
-            c, t = carry
-            v, d = cd.unpack_words_jnp(pack[:, j, :], codec, D)
-            c = c + d.astype(jnp.int32)
-            xv = jnp.take(xc, jnp.minimum(c, mlim).reshape(-1),
-                          axis=0).reshape(S, C, nb)
-            t = t + v.astype(compute_dtype)[..., None] * xv
-            return c, t
-
-        _, t = jax.lax.fori_loop(0, w, body, (c0, t0))
+        t = body(pack, d0, xc, codec, mat.D, mlim, compute_dtype)
         y = y.at[outrow].set(t.reshape(S * C, nb), mode="drop")
     return y
 

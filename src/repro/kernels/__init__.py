@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the paper's compute hot-spot (SpMV).
 
-Modules: ``packsell_spmv`` (the paper's kernel, TPU-adapted), ``sell_spmv``
-(cuSELL-analogue baseline), ``ops`` (jit'd wrappers + kernel selection),
-``ref`` (pure-jnp oracles).
+Modules: ``packsell_spmv`` (the paper's kernels, TPU-adapted; single- and
+multi-RHS), ``sell_spmv`` (cuSELL-analogue baseline), ``plan`` (the SpMVPlan
+execution engine: cached plans, single-dispatch spmv/spmm, fused σ-scatter),
+``ops`` (thin public wrappers over the engine), ``ref`` (pure-jnp oracles),
+``compat`` (Pallas API shim across JAX versions).
 """
-from . import ops, ref  # noqa: F401
+from . import compat, ops, plan, ref  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pallas TPU API compatibility shim.
+
+The Pallas TPU surface renamed ``TPUCompilerParams`` → ``CompilerParams``
+and moved ``dimension_semantics`` from plain strings to a
+``GridDimensionSemantics`` enum across JAX releases. The kernels target
+whichever spelling the installed JAX provides, so the same source runs on
+JAX 0.4.x (this container ships 0.4.37) and on newer releases.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+_SEMANTICS_ENUM = getattr(pltpu, "GridDimensionSemantics", None)
+
+
+def dimension_semantics(*kinds: str) -> tuple:
+    """('parallel', 'arbitrary', ...) in whichever form this JAX accepts."""
+    if _SEMANTICS_ENUM is None:
+        return tuple(kinds)
+    return tuple(getattr(_SEMANTICS_ENUM, k.upper()) for k in kinds)
+
+
+def compiler_params(*kinds: str, **kw):
+    """Build the TPU compiler-params object with the given grid semantics."""
+    return _PARAMS_CLS(dimension_semantics=dimension_semantics(*kinds), **kw)

@@ -1,107 +1,80 @@
 """Jit'd public wrappers around the Pallas SpMV kernels.
 
-``packsell_spmv(mat, x)`` picks the band-windowed kernel automatically when
-every slice-block's column span fits the half-window budget (the paper's
-banded/RCM regime), otherwise runs the full-x-in-VMEM kernel, and finally
-applies the σ-permutation scatter (paper §4.4 line 15, done once outside the
-kernel exactly as implicit SELL-C-σ prescribes).
+``packsell_spmv(mat, x)`` routes through the :mod:`repro.kernels.plan`
+execution engine: a cached :class:`~repro.kernels.plan.SpMVPlan` carries the
+host-side decisions (band feasibility/windows, tile parameters, kernel
+variant) and a jitted dispatch function, so repeated matvecs never re-plan or
+re-trace. The σ-permutation scatter (paper §4.4 line 15) is applied once over
+the concatenated bucket outputs — or skipped entirely with ``permuted=True``.
 
-On non-TPU backends the kernels execute with ``interpret=True`` (kernel body
-evaluated in Python/XLA on CPU) — numerically identical, used by the test
-suite to validate against the pure-jnp oracles in ``ref.py``.
+Variant policy is explicit (logged in ``plan.policy``) and overridable via
+``force=`` or the ``REPRO_SPMV_POLICY`` env var (``auto|full|band|jnp``).
+
+On non-TPU backends the Pallas kernels execute with ``interpret=True``
+(kernel body evaluated in Python/XLA on CPU) — numerically identical, used by
+the test suite to validate against the pure-jnp oracles in ``ref.py``.
 """
 from __future__ import annotations
 
-import os
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.packsell import PackSELLMatrix
 from repro.core.sell import SELLMatrix
-from . import packsell_spmv as _pk
+from . import plan as _plan
 from . import sell_spmv as _sk
 
-# VMEM budget for a full x residency (fp32 elements)
-_FULL_X_LIMIT = int(os.environ.get("REPRO_FULL_X_LIMIT", 2_000_000))
-_DEF_HW = 4096  # default half-window (elements, multiple of 128)
+# Re-exported for band feasibility probing (tests, benchmarks).
+band_plan = _plan.band_plan
+_FULL_X_LIMIT = _plan._FULL_X_LIMIT
+_DEF_HW = _plan._DEF_HW
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def band_plan(mat: PackSELLMatrix, sb: int, hw: int):
-    """Host-side: per-bucket window ids (half-window units) if the band kernel
-    is feasible for every slice-block, else None.
-
-    Feasibility needs column locality *within each sb-slice block*; width
-    bucketing can interleave distant slices, so banded matrices should be
-    built with ``bucket_strategy='uniform'`` (contiguous slices) when the
-    band kernel is desired — cheap in the low-RSD regime the paper targets.
-    """
-    wins = []
-    for d0, maxcol in zip(mat.d0s, mat.maxcols):
-        d0 = np.asarray(d0)
-        mc = np.asarray(maxcol)
-        S = len(d0)
-        s_pad = -S % sb
-        if s_pad:
-            d0 = np.concatenate([d0, np.full(s_pad, d0[-1] if S else 0,
-                                             np.int32)])
-            mc = np.concatenate([mc, np.full(s_pad, mc[-1] if S else 0,
-                                             np.int32)])
-        d0b = d0.reshape(-1, sb).min(axis=1)
-        mcb = mc.reshape(-1, sb).max(axis=1)
-        win = d0b // hw
-        if np.any(mcb - win * hw >= 2 * hw):
-            return None
-        wins.append(win.astype(np.int32))
-    return wins
-
-
 def packsell_spmv(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
                   wb: int = 32, hw: int = _DEF_HW,
                   interpret: bool | None = None,
-                  force: str | None = None) -> jnp.ndarray:
-    """y = A @ x via the Pallas kernel. ``force`` in {None,'full','band'}."""
-    interpret = _interpret_default() if interpret is None else interpret
-    wins = None
-    if force != "full" and mat.m > 0:
-        wins = band_plan(mat, sb, hw)
-    if force == "band" and wins is None:
-        raise ValueError("band kernel infeasible for this matrix/hw")
-    use_band = wins is not None and (force == "band" or mat.m > _FULL_X_LIMIT
-                                     or force is None)
-    # default policy: prefer band when feasible (it bounds VMEM); tests
-    # exercise both paths explicitly via `force`.
-    y = jnp.zeros((mat.n,), dtype=jnp.float32)
-    for b, (pack, d0, outrow) in enumerate(
-            zip(mat.packs, mat.d0s, mat.outrows)):
-        if use_band:
-            t = _pk.packsell_spmv_band_bucket(
-                pack, d0, jnp.asarray(wins[b]), x, codec_name=mat.codec_name,
-                D=mat.D, hw=hw, sb=sb, wb=wb, interpret=interpret)
-        else:
-            if mat.m > _FULL_X_LIMIT:
-                raise ValueError(
-                    f"x too large for VMEM residency ({mat.m}) and band "
-                    f"kernel infeasible; increase hw or use jnp path")
-            t = _pk.packsell_spmv_bucket(
-                pack, d0, x, codec_name=mat.codec_name, D=mat.D, sb=sb,
-                wb=wb, interpret=interpret)
-        y = y.at[outrow].set(t.reshape(-1), mode="drop")
-    return y
+                  force: str | None = None,
+                  permuted: bool = False) -> jnp.ndarray:
+    """y = A @ x via the plan engine (single jitted dispatch).
+
+    ``force`` in {None, 'full', 'band', 'jnp'} pins the kernel variant;
+    ``permuted=True`` returns y in stored-row order (no σ-scatter).
+    """
+    plan = _plan.get_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
+                          interpret=interpret)
+    return plan.spmv(mat, x, permuted=permuted)
+
+
+def packsell_spmm(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
+                  wb: int = 32, hw: int = _DEF_HW,
+                  interpret: bool | None = None,
+                  force: str | None = None,
+                  permuted: bool = False) -> jnp.ndarray:
+    """Y = A @ X for X: [m, nb] via the multi-RHS kernel (one pass over the
+    packed words for all nb right-hand sides)."""
+    if x.ndim != 2:
+        raise ValueError(f"packsell_spmm expects x of shape [m, nb], got "
+                         f"{x.shape}; use packsell_spmv for a single RHS")
+    plan = _plan.get_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
+                          interpret=interpret)
+    return plan.spmm(mat, x, permuted=permuted)
 
 
 def sell_spmv(mat: SELLMatrix, x: jnp.ndarray, *, sb: int = 8, wb: int = 32,
               interpret: bool | None = None) -> jnp.ndarray:
     interpret = _interpret_default() if interpret is None else interpret
-    y = jnp.zeros((mat.n,), dtype=jnp.float32)
-    for val, col, outrow in zip(mat.vals, mat.cols, mat.outrows):
+    parts = []
+    for val, col in zip(mat.vals, mat.cols):
         t = _sk.sell_spmv_bucket(val, col, x, sb=sb, wb=wb,
                                  interpret=interpret)
-        y = y.at[outrow].set(t.reshape(-1), mode="drop")
-    return y
+        parts.append(t.reshape(-1))
+    y = jnp.zeros((mat.n,), dtype=jnp.float32)
+    if not parts:
+        return y
+    t_cat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    outrow_cat = jnp.concatenate([o.reshape(-1) for o in mat.outrows])
+    return y.at[outrow_cat].set(t_cat, mode="drop")

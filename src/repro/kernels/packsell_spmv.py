@@ -30,6 +30,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import codecs as cd
+from . import compat
 
 
 def _unpack(words: jnp.ndarray, codec: cd.Codec, D: int):
@@ -145,13 +146,95 @@ def packsell_spmv_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
         scratch_shapes=[pltpu.VMEM((sb, C), jnp.int32),
                         pltpu.VMEM((sb, C), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=compat.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
         name=f"packsell_spmv_{codec_name}_D{D}",
     )(d0, pack, xp)
     return y[:S]
+
+
+def _kernel_spmm(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
+                 codec_name: str, D: int, nw: int, wb: int):
+    """Multi-RHS variant of :func:`_kernel_full`: one walk over the packed
+    words feeds all nb right-hand sides (nb× arithmetic intensity — the
+    block-Krylov / batched-serving regime)."""
+    codec = cd.make_codec(codec_name)
+    wi = pl.program_id(1)
+
+    @pl.when(wi == 0)
+    def _init():
+        c_ref[...] = jnp.broadcast_to(
+            d0_ref[...][:, None], c_ref.shape).astype(jnp.int32)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    c = c_ref[...]
+    acc = acc_ref[...]
+    pack = pack_ref[...]            # [SB, WB, C] uint32
+    x = x_ref[...]                  # [m_pad, nb] f32
+    mlim = np.int32(x.shape[0] - 1)
+    nb = x.shape[1]
+
+    def body(j, carry):
+        c, acc = carry
+        v, d = _unpack(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1),
+                      axis=0).reshape(c.shape + (nb,))
+        return c, acc + v.astype(jnp.float32)[..., None] * xv
+
+    c, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
+    c_ref[...] = c
+    acc_ref[...] = acc
+
+    @pl.when(wi == nw - 1)
+    def _fin():
+        y_ref[...] = acc
+
+
+def packsell_spmm_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
+                         *, codec_name: str, D: int, sb: int = 8,
+                         wb: int = 32, interpret: bool = True) -> jnp.ndarray:
+    """Run the multi-RHS full-x kernel over one width bucket.
+
+    ``x``: [m, nb]. Returns Y in stored-row order, shape [S, C, nb] float32;
+    the caller applies the σ-permutation scatter once (plan.py epilogue).
+    ``nb`` is padded to a sublane multiple internally; real-TPU deployments
+    want nb a multiple of the 128-lane VREG width for full effect.
+    """
+    S, w, C = pack.shape
+    nb = x.shape[1]
+    s_pad = -S % sb
+    w_pad = -w % wb
+    if s_pad or w_pad:
+        pack = jnp.pad(pack, ((0, s_pad), (0, w_pad), (0, 0)))
+        d0 = jnp.pad(d0, (0, s_pad))
+    Sp, wp, _ = pack.shape
+    m_pad = -x.shape[0] % 128
+    nb_pad = -nb % 8
+    xp = jnp.pad(x.astype(jnp.float32), ((0, m_pad), (0, nb_pad)))
+    nbp = xp.shape[1]
+    nw = wp // wb
+    grid = (Sp // sb, nw)
+
+    kernel = functools.partial(_kernel_spmm, codec_name=codec_name, D=D,
+                               nw=nw, wb=wb)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb,), lambda si, wi: (si,)),
+            pl.BlockSpec((sb, wb, C), lambda si, wi: (si, wi, 0)),
+            pl.BlockSpec((xp.shape[0], nbp), lambda si, wi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((sb, C, nbp), lambda si, wi: (si, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, C, nbp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((sb, C), jnp.int32),
+                        pltpu.VMEM((sb, C, nbp), jnp.float32)],
+        compiler_params=compat.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+        name=f"packsell_spmm_{codec_name}_D{D}",
+    )(d0, pack, xp)
+    return y[:S, :, :nb]
 
 
 def packsell_spmv_band_bucket(pack: jnp.ndarray, d0: jnp.ndarray,
@@ -196,9 +279,7 @@ def packsell_spmv_band_bucket(pack: jnp.ndarray, d0: jnp.ndarray,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=compat.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
         name=f"packsell_spmv_band_{codec_name}_D{D}",
     )(win, d0, pack, xp, xp)

@@ -1,0 +1,489 @@
+"""SpMVPlan execution engine: cached plans, single-dispatch SpMV (DESIGN.md §2.4).
+
+The paper's speedups live or die on SpMV being launch- and memory-lean; the
+per-call path used to re-run host-side band planning, re-trace the kernels,
+and issue one full-length σ-scatter per width bucket on every matvec. This
+module moves every host-side decision out of the hot path:
+
+* :func:`get_plan` builds a :class:`SpMVPlan` once per matrix — band-window
+  feasibility, per-bucket tile parameters ``(sb, wb)``, half-window ``hw``,
+  and kernel-variant selection — and caches it keyed on
+  ``(id(mat), sb, wb, hw, policy, interpret)``. Repeated matvecs (CG/GMRES
+  inner loops, serving ticks) hit the cache and the plan's jitted dispatch
+  function: zero host planning, zero re-tracing.
+* The epilogue is fused: stored-row bucket outputs are concatenated and ONE
+  σ-permutation step produces y — instead of one full-length scatter per
+  bucket. For concrete plans even that is a *gather* by the plan-precomputed
+  inverse permutation (XLA CPU scatters are serial; the gather is ~100×
+  cheaper). ``permuted=True`` skips it entirely, returning stored-row order
+  for solvers that permute their other operands once at setup
+  (:func:`SpMVPlan.to_stored` / :func:`SpMVPlan.from_stored` round-trip the
+  σ-permutation; see ``solvers/cg.py::jacobi_pcg_stored``).
+* For the ``'jnp'`` variant the plan also carries a **cursor cache**: the
+  column indices (prefix sums of the word deltas, clamped) are decoded once
+  at build time, so each dispatch is value-unpack + gather + reduce with no
+  runtime cumsum and no sequential word walk. Costs one extra int32 per
+  stored word (≈ pack-sized); disable with ``REPRO_PLAN_CURSOR_CACHE=0``.
+* Variant selection is explicit and logged (:attr:`SpMVPlan.policy`):
+
+  - ``'band'``  — band-windowed Pallas kernel (bounded VMEM; RCM/banded
+    regime),
+  - ``'full'``  — full-x-in-VMEM Pallas kernel,
+  - ``'jnp'``   — scan-parallel cumsum decode in plain XLA (the fast path on
+    non-TPU backends, where the Pallas kernels only run in interpret mode).
+
+  The automatic choice can be overridden per call (``force=``) or globally
+  via the ``REPRO_SPMV_POLICY`` env var (``auto|full|band|jnp``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import weakref
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codecs as cd
+from repro.core import packsell as pk
+from repro.core.packsell import PackSELLMatrix
+from . import packsell_spmv as _pk
+
+_DEF_HW = 4096              # default half-window (elements, multiple of 128)
+_FULL_X_LIMIT = int(os.environ.get("REPRO_FULL_X_LIMIT", 2_000_000))
+_BAND_MIN_M = int(os.environ.get("REPRO_BAND_MIN_M", 65_536))
+_CURSOR_CACHE = os.environ.get("REPRO_PLAN_CURSOR_CACHE", "1") != "0"
+
+_POLICIES = ("auto", "full", "band", "jnp")
+
+
+def _env_policy() -> str:
+    pol = os.environ.get("REPRO_SPMV_POLICY", "auto").lower()
+    if pol not in _POLICIES:
+        raise ValueError(f"REPRO_SPMV_POLICY={pol!r} not in {_POLICIES}")
+    return pol
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _is_traced(mat: PackSELLMatrix) -> bool:
+    leaves = jax.tree_util.tree_leaves(
+        (mat.packs, mat.d0s, mat.outrows, mat.maxcols))
+    return any(isinstance(leaf, jax.core.Tracer) for leaf in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Band-window planning (host-side, per bucket)
+# ---------------------------------------------------------------------------
+
+
+def bucket_band_windows(d0, maxcol, sb: int, hw: int):
+    """Per-slice-block window ids (half-window units) for one bucket, or
+    None when some slice-block's column span exceeds the 2*hw window."""
+    d0 = np.asarray(d0)
+    mc = np.asarray(maxcol)
+    S = len(d0)
+    s_pad = -S % sb
+    if s_pad:
+        d0 = np.concatenate([d0, np.full(s_pad, d0[-1] if S else 0, np.int32)])
+        mc = np.concatenate([mc, np.full(s_pad, mc[-1] if S else 0, np.int32)])
+    d0b = d0.reshape(-1, sb).min(axis=1)
+    mcb = mc.reshape(-1, sb).max(axis=1)
+    win = d0b // hw
+    if np.any(mcb - win * hw >= 2 * hw):
+        return None
+    return win.astype(np.int32)
+
+
+def band_plan(mat: PackSELLMatrix, sb: int, hw: int):
+    """Host-side: per-bucket window ids if the band kernel is feasible for
+    every slice-block, else None.
+
+    Feasibility needs column locality *within each sb-slice block*; width
+    bucketing can interleave distant slices, so banded matrices should be
+    built with ``bucket_strategy='uniform'`` (contiguous slices) when the
+    band kernel is desired — cheap in the low-RSD regime the paper targets.
+    """
+    wins = []
+    for d0, maxcol in zip(mat.d0s, mat.maxcols):
+        win = bucket_band_windows(d0, maxcol, sb, hw)
+        if win is None:
+            return None
+        wins.append(win)
+    return wins
+
+
+# ---------------------------------------------------------------------------
+# Cursor-cached decode (jnp variant, concrete plans)
+# ---------------------------------------------------------------------------
+
+
+def _cursor_spmv(pack, cols, xc, codec, D):
+    """One bucket via the plan's cursor cache: value unpack + one gather +
+    one reduction — no runtime cumsum, no sequential word walk."""
+    S, w, C = pack.shape
+    v, _ = cd.unpack_words_jnp(pack, codec, D)
+    xv = jnp.take(xc, cols.reshape(-1), axis=0).reshape(S, w, C)
+    return jnp.sum(v.astype(jnp.float32) * xv, axis=1)
+
+
+def _cursor_spmm(pack, cols, xc, codec, D):
+    """Multi-RHS cursor-cached bucket; width-chunked to bound the
+    [S, chunk, C, nb] gather intermediate."""
+    S, w, C = pack.shape
+    nb = xc.shape[1]
+    chunk = pk._SCAN_CHUNK
+    v, _ = cd.unpack_words_jnp(pack, codec, D)
+    acc = jnp.zeros((S, C, nb), jnp.float32)
+    for j0 in range(0, w, chunk):
+        vc = v[:, j0:j0 + chunk, :].astype(jnp.float32)
+        cc = cols[:, j0:j0 + chunk, :]
+        xv = jnp.take(xc, cc.reshape(-1), axis=0).reshape(cc.shape + (nb,))
+        acc = acc + jnp.sum(vc[..., None] * xv, axis=1)
+    return acc
+
+
+def _build_cursor_cache(mat: PackSELLMatrix):
+    """Decode every bucket's column cursors once (host-side numpy): the
+    prefix-sum of word deltas, clamped to [0, m-1] exactly as the runtime
+    decode would."""
+    codec = mat.codec
+    mlim = max(mat.m - 1, 0)
+    cols = []
+    for pack, d0 in zip(mat.packs, mat.d0s):
+        words = np.asarray(pack)
+        S, w, C = words.shape
+        _, d, _ = cd.unpack_words_np(words.reshape(-1), codec, mat.D)
+        c = np.asarray(d0)[:, None, None].astype(np.int64) + \
+            np.cumsum(d.reshape(S, w, C).astype(np.int64), axis=1)
+        cols.append(jnp.asarray(np.minimum(c, mlim).astype(np.int32)))
+    return tuple(cols)
+
+
+def _build_inverse_perm(mat: PackSELLMatrix, outrow_cat: jnp.ndarray):
+    """inv[r] = stored slot of original row r (each row has exactly one),
+    turning the σ-scatter epilogue into a gather."""
+    outrow_np = np.asarray(outrow_cat)
+    valid = outrow_np < mat.n
+    inv = np.zeros(mat.n, np.int32)
+    inv[outrow_np[valid]] = np.nonzero(valid)[0].astype(np.int32)
+    return jnp.asarray(inv)
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpMVPlan:
+    """Everything host-side the hot path would otherwise recompute.
+
+    Static decisions (variant, tiles, windows, the concatenated σ-scatter
+    map) are fixed at build time; :meth:`spmv` / :meth:`spmm` dispatch
+    straight into a cached jitted executable.
+    """
+
+    variant: str                      # 'band' | 'full' | 'jnp'
+    policy: str                       # human-readable decision log
+    hw: int
+    interpret: bool
+    tiles: tuple                      # per-bucket (sb, wb)
+    wins: Optional[tuple]             # per-bucket int32 windows (band only)
+    outrow_cat: jnp.ndarray           # int32 [total_stored] fused scatter map
+    n: int
+    m: int
+    total_stored: int
+    inv_cat: Optional[jnp.ndarray] = None   # int32 [n] inverse σ-permutation
+    cols: Optional[tuple] = None      # per-bucket int32 [S, w, C] cursor cache
+    ephemeral: bool = False           # built under tracing: never cached/jitted
+    _matref: Optional[weakref.ref] = None
+    _fns: dict = dataclasses.field(default_factory=dict)
+
+    # -- σ-permutation helpers (stored-row order <-> original order) -------
+    def _unpermute(self, t, inv_cat, outrow_cat):
+        if inv_cat is not None:
+            # the σ-permutation applied as a gather by the precomputed
+            # inverse map (equals the scatter bit-for-bit: each original row
+            # has exactly one stored slot)
+            return jnp.take(t, inv_cat, axis=0)
+        shape = (self.n,) + tuple(t.shape[1:])
+        return jnp.zeros(shape, t.dtype).at[outrow_cat].set(t, mode="drop")
+
+    def from_stored(self, t: jnp.ndarray) -> jnp.ndarray:
+        """Map a stored-row-order vector [total_stored] (or
+        [total_stored, nb]) back to original row order [n] ([n, nb])."""
+        return self._unpermute(t, self.inv_cat, self.outrow_cat)
+
+    def to_stored(self, v: jnp.ndarray) -> jnp.ndarray:
+        """Gather an original-row-order vector into stored-row order;
+        σ-padding slots become 0 (they stay 0 through SpMV, so stored-space
+        dot products equal original-space ones)."""
+        safe = jnp.minimum(self.outrow_cat, max(self.n - 1, 0))
+        val = jnp.take(v, safe, axis=0)
+        mask = (self.outrow_cat < self.n)
+        mask = mask.reshape((-1,) + (1,) * (v.ndim - 1))
+        return jnp.where(mask, val, 0).astype(v.dtype)
+
+    # -- execution ---------------------------------------------------------
+    def _device_operands(self) -> dict:
+        """Plan-held device buffers, passed as jit *arguments* so XLA never
+        constant-folds them into (or duplicates them inside) the
+        executable."""
+        return {"cols": self.cols, "inv": self.inv_cat,
+                "outrow": self.outrow_cat}
+
+    def _execute(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
+                 permuted: bool) -> jnp.ndarray:
+        xc = x.astype(jnp.float32)
+        parts = []
+        for b, (pack, d0) in enumerate(zip(mat.packs, mat.d0s)):
+            sb, wb = self.tiles[b]
+            if self.variant == "band":
+                t = _pk.packsell_spmv_band_bucket(
+                    pack, d0, jnp.asarray(self.wins[b]), x,
+                    codec_name=mat.codec_name, D=mat.D, hw=self.hw,
+                    sb=sb, wb=wb, interpret=self.interpret)
+            elif self.variant == "full":
+                t = _pk.packsell_spmv_bucket(
+                    pack, d0, x, codec_name=mat.codec_name, D=mat.D,
+                    sb=sb, wb=wb, interpret=self.interpret)
+            elif dev["cols"] is not None:
+                t = _cursor_spmv(pack, dev["cols"][b], xc, mat.codec, mat.D)
+            else:
+                t = pk._bucket_spmv_scan(
+                    pack, d0, xc, mat.codec, mat.D,
+                    np.int32(max(mat.m - 1, 0)), jnp.float32)
+            parts.append(t.reshape(-1))
+        if not parts:
+            t_cat = jnp.zeros((0,), jnp.float32)
+        else:
+            t_cat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        if permuted:
+            return t_cat
+        return self._unpermute(t_cat, dev["inv"], dev["outrow"])
+
+    def _execute_mm(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
+                    permuted: bool) -> jnp.ndarray:
+        nb = x.shape[1]
+        xc = x.astype(jnp.float32)
+        parts = []
+        for b, (pack, d0) in enumerate(zip(mat.packs, mat.d0s)):
+            sb, wb = self.tiles[b]
+            if self.variant in ("band", "full"):
+                # multi-RHS currently ships the full-x kernel only; a banded
+                # plan falls back to it (x·nb residency checked in spmm()).
+                t = _pk.packsell_spmm_bucket(
+                    pack, d0, x, codec_name=mat.codec_name, D=mat.D,
+                    sb=sb, wb=wb, interpret=self.interpret)
+            elif dev["cols"] is not None:
+                t = _cursor_spmm(pack, dev["cols"][b], xc, mat.codec, mat.D)
+            else:
+                t = pk._bucket_spmm_scan(
+                    pack, d0, xc, mat.codec, mat.D,
+                    np.int32(max(mat.m - 1, 0)), jnp.float32)
+            parts.append(t.reshape(-1, nb))
+        if not parts:
+            t_cat = jnp.zeros((0, nb), jnp.float32)
+        else:
+            t_cat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        if permuted:
+            return t_cat
+        return self._unpermute(t_cat, dev["inv"], dev["outrow"])
+
+    def _dispatch(self, kind: str):
+        fn = self._fns.get(kind)
+        if fn is None:
+            impl = self._execute if kind == "spmv" else self._execute_mm
+            fn = jax.jit(impl, static_argnums=(3,))
+            self._fns[kind] = fn
+        return fn
+
+    def spmv(self, mat: PackSELLMatrix, x: jnp.ndarray, *,
+             permuted: bool = False) -> jnp.ndarray:
+        """y = A @ x — one jitted dispatch; ``permuted=True`` returns y in
+        stored-row order, skipping the σ-permutation epilogue entirely."""
+        if self.ephemeral or _is_traced(mat):
+            return self._execute(mat, self._device_operands(), x, permuted)
+        return self._dispatch("spmv")(mat, self._device_operands(), x,
+                                      permuted)
+
+    def spmm(self, mat: PackSELLMatrix, x: jnp.ndarray, *,
+             permuted: bool = False) -> jnp.ndarray:
+        """Y = A @ X for X: [m, nb] via the multi-RHS kernel."""
+        if self.variant in ("band", "full") and self.m > _FULL_X_LIMIT:
+            # spmm has no banded-window variant yet: the whole [m, nb] x
+            # block must be VMEM-resident, so the full-x limit applies even
+            # to band plans (which exist precisely because m is large).
+            raise ValueError(
+                f"x too large for multi-RHS VMEM residency (m={self.m} > "
+                f"REPRO_FULL_X_LIMIT={_FULL_X_LIMIT}); use force='jnp'")
+        if self.ephemeral or _is_traced(mat):
+            return self._execute_mm(mat, self._device_operands(), x,
+                                    permuted)
+        return self._dispatch("spmm")(mat, self._device_operands(), x,
+                                      permuted)
+
+    # -- autotune hook -----------------------------------------------------
+    def retile(self, tiles) -> None:
+        """Install per-bucket (sb, wb) winners (benchmarks/bench_kernels.py
+        autotune). Band windows are recomputed for the new sb's; jitted
+        dispatch functions are invalidated and re-trace on next call."""
+        tiles = tuple((int(sb), int(wb)) for sb, wb in tiles)
+        if len(tiles) != len(self.tiles):
+            raise ValueError(f"need {len(self.tiles)} (sb, wb) pairs")
+        if self.variant == "band":
+            mat = self._matref() if self._matref is not None else None
+            if mat is None:
+                raise ValueError("cannot retile a band plan: matrix is gone")
+            wins = []
+            for (sb, _), d0, maxcol in zip(tiles, mat.d0s, mat.maxcols):
+                win = bucket_band_windows(d0, maxcol, sb, self.hw)
+                if win is None:
+                    raise ValueError(
+                        f"band kernel infeasible at sb={sb}, hw={self.hw}")
+                wins.append(win)
+            self.wins = tuple(wins)
+        self.tiles = tiles
+        self._fns.clear()
+
+
+# ---------------------------------------------------------------------------
+# Plan construction + cache
+# ---------------------------------------------------------------------------
+
+
+def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
+               hw: int = _DEF_HW, force: str | None = None,
+               interpret: bool | None = None) -> SpMVPlan:
+    """Host-side plan construction (the slow path — run once per matrix)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    policy = (force or _env_policy()).lower()
+    if policy not in _POLICIES:
+        raise ValueError(f"force={policy!r} not in {_POLICIES}")
+    n_buckets = len(mat.packs)
+    tiles = tuple((sb, wb) for _ in range(n_buckets))
+
+    if _is_traced(mat):
+        # Under jit tracing the host cannot inspect column metadata: band
+        # feasibility is undecidable, so fall back to a non-band variant and
+        # never cache (the plan holds tracers).
+        if policy == "band":
+            raise ValueError(
+                "force='band' requires a concrete matrix (host-side window "
+                "planning); build the plan outside jit via get_plan(mat)")
+        variant = "jnp" if policy in ("auto", "jnp") else "full"
+        return SpMVPlan(
+            variant=variant,
+            policy=f"{variant} (tracing: host-side band planning "
+                   f"unavailable; policy={policy})",
+            hw=hw, interpret=interpret, tiles=tiles, wins=None,
+            outrow_cat=jnp.concatenate([o.reshape(-1) for o in mat.outrows])
+            if n_buckets else jnp.zeros((0,), jnp.int32),
+            n=mat.n, m=mat.m,
+            total_stored=sum(int(p.shape[0]) * int(p.shape[2])
+                             for p in mat.packs),
+            ephemeral=True)
+
+    wins = None
+    if policy in ("auto", "band") and mat.m > 0:
+        wins = band_plan(mat, sb, hw)
+
+    if policy == "band":
+        if wins is None:
+            raise ValueError("band kernel infeasible for this matrix/hw")
+        variant, reason = "band", "forced via " + (
+            f"force={force!r}" if force else "REPRO_SPMV_POLICY")
+    elif policy == "full":
+        variant, reason = "full", "forced via " + (
+            f"force={force!r}" if force else "REPRO_SPMV_POLICY")
+    elif policy == "jnp":
+        variant, reason = "jnp", "forced via " + (
+            f"force={force!r}" if force else "REPRO_SPMV_POLICY")
+    else:  # auto
+        if interpret:
+            variant = "jnp"
+            reason = ("auto: non-TPU backend — Pallas would run in "
+                      "interpret mode, scan-decode XLA path is faster")
+        elif wins is not None and mat.m >= _BAND_MIN_M:
+            variant = "band"
+            reason = (f"auto: band feasible and m={mat.m} >= "
+                      f"REPRO_BAND_MIN_M={_BAND_MIN_M} (bounds VMEM)")
+        elif mat.m <= _FULL_X_LIMIT:
+            variant = "full"
+            reason = (f"auto: m={mat.m} fits VMEM residency"
+                      + ("" if wins is None else
+                         f" (band feasible but m < REPRO_BAND_MIN_M="
+                         f"{_BAND_MIN_M}: window bookkeeping not worth it)"))
+        elif wins is not None:
+            variant = "band"
+            reason = f"auto: m={mat.m} > REPRO_FULL_X_LIMIT={_FULL_X_LIMIT}"
+        else:
+            raise ValueError(
+                f"x too large for VMEM residency (m={mat.m}) and band "
+                f"kernel infeasible; increase hw or force='jnp'")
+    if variant == "full" and mat.m > _FULL_X_LIMIT:
+        raise ValueError(
+            f"x too large for VMEM residency (m={mat.m}); use band/jnp")
+    if variant != "band":
+        wins = None
+
+    outrow_cat = (jnp.concatenate([o.reshape(-1) for o in mat.outrows])
+                  if n_buckets else jnp.zeros((0,), jnp.int32))
+    return SpMVPlan(
+        variant=variant, policy=f"{variant} ({reason})", hw=hw,
+        interpret=interpret, tiles=tiles,
+        wins=None if wins is None else tuple(wins),
+        outrow_cat=outrow_cat, n=mat.n, m=mat.m,
+        total_stored=sum(int(p.shape[0]) * int(p.shape[2])
+                         for p in mat.packs),
+        inv_cat=_build_inverse_perm(mat, outrow_cat),
+        cols=(_build_cursor_cache(mat)
+              if variant == "jnp" and _CURSOR_CACHE else None),
+        _matref=weakref.ref(mat))
+
+
+_PLANS: dict = {}
+_STATS = {"hits": 0, "misses": 0, "evicted": 0}
+
+
+def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
+             hw: int = _DEF_HW, force: str | None = None,
+             interpret: bool | None = None) -> SpMVPlan:
+    """Cached plan lookup. Keyed on ``(id(mat), sb, wb, hw, policy,
+    interpret)``; entries are invalidated (weakref) when the matrix dies, so
+    a recycled ``id()`` can never alias a stale plan."""
+    interpret = _interpret_default() if interpret is None else interpret
+    policy = (force or _env_policy()).lower()
+    if _is_traced(mat):
+        # tracer matrices are per-trace objects: build ephemeral, skip cache
+        return build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
+                          interpret=interpret)
+    key = (id(mat), sb, wb, hw, policy, interpret)
+    ent = _PLANS.get(key)
+    if ent is not None and ent[0]() is mat:
+        _STATS["hits"] += 1
+        return ent[1]
+    plan = build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
+                      interpret=interpret)
+
+    def _drop(_ref, key=key):
+        if _PLANS.pop(key, None) is not None:
+            _STATS["evicted"] += 1
+
+    _PLANS[key] = (weakref.ref(mat, _drop), plan)
+    _STATS["misses"] += 1
+    return plan
+
+
+def cache_stats() -> dict:
+    return dict(_STATS, size=len(_PLANS))
+
+
+def clear_cache() -> None:
+    _PLANS.clear()
+    _STATS.update(hits=0, misses=0, evicted=0)

@@ -20,6 +20,7 @@ import numpy as np
 import scipy.sparse as sp
 
 from repro.core import packsell as pk
+from repro.kernels import plan as kplan
 
 
 def prune_magnitude(w: np.ndarray, density: float) -> np.ndarray:
@@ -56,15 +57,33 @@ class PackSELLLinear:
         return cls(mat=mat, density=density,
                    dense_bytes=w.size * np.dtype(np.float32).itemsize)
 
+    @property
+    def plan(self) -> kplan.SpMVPlan:
+        """The cached SpMVPlan (built once, shared by every decode tick)."""
+        return kplan.get_plan(self.mat)
+
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
-        """x: [in] or [..., in] → [..., out]. Batched inputs go through the
-        SpMM path: one pass over the packed words for the whole batch."""
+        """x: [in] or [..., in] → [..., out]. Dispatches through the cached
+        SpMVPlan: single jitted call per tick, no host-side re-planning.
+        Batched inputs go through the multi-RHS SpMM path: one pass over
+        the packed words for the whole batch."""
+        plan = self.plan
         if x.ndim == 1:
-            return pk.packsell_spmv_jnp(self.mat, x)
+            return plan.spmv(self.mat, x)
         lead = x.shape[:-1]
         flat = x.reshape(-1, x.shape[-1])
-        y = pk.packsell_spmm_jnp(self.mat, flat.T).T
+        y = plan.spmm(self.mat, flat.T).T
         return y.reshape(*lead, -1)
+
+    def warmup(self, batch: int = 0) -> kplan.SpMVPlan:
+        """Build the plan and trace the dispatch (spmv; plus spmm at the
+        given batch size) so the first serving tick pays nothing."""
+        x = jnp.zeros((self.mat.m,), jnp.float32)
+        jax.block_until_ready(self(x))
+        if batch:
+            xb = jnp.zeros((batch, self.mat.m), jnp.float32)
+            jax.block_until_ready(self(xb))
+        return self.plan
 
     def memory_ratio(self) -> float:
         """Stored bytes vs the dense fp32 weight."""

@@ -1,4 +1,5 @@
 """Parallelism substrate: logical shardings, mesh helpers, collectives."""
 from .sharding import (batch_axes, constrain, constrain_batch, current_mesh,  # noqa: F401
                        filter_spec, named_sharding, sanitize_spec,
-                       tree_shardings, tree_shardings_shaped)
+                       shard_map_compat, tree_shardings,
+                       tree_shardings_shaped)

@@ -87,6 +87,25 @@ class DecodeEngine:
                                static_argnums=(3,))
 
     # ------------------------------------------------------------------
+    def warmup(self, prompt_lens=(), sparse_layers=()) -> None:
+        """Move compilation out of the serving hot path (the engine analogue
+        of the SpMVPlan rule: host-side decisions happen at setup, ticks are
+        single dispatches). Compiles the pool decode step and the given
+        prefill prompt lengths, and pre-builds the cached SpMV plans of any
+        PackSELL layers (``models.sparse_linear.PackSELLLinear``) so the
+        first real tick pays neither tracing nor plan construction."""
+        tokens = jnp.zeros((self.scfg.slots, 1), jnp.int32)
+        logits, _ = self._decode(self.params, tokens, self.cache)
+        jax.block_until_ready(logits)
+        for plen in prompt_lens:
+            toks = jnp.zeros((1, int(plen)), jnp.int32)
+            logits, _ = self._prefill_fn(int(plen))(
+                self.params, {"tokens": toks})
+            jax.block_until_ready(logits)
+        for lin in sparse_layers:
+            lin.warmup()
+
+    # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
         req = Request(self._uid, np.asarray(prompt, np.int32),
                       max_new_tokens, t_submit=time.perf_counter())

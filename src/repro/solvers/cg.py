@@ -108,6 +108,40 @@ def fcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec, tol: float = 1e-9,
     return x, SolveInfo(k, jnp.linalg.norm(r) / bnorm, hist)
 
 
+def jacobi_pcg_stored(mat, plan, diag: jnp.ndarray, b: jnp.ndarray, *,
+                      tol: float = 1e-9, maxiter: int = 1000,
+                      dtype=None) -> tuple[jnp.ndarray, SolveInfo]:
+    """Jacobi-PCG run entirely in σ-stored-row order (plan engine fast path).
+
+    The operator is the symmetrically permuted ``P A Pᵀ`` (SPD iff A is):
+    the matvec consumes ``plan.from_stored`` (stored → original order, one
+    gather) and the kernel's ``permuted=True`` output is already stored-row
+    order — the σ-scatter epilogue is skipped on every iteration. The Jacobi
+    preconditioner and the right-hand side are permuted ONCE at setup.
+    σ-padding slots stay zero throughout, so stored-space dot products and
+    norms equal their original-space values and the convergence criterion is
+    unchanged.
+
+    ``mat``/``plan``: a PackSELL matrix and its SpMVPlan (see
+    ``OperatorSet.plan_pair``); ``diag``: the matrix diagonal in original
+    row order.
+    """
+    diag = jnp.asarray(diag)
+    dinv = jnp.where(diag == 0, 1.0, 1.0 / diag)
+    dinv_s = plan.to_stored(dinv.astype(b.dtype))
+    b_s = plan.to_stored(b)
+
+    def matvec_s(x_s):
+        return plan.spmv(mat, plan.from_stored(x_s), permuted=True)
+
+    def M(r_s):
+        return r_s * dinv_s
+
+    x_s, info = pcg(matvec_s, b_s, M=M, tol=tol, maxiter=maxiter,
+                    dtype=dtype)
+    return plan.from_stored(x_s), info
+
+
 def pcg_fixed_iters(matvec: Matvec, M: Matvec, m_in: int,
                     dtype=jnp.float32) -> Matvec:
     """m_in PCG iterations from x0 = 0, packaged as a preconditioner —

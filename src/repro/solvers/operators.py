@@ -18,6 +18,7 @@ import scipy.sparse as sp
 from repro.core import packsell as pk
 from repro.core import sell as sl
 from repro.core import sparse as sps
+from repro.kernels import plan as kplan
 
 Matvec = Callable[[jnp.ndarray], jnp.ndarray]
 
@@ -55,9 +56,21 @@ class OperatorSet:
     def diag(self) -> np.ndarray:
         return self.csr.diagonal()
 
+    @staticmethod
+    def _parse_codec(sub: str) -> tuple[str, int]:
+        if sub in ("fp16", "bf16"):
+            return sub, 15
+        if sub.startswith("e8m"):
+            # *_e8mD where D is the *delta* width (Y = 22 - D)
+            return "e8m", int(sub[3:])
+        raise ValueError(sub)
+
     def matvec(self, kind: str) -> Matvec:
         """kind: 'fp64' | 'fp32' | 'fp16' | 'bf16' | 'packsell_fp16' |
-        'packsell_bf16' | 'packsell_e8m<D>' (e.g. packsell_e8m8)."""
+        'packsell_bf16' | 'packsell_e8m<D>' (e.g. packsell_e8m8) |
+        'plan_<codec>' (same codecs, dispatched through the cached
+        :class:`~repro.kernels.plan.SpMVPlan` engine — the single-dispatch
+        hot path for Krylov inner loops)."""
         if kind in self._cache:
             return self._cache[kind][0]
         if kind in ("fp64", "fp32", "fp16", "bf16"):
@@ -68,17 +81,16 @@ class OperatorSet:
             comp = jnp.float64 if kind == "fp64" else jnp.float32
             fn = lambda x, mat=mat, comp=comp: sl.sell_spmv_jnp(mat, x, comp)
         elif kind.startswith("packsell_"):
-            sub = kind[len("packsell_"):]
-            if sub in ("fp16", "bf16"):
-                codec, D = sub, 15
-            elif sub.startswith("e8m"):
-                # packsell_e8mD where D is the *delta* width (Y = 22 - D)
-                codec, D = "e8m", int(sub[3:])
-            else:
-                raise ValueError(kind)
+            codec, D = self._parse_codec(kind[len("packsell_"):])
             mat = pk.from_csr(self.csr, C=self.C, sigma=self.sigma, D=D,
                               codec=codec)
             fn = lambda x, mat=mat: pk.packsell_spmv_jnp(mat, x, jnp.float32)
+        elif kind.startswith("plan_"):
+            codec, D = self._parse_codec(kind[len("plan_"):])
+            mat = pk.from_csr(self.csr, C=self.C, sigma=self.sigma, D=D,
+                              codec=codec)
+            p = kplan.get_plan(mat)
+            fn = lambda x, mat=mat, p=p: p.spmv(mat, x)
         elif kind == "csr64":
             mat = sps.csr_from_scipy(self.csr, "float64")
             fn = lambda x, mat=mat: mat.spmv(x, jnp.float64)
@@ -91,3 +103,12 @@ class OperatorSet:
         """The underlying format object (for memory stats)."""
         self.matvec(kind)
         return self._cache[kind][1]
+
+    def plan_pair(self, kind: str):
+        """(mat, plan) for a 'plan_<codec>' kind — the inputs the
+        stored-row-order solvers (cg.jacobi_pcg_stored) consume."""
+        if not kind.startswith("plan_"):
+            raise ValueError(f"{kind!r} is not a plan_ kind")
+        self.matvec(kind)
+        mat = self._cache[kind][1]
+        return mat, kplan.get_plan(mat)

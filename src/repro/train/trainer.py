@@ -31,7 +31,7 @@ from repro.models.config import ModelConfig
 from repro.optim import (OptConfig, TrainState, apply_updates, init_state,
                          zero_spec_tree)
 from repro.optim.compression import compress
-from repro.parallel import tree_shardings_shaped
+from repro.parallel import shard_map_compat, tree_shardings_shaped
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault import PreemptionGuard, StepMonitor
 
@@ -156,7 +156,6 @@ class Trainer:
 
     def _make_compressed_step(self):
         """Pure-DP step with E8MY-compressed gradient psum (shard_map)."""
-        shard_map = jax.shard_map
         cfg, opt, mesh = self.cfg, self.opt, self.mesh
         bits = self.tcfg.grad_compression
 
@@ -195,13 +194,12 @@ class Trainer:
 
         def train_step(state, err, batch):
             shapes = jax.tree.map(lambda x: x, state)
-            fn = shard_map(
-                shard_step, mesh=mesh,
+            fn = shard_map_compat(
+                shard_step, mesh,
                 in_specs=(spec_like(state, rep), spec_like(err, rep),
                           spec_like(batch, bspec)),
                 out_specs=(spec_like(shapes, rep), spec_like(err, rep),
-                           {"loss": rep}),
-                check_vma=False)
+                           {"loss": rep}))
             return fn(state, err, batch)
 
         return train_step

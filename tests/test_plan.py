@@ -1,0 +1,260 @@
+"""SpMVPlan execution engine: cache semantics, fused scatter, σ-permutation
+round-trip, multi-RHS kernel, and the explicit variant policy."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packsell, testmats
+from repro.kernels import ops, ref
+from repro.kernels import packsell_spmv as kpk
+from repro.kernels import plan as kplan
+from repro.solvers import cg
+
+RNG = np.random.default_rng(42)
+
+
+def _x(m):
+    return jnp.asarray(RNG.standard_normal(m).astype(np.float32))
+
+
+@pytest.fixture()
+def banded_mat():
+    a = testmats.random_banded(600, 30, 8, seed=1)
+    return a, packsell.from_csr(a, C=8, sigma=32, D=15, codec="fp16")
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_miss(banded_mat):
+    _, mat = banded_mat
+    kplan.clear_cache()
+    p1 = kplan.get_plan(mat, sb=4, wb=8)
+    assert kplan.cache_stats() == dict(hits=0, misses=1, evicted=0, size=1)
+    p2 = kplan.get_plan(mat, sb=4, wb=8)
+    assert p2 is p1
+    assert kplan.cache_stats()["hits"] == 1
+    # different tile parameters -> different plan
+    p3 = kplan.get_plan(mat, sb=2, wb=4)
+    assert p3 is not p1
+    assert kplan.cache_stats()["misses"] == 2
+    # different matrix -> different plan even with equal params
+    a2 = testmats.random_banded(600, 30, 8, seed=2)
+    mat2 = packsell.from_csr(a2, C=8, sigma=32, D=15, codec="fp16")
+    p4 = kplan.get_plan(mat2, sb=4, wb=8)
+    assert p4 is not p1
+    assert kplan.cache_stats() == dict(hits=1, misses=3, evicted=0, size=3)
+
+
+def test_plan_cache_evicts_on_matrix_death():
+    kplan.clear_cache()
+    a = testmats.stencil_1d(200, 2, seed=3)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=10, codec="e8m")
+    kplan.get_plan(mat)
+    assert kplan.cache_stats()["size"] == 1
+    del mat
+    import gc
+    gc.collect()
+    st = kplan.cache_stats()
+    assert st["size"] == 0 and st["evicted"] == 1
+
+
+def test_repeated_spmv_reuses_plan(banded_mat):
+    a, mat = banded_mat
+    kplan.clear_cache()
+    x = _x(a.shape[1])
+    y1 = ops.packsell_spmv(mat, x)
+    y2 = ops.packsell_spmv(mat, x)
+    st = kplan.cache_stats()
+    assert st["misses"] == 1 and st["hits"] == 1
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+# ---------------------------------------------------------------------------
+# fused scatter epilogue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("force", ["full", "jnp"])
+def test_fused_scatter_matches_per_bucket_baseline(force):
+    a = testmats.powerlaw(700, mean_deg=4, seed=5)   # pow2 -> several buckets
+    mat = packsell.from_csr(a, C=8, sigma=64, D=6, codec="e8m")
+    assert len(mat.packs) > 1, "test needs a multi-bucket matrix"
+    x = _x(a.shape[1])
+    y_fused = ops.packsell_spmv(mat, x, sb=4, wb=8, force=force)
+    # seed baseline: one full-length scatter per bucket
+    y_base = jnp.zeros((mat.n,), jnp.float32)
+    for pack, d0, outrow in zip(mat.packs, mat.d0s, mat.outrows):
+        if force == "full":
+            t = kpk.packsell_spmv_bucket(pack, d0, x, codec_name="e8m",
+                                         D=6, sb=4, wb=8, interpret=True)
+        else:
+            t = packsell._bucket_spmv_scan(
+                pack, d0, x, mat.codec, mat.D,
+                np.int32(mat.m - 1), jnp.float32)
+        y_base = y_base.at[outrow].set(t.reshape(-1), mode="drop")
+    # bit-for-bit: same bucket outputs, same scatter targets
+    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_base))
+
+
+# ---------------------------------------------------------------------------
+# permuted fast path / σ-permutation round-trip
+# ---------------------------------------------------------------------------
+
+def test_permuted_fast_path_roundtrip(banded_mat):
+    a, mat = banded_mat
+    x = _x(a.shape[1])
+    plan = kplan.get_plan(mat)
+    y = ops.packsell_spmv(mat, x)
+    y_stored = ops.packsell_spmv(mat, x, permuted=True)
+    assert y_stored.shape == (plan.total_stored,)
+    # scattering the stored-row output reproduces y bit-for-bit
+    np.testing.assert_array_equal(np.asarray(plan.from_stored(y_stored)),
+                                  np.asarray(y))
+    # gather/scatter round-trip is the identity on original-order vectors
+    v = _x(mat.n)
+    np.testing.assert_array_equal(
+        np.asarray(plan.from_stored(plan.to_stored(v))), np.asarray(v))
+    # σ-padding slots are zero in stored space
+    stored = np.asarray(plan.to_stored(v))
+    pad = np.asarray(plan.outrow_cat) >= mat.n
+    assert np.all(stored[pad] == 0)
+
+
+def test_jacobi_pcg_stored_matches_original_order():
+    a = testmats.stencil_3d(8, 8, 8, neighbours=27)
+    from repro.solvers import operators as op
+    s, _ = op.sym_scale(a)
+    ops_set = op.OperatorSet(s, C=32, sigma=64)
+    mat, plan = ops_set.plan_pair("plan_fp16")
+    b = jnp.asarray(RNG.standard_normal(s.shape[0]).astype(np.float32))
+    x_s, info_s = cg.jacobi_pcg_stored(mat, plan, s.diagonal(), b,
+                                       tol=1e-5, maxiter=300,
+                                       dtype=jnp.float32)
+    diag = jnp.asarray(s.diagonal().astype(np.float32))
+    x_o, info_o = cg.pcg(ops_set.matvec("plan_fp16"), b,
+                         M=lambda r: r / diag, tol=1e-5, maxiter=300,
+                         dtype=jnp.float32)
+    assert int(info_s.iters) == int(info_o.iters)
+    np.testing.assert_allclose(np.asarray(x_s), np.asarray(x_o),
+                               rtol=1e-4, atol=1e-5)
+    # true residual vs the *unquantized* matrix floors at the fp16 codec's
+    # quantization error, not the solver tolerance
+    r = np.asarray(b, np.float64) - s @ np.asarray(x_s, np.float64)
+    assert np.linalg.norm(r) / np.linalg.norm(np.asarray(b)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# multi-RHS kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec,D", [("fp16", 15), ("bf16", 15), ("e8m", 8),
+                                     ("fixed16", 10)])
+def test_spmm_bucket_vs_jnp_oracle(codec, D):
+    a = testmats.random_banded(500, 25, 7, seed=6)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=D, codec=codec)
+    X = jnp.asarray(RNG.standard_normal((a.shape[1], 5)).astype(np.float32))
+    Y_ref = packsell.packsell_spmm_jnp(mat, X)
+    Y = ops.packsell_spmm(mat, X, sb=4, wb=8, force="full")
+    np.testing.assert_allclose(np.asarray(Y), np.asarray(Y_ref),
+                               rtol=1e-6, atol=1e-6)
+    # engine jnp variant agrees too
+    Yj = ops.packsell_spmm(mat, X, force="jnp")
+    np.testing.assert_allclose(np.asarray(Yj), np.asarray(Y_ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_spmm_single_rhs_consistent_with_spmv(banded_mat):
+    a, mat = banded_mat
+    x = _x(a.shape[1])
+    y = ops.packsell_spmv(mat, x, force="full", sb=4, wb=8)
+    Y = ops.packsell_spmm(mat, x[:, None], force="full", sb=4, wb=8)
+    np.testing.assert_allclose(np.asarray(Y[:, 0]), np.asarray(y),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# decode strategies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec,D", [("fp16", 15), ("e8m", 8),
+                                     ("fixed16", 10)])
+def test_scan_decode_matches_loop_decode(codec, D):
+    a = testmats.scattered(400, nnz_per_row=6, seed=7)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=D, codec=codec)
+    x = _x(a.shape[1])
+    ys = packsell.packsell_spmv_jnp(mat, x, decode="scan")
+    yl = packsell.packsell_spmv_jnp(mat, x, decode="loop")
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yl),
+                               rtol=1e-6, atol=1e-6)
+    yd = ref.packsell_spmv_dense_oracle(mat, np.asarray(x))
+    np.testing.assert_allclose(np.asarray(ys), yd, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# variant policy
+# ---------------------------------------------------------------------------
+
+def test_policy_explicit_and_logged(banded_mat):
+    _, mat = banded_mat
+    plan = kplan.get_plan(mat)      # CPU backend -> auto picks jnp
+    assert plan.variant == "jnp" and "auto" in plan.policy
+    plan_f = kplan.get_plan(mat, force="full")
+    assert plan_f.variant == "full" and "forced" in plan_f.policy
+
+
+def test_policy_env_override(banded_mat, monkeypatch):
+    _, mat = banded_mat
+    kplan.clear_cache()
+    monkeypatch.setenv("REPRO_SPMV_POLICY", "full")
+    plan = kplan.get_plan(mat)
+    assert plan.variant == "full" and "REPRO_SPMV_POLICY" in plan.policy
+    monkeypatch.setenv("REPRO_SPMV_POLICY", "bogus")
+    with pytest.raises(ValueError):
+        kplan.get_plan(mat, sb=2)
+
+
+def test_band_policy_infeasible_raises():
+    a = testmats.scattered(600, nnz_per_row=5, seed=8)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=4, codec="e8m")
+    with pytest.raises(ValueError):
+        kplan.get_plan(mat, hw=128, force="band")
+
+
+# ---------------------------------------------------------------------------
+# tracing (outer jit) still works, plans are not cached for tracers
+# ---------------------------------------------------------------------------
+
+def test_engine_inside_jit_is_ephemeral(banded_mat):
+    a, mat = banded_mat
+    x = _x(a.shape[1])
+    kplan.clear_cache()
+
+    @jax.jit
+    def f(mat, x):
+        return ops.packsell_spmv(mat, x)
+
+    y = f(mat, x)
+    assert kplan.cache_stats()["size"] == 0          # tracer plans uncached
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.packsell_spmv_ref(mat, x)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# autotune retile
+# ---------------------------------------------------------------------------
+
+def test_retile_preserves_results(banded_mat):
+    a, mat = banded_mat
+    x = _x(a.shape[1])
+    plan = kplan.get_plan(mat, force="full")
+    y1 = np.asarray(plan.spmv(mat, x))
+    plan.retile([(2, 4)] * len(mat.packs))
+    y2 = np.asarray(plan.spmv(mat, x))
+    np.testing.assert_allclose(y1, y2, rtol=1e-6, atol=1e-6)
+    with pytest.raises(ValueError):
+        plan.retile([(2, 4)] * (len(mat.packs) + 1))

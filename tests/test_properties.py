@@ -4,7 +4,10 @@ format-agreement between PackSELL / SELL / CSR, and σ-permutation identity.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
 import scipy.sparse as sp
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
