@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test verify bench bench-spmv
+.PHONY: test verify verify-dist bench bench-spmv bench-dist
 
 test:
 	python -m pytest -x -q
@@ -10,9 +10,22 @@ test:
 verify:
 	bash scripts/ci.sh
 
+# distributed layer: tests under 8 simulated host devices + a 4-device
+# PCG smoke (the device count must be fixed before JAX initializes)
+verify-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		python -m pytest -x -q tests/test_distributed.py \
+		tests/test_distributed_properties.py
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+		python examples/distributed_pcg.py --side 8
+
 bench:
 	python -m benchmarks.run
 
 # regenerate the checked-in perf-trajectory file (small scale)
 bench-spmv:
 	python -m benchmarks.run --only spmv --scale small
+
+# regenerate the checked-in distributed scaling curve (small scale)
+bench-dist:
+	python -m benchmarks.run --only distributed --scale small

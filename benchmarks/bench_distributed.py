@@ -1,0 +1,154 @@
+"""Distributed SpMV / PCG scaling over simulated host devices (DESIGN.md §7).
+
+Strong scaling: one fixed matrix partitioned over 1/2/4/8 shards; weak
+scaling: per-shard problem size held constant while the fleet grows. Both
+sweep the two halo-exchange modes and record the distributed Jacobi-PCG
+(time, iterations — iteration counts must not drift with the shard count).
+
+JAX fixes the device count at backend initialization, so ``run`` re-executes
+this module in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and folds the child's
+rows back into the shared results. Simulated host devices share one CPU:
+the curves measure dispatch + partition overheads and communication-volume
+effects, not real interconnect bandwidth (DESIGN.md §2.5's relative-
+instrument caveat applies doubly here).
+
+Writes ``BENCH_distributed.json`` at the repo root, next to
+``BENCH_spmv.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+N_DEV = 8
+SHARD_COUNTS = (1, 2, 4, 8)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_JSON_PATH = os.environ.get("REPRO_BENCH_DIST_JSON",
+                            os.path.join(_ROOT, "BENCH_distributed.json"))
+
+
+def run(scale: str | None = None) -> None:
+    """Parent entry point (benchmarks.run): spawn the forced-device-count
+    child, then re-ingest its rows."""
+    from . import common
+    scale = scale or common.SCALE
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={N_DEV}"
+                        ).strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_distributed",
+         "--scale", scale],
+        env=env, cwd=_ROOT)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench_distributed child failed "
+                           f"(exit {proc.returncode})")
+    with open(_JSON_PATH) as f:
+        payload = json.load(f)
+    common.rows().extend(payload["rows"])
+
+
+def _suite(scale: str):
+    from repro.core import testmats
+    if scale == "tiny":
+        return testmats.hpcg(8, 8, 8), 6, (1e-5, 50)
+    if scale == "small":
+        return testmats.hpcg(16, 16, 16), 12, (1e-6, 200)
+    return testmats.hpcg(24, 24, 24), 16, (1e-6, 200)     # medium
+
+
+def _child(scale: str) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import testmats
+    from repro.distributed import build_dist_plan
+    from repro.solvers import cg
+    from repro.solvers import operators as op
+
+    from . import common
+
+    ndev = jax.device_count()
+    a_strong, weak_side, (tol, maxiter) = _suite(scale)
+    s_strong, _ = op.sym_scale(a_strong)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(s_strong.shape[0]).astype(np.float32)
+    b = jnp.asarray(rng.standard_normal(s_strong.shape[0]))
+
+    base_t = {}
+    for P in SHARD_COUNTS:
+        if P > ndev:
+            continue
+        for mode in ("ppermute", "all_gather"):
+            dplan = build_dist_plan(s_strong, P, C=32, sigma=256, D=15,
+                                    codec="fp16", exchange=mode)
+            xs = dplan.shard_vector(x)
+            t = common.time_fn(
+                lambda xs=xs, dp=dplan, m=mode: dp.spmv_sharded(xs, mode=m),
+                warmup=2, repeats=5)
+            st = dplan.memory_stats()
+            key = ("spmv", mode)
+            base_t.setdefault(key, t)
+            common.emit(
+                "dist_strong_spmv", f"hpcg_p{P}_{mode}", shards=P,
+                n=s_strong.shape[0], nnz=int(s_strong.nnz), t_spmv_s=t,
+                speedup_vs_p1=base_t[key] / t,
+                halo_entries=st["halo_entries"], h_pad=st["h_pad"])
+            if mode == "ppermute":
+                _, info = cg.jacobi_pcg_dist(dplan, s_strong.diagonal(), b,
+                                             tol=tol, maxiter=maxiter,
+                                             dtype=jnp.float64)
+                t_pcg = common.time_fn(
+                    lambda dp=dplan: cg.jacobi_pcg_dist(
+                        dp, s_strong.diagonal(), b, tol=tol,
+                        maxiter=maxiter, dtype=jnp.float64)[0],
+                    warmup=1, repeats=3)
+                key = ("pcg",)
+                base_t.setdefault(key, t_pcg)
+                common.emit(
+                    "dist_strong_pcg", f"hpcg_p{P}", shards=P,
+                    iters=int(info.iters), relres=float(info.relres),
+                    t_solve_s=t_pcg, speedup_vs_p1=base_t[key] / t_pcg)
+
+    # weak scaling: ~weak_side^3 rows per shard
+    for P in SHARD_COUNTS:
+        if P > ndev:
+            continue
+        a_w = testmats.hpcg(weak_side, weak_side, weak_side * P)
+        s_w, _ = op.sym_scale(a_w)
+        xw = np.random.default_rng(1).standard_normal(
+            s_w.shape[0]).astype(np.float32)
+        dplan = build_dist_plan(s_w, P, C=32, sigma=256, D=15, codec="fp16")
+        xs = dplan.shard_vector(xw)
+        t = common.time_fn(lambda xs=xs, dp=dplan: dp.spmv_sharded(xs),
+                           warmup=2, repeats=5)
+        base_t.setdefault("weak", t)
+        common.emit(
+            "dist_weak_spmv", f"hpcg_p{P}", shards=P, n=s_w.shape[0],
+            nnz=int(s_w.nnz), t_spmv_s=t,
+            efficiency_vs_p1=base_t["weak"] / t)
+
+    payload = dict(
+        scale=scale, backend=jax.default_backend(), devices=ndev,
+        note=("simulated host devices share one CPU: curves measure "
+              "dispatch/partition overhead and communication volume, not "
+              "interconnect bandwidth; speedup_vs_p1 = t(P=1)/t(P)"),
+        rows=common.rows(),
+    )
+    with open(_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    print(f"[bench_distributed] wrote {_JSON_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default=None)
+    args = ap.parse_args()
+    scale = args.scale or os.environ.get("REPRO_BENCH_SCALE", "small")
+    _child(scale)

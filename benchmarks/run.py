@@ -13,7 +13,8 @@ import time
 
 from . import common
 
-MODULES = ("spmv", "memory", "e8my", "f3r", "iocg", "kernels", "roofline")
+MODULES = ("spmv", "memory", "e8my", "f3r", "iocg", "kernels", "roofline",
+           "distributed")
 
 
 def main() -> None:

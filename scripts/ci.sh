@@ -11,6 +11,15 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 if [[ "${1:-}" != "fast" ]]; then
+  echo "== distributed: tests under 8 simulated host devices =="
+  XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_distributed.py \
+    tests/test_distributed_properties.py
+
+  echo "== smoke: 4-device distributed PCG =="
+  XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+    python examples/distributed_pcg.py --side 8
+
   echo "== smoke: benchmarks (spmv, tiny scale) =="
   # writes artifacts/bench_results.json and BENCH_spmv.json; the tiny-scale
   # JSON is a smoke artifact only — the checked-in BENCH_spmv.json is

@@ -1,0 +1,9 @@
+"""Distributed PackSELL: row-block partitioning, halo-exchange SpMV, and
+the multi-device plan layer (DESIGN.md §7)."""
+from . import halo  # noqa: F401
+from .halo import HaloMaps, build_halo_maps, gather_halo  # noqa: F401
+from .partition import (RowPartition, ShardSplit,  # noqa: F401
+                        assemble_global, comm_matrix, partition_rows,
+                        split_csr)
+from .plan import (DistOperands, DistSpMVPlan,  # noqa: F401
+                   build_dist_plan, build_operands, reference_spmv)

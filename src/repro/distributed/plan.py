@@ -1,0 +1,375 @@
+"""DistSpMVPlan: one jitted shard_map dispatch for distributed SpMV
+(DESIGN.md §7.3).
+
+Layering mirrors the single-device engine (``kernels/plan.py``): every
+host-side decision happens once at build time, the hot path is a single
+jitted call.
+
+* :func:`build_operands` partitions the matrix (``partition.py``), builds
+  one σ-sorted-per-partition PackSELL block pair (local + remote) per shard,
+  pads all shards to one static ``[S, w, C]`` shape
+  (``core.packsell.pad_uniform``), builds a concrete
+  :class:`~repro.kernels.plan.SpMVPlan` per block, and **stacks** the plans'
+  device operands (packed words, cursor caches, inverse σ-permutations)
+  along a leading shard axis — plus the halo-exchange index maps
+  (``halo.py``) and a row-validity mask.
+* :class:`DistSpMVPlan` places the stacked operands on a 1-D device mesh
+  and jits ONE ``shard_map`` dispatch per entry point (spmv / spmm / each
+  exchange mode). Inside the mapped body each shard slices its row of every
+  operand and reuses the template plan via
+  :meth:`~repro.kernels.plan.SpMVPlan.execute_with` — plan reuse inside
+  shard_map, no per-trace replanning.
+* The body issues the halo gather FIRST, then the local-block matvec (which
+  depends only on resident data), then the remote-block matvec: XLA's
+  scheduler can overlap the collective with the local compute, the
+  communication/computation overlap of the Kreutzer-et-al. recipe.
+
+``reference_spmv`` replays the exact same stacked operands shard-by-shard
+on the host (no mesh, no collectives) — the oracle that lets partition and
+map construction be tested on a single device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packsell as pk
+from repro.kernels import plan as kplan
+from repro.parallel.sharding import make_shard_mesh, shard_map_compat
+
+from . import halo as dh
+from . import partition as dp
+
+_ceil_to = pk._ceil_to
+
+
+@dataclasses.dataclass
+class DistOperands:
+    """Mesh-independent distributed operands: the partition, the halo maps,
+    the per-shard padded PackSELL blocks, their template plans, and every
+    stacked host array the shard_map body consumes (leading dim = shard)."""
+
+    part: dp.RowPartition
+    maps: dh.HaloMaps
+    n: int
+    n_pad: int                 # padded rows == padded local x length
+    h_pad: int                 # padded halo buffer length (0: no halo)
+    C: int
+    sigma: int
+    D: int
+    codec: str
+    host: dict                 # str -> np.ndarray [P, ...]
+    mats_loc: list             # per-shard padded PackSELLMatrix (host)
+    mats_rem: list             # per-shard padded PackSELLMatrix (or [])
+    tpl_loc: kplan.SpMVPlan    # template plan (identical statics ∀ shards)
+    tpl_rem: kplan.SpMVPlan | None
+
+    # -- vector layout (host) ----------------------------------------------
+    def stack_vector(self, v: np.ndarray) -> np.ndarray:
+        """Global [n(, nb)] → stacked padded [P, n_pad(, nb)] (zeros pad)."""
+        v = np.asarray(v)
+        out = np.zeros((self.part.n_shards, self.n_pad) + v.shape[1:],
+                       v.dtype)
+        for p in range(self.part.n_shards):
+            r0, r1 = self.part.rows_of(p)
+            out[p, :r1 - r0] = v[r0:r1]
+        return out
+
+    def unstack_vector(self, ys: np.ndarray) -> np.ndarray:
+        """Stacked padded [P, n_pad(, nb)] → global [n(, nb)]."""
+        ys = np.asarray(ys)
+        return np.concatenate([ys[p, :c]
+                               for p, c in enumerate(self.part.counts)])
+
+    # -- the per-shard SpMV body -------------------------------------------
+    def _view(self, ops: dict, kind: str) -> pk.PackSELLMatrix:
+        """A PackSELLMatrix over this shard's operand slices. Only fields
+        the execution path reads are meaningful; accounting fields are 0."""
+        return pk.PackSELLMatrix(
+            packs=(ops[f"pack_{kind}"],), d0s=(ops[f"d0_{kind}"],),
+            outrows=(ops[f"outrow_{kind}"],),
+            maxcols=(jnp.zeros_like(ops[f"d0_{kind}"]),),
+            perm=jnp.zeros((1,), jnp.uint8),
+            n=self.n_pad, m=self.n_pad if kind == "loc" else self.h_pad,
+            C=self.C, sigma=self.sigma, D=self.D, codec_name=self.codec,
+            k_left=0, nnz=0, n_dummy=0, words_sell_padded=0,
+            words_bucketed=0)
+
+    def _dev_dict(self, ops: dict, kind: str) -> dict:
+        cols = ops.get(f"cols_{kind}")
+        return {"cols": None if cols is None else (cols,),
+                "inv": ops[f"inv_{kind}"], "outrow": ops[f"outrow_{kind}"]}
+
+    def shard_body(self, ops: dict, x: jnp.ndarray, *,
+                   axis_name: str | None, mode: str,
+                   multi_rhs: bool = False,
+                   x_halo: jnp.ndarray | None = None) -> jnp.ndarray:
+        """One shard's ``y_p = A_loc x_loc + A_rem x_halo`` (masked).
+
+        Runs inside a shard_map body (``axis_name`` names the mesh axis the
+        collectives run over) or standalone when ``x_halo`` is supplied
+        (:func:`reference_spmv`). The gather is issued before the local
+        matvec so the collective can overlap the resident-block compute.
+        """
+        xc = x.astype(jnp.float32)
+        if self.h_pad > 0 and x_halo is None:
+            x_halo = dh.gather_halo(
+                xc, ops, axis_name=axis_name, n_shards=self.part.n_shards,
+                h_pad=self.h_pad, mode=mode)
+        y = self.tpl_loc.execute_with(
+            self._view(ops, "loc"), self._dev_dict(ops, "loc"), xc,
+            multi_rhs=multi_rhs)
+        if self.h_pad > 0:
+            y = y + self.tpl_rem.execute_with(
+                self._view(ops, "rem"), self._dev_dict(ops, "rem"),
+                x_halo.astype(jnp.float32), multi_rhs=multi_rhs)
+        mask = ops["rowmask"]
+        return y * (mask[:, None] if multi_rhs else mask)
+
+
+def build_operands(a: sp.csr_matrix, n_shards: int, *, C: int = 32,
+                   sigma: int = 256, D: int = 15,
+                   codec: str = "fp16") -> DistOperands:
+    """Partition ``a`` over ``n_shards`` row blocks and build the stacked
+    distributed operands (host-side; no devices touched)."""
+    a = a.tocsr()
+    n = a.shape[0]
+    part = dp.partition_rows(n, n_shards)
+    n_pad = _ceil_to(max(int(part.counts.max(initial=0)), 1), C)
+    splits, h_pad = dp.split_csr(a, part, n_pad=n_pad)
+    maps = dh.build_halo_maps(part, [s.halo_cols for s in splits],
+                              n_pad=n_pad, h_pad=h_pad)
+    S_pad = n_pad // C
+
+    def build_blocks(blocks):
+        raw = [pk.from_csr(b, C=C, sigma=sigma, D=D, codec=codec,
+                           bucket_strategy="uniform", device=False)
+               for b in blocks]
+        w = max(int(m.packs[0].shape[1]) for m in raw)
+        mats = [pk.pad_uniform(m, n_slices=S_pad, width=w, n_rows=n_pad,
+                               device=False) for m in raw]
+        plans = [kplan.build_plan(m, force="jnp") for m in mats]
+        return mats, plans
+
+    mats_loc, plans_loc = build_blocks([s.a_loc for s in splits])
+    host = {
+        "pack_loc": np.stack([np.asarray(m.packs[0]) for m in mats_loc]),
+        "d0_loc": np.stack([np.asarray(m.d0s[0]) for m in mats_loc]),
+        "outrow_loc": np.stack([np.asarray(p.outrow_cat)
+                                for p in plans_loc]),
+        "inv_loc": np.stack([np.asarray(p.inv_cat) for p in plans_loc]),
+        "rowmask": (np.arange(n_pad)[None, :]
+                    < part.counts[:, None]).astype(np.float32),
+        "halo_src": maps.halo_src,
+        "send_idx": maps.send_idx,
+        "recv_slot": maps.recv_slot,
+    }
+    if plans_loc[0].cols is not None:
+        host["cols_loc"] = np.stack([np.asarray(p.cols[0])
+                                     for p in plans_loc])
+    mats_rem, tpl_rem = [], None
+    if h_pad > 0:
+        mats_rem, plans_rem = build_blocks([s.a_rem for s in splits])
+        tpl_rem = plans_rem[0]
+        host["pack_rem"] = np.stack([np.asarray(m.packs[0])
+                                     for m in mats_rem])
+        host["d0_rem"] = np.stack([np.asarray(m.d0s[0]) for m in mats_rem])
+        host["outrow_rem"] = np.stack([np.asarray(p.outrow_cat)
+                                       for p in plans_rem])
+        host["inv_rem"] = np.stack([np.asarray(p.inv_cat)
+                                    for p in plans_rem])
+        if plans_rem[0].cols is not None:
+            host["cols_rem"] = np.stack([np.asarray(p.cols[0])
+                                         for p in plans_rem])
+    return DistOperands(part=part, maps=maps, n=n, n_pad=n_pad, h_pad=h_pad,
+                        C=C, sigma=sigma, D=D, codec=codec, host=host,
+                        mats_loc=mats_loc, mats_rem=mats_rem,
+                        tpl_loc=plans_loc[0], tpl_rem=tpl_rem)
+
+
+def reference_spmv(ops: DistOperands, x, mode: str = "all_gather",
+                   multi_rhs: bool = False) -> np.ndarray:
+    """Host oracle: replay the stacked operands shard-by-shard with the
+    host-side exchange reference — no mesh, no collectives. Validates the
+    partition, the maps, and the padded blocks on a single device."""
+    xs = ops.stack_vector(np.asarray(x, np.float32))
+    xh = (dh.gather_halo_reference(xs, ops.maps, mode)
+          if ops.h_pad > 0 else None)
+    ys = []
+    for p in range(ops.part.n_shards):
+        ops_p = {k: jnp.asarray(v[p]) for k, v in ops.host.items()}
+        y = ops.shard_body(
+            ops_p, jnp.asarray(xs[p]), axis_name=None, mode=mode,
+            multi_rhs=multi_rhs,
+            x_halo=None if xh is None else jnp.asarray(xh[p]))
+        ys.append(np.asarray(y))
+    return ops.unstack_vector(np.stack(ys))
+
+
+class DistSpMVPlan:
+    """Stacked distributed operands bound to a 1-D device mesh, with one
+    jitted ``shard_map`` dispatch per (entry point, exchange mode).
+
+    Entry points take and return **global** vectors (``spmv`` / ``spmm``)
+    or stay in the stacked-sharded layout (``spmv_sharded`` — solvers and
+    benchmarks chain matvecs without host round-trips). ``shard_vector`` /
+    ``unshard_vector`` convert between the two.
+    """
+
+    def __init__(self, ops: DistOperands, mesh, *,
+                 exchange: str = "ppermute"):
+        if len(mesh.axis_names) != 1:
+            raise ValueError(f"need a 1-D mesh, got axes {mesh.axis_names}")
+        if mesh.devices.size != ops.part.n_shards:
+            raise ValueError(
+                f"mesh has {mesh.devices.size} devices but operands were "
+                f"built for {ops.part.n_shards} shards")
+        if exchange not in dh.EXCHANGE_MODES:
+            raise ValueError(f"exchange={exchange!r} not in "
+                             f"{dh.EXCHANGE_MODES}")
+        self.ops = ops
+        self.mesh = mesh
+        self.axis_name = mesh.axis_names[0]
+        self.exchange = exchange
+        shard = NamedSharding(mesh, P(self.axis_name))
+        self.dev = {k: jax.device_put(v, shard)
+                    for k, v in ops.host.items()}
+        self._fns: dict = {}
+
+    # -- convenience passthroughs ------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.ops.n
+
+    @property
+    def n_shards(self) -> int:
+        return self.ops.part.n_shards
+
+    @property
+    def dev_specs(self):
+        """in_specs pytree for the stacked operands (leading shard axis)."""
+        return jax.tree.map(lambda _: P(self.axis_name), self.dev)
+
+    def shard_vector(self, v) -> jnp.ndarray:
+        """Global [n(, nb)] → device-sharded stacked [P, n_pad(, nb)]."""
+        if isinstance(v, jax.core.Tracer):
+            return self._shard_traced(v)
+        return jax.device_put(
+            self.ops.stack_vector(np.asarray(v)),
+            NamedSharding(self.mesh, P(self.axis_name)))
+
+    def unshard_vector(self, ys) -> jnp.ndarray:
+        if isinstance(ys, jax.core.Tracer):
+            return self._unshard_traced(ys)
+        return jnp.asarray(self.ops.unstack_vector(np.asarray(ys)))
+
+    def _shard_traced(self, v: jnp.ndarray) -> jnp.ndarray:
+        """jnp mirror of ``stack_vector`` (static slices/pads only), used
+        when the global vector is a tracer — a solver's loop-carried
+        iterate. The jitted shard_map dispatch inlines into the enclosing
+        trace, so ``dist_<codec>`` matvecs drop into unchanged solvers."""
+        parts = []
+        for p in range(self.n_shards):
+            r0, r1 = self.ops.part.rows_of(p)
+            pad = [(0, self.ops.n_pad - (r1 - r0))] + [(0, 0)] * (v.ndim - 1)
+            parts.append(jnp.pad(v[r0:r1], pad))
+        return jnp.stack(parts)
+
+    def _unshard_traced(self, ys: jnp.ndarray) -> jnp.ndarray:
+        return jnp.concatenate(
+            [ys[p, :int(c)] for p, c in enumerate(self.ops.part.counts)])
+
+    # -- jitted dispatch ----------------------------------------------------
+    def cached_fn(self, key, builder):
+        """Build-once cache for jitted shard_map dispatches (the distributed
+        analogue of ``SpMVPlan._dispatch``; solvers park theirs here too)."""
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = builder()
+            self._fns[key] = fn
+        return fn
+
+    def _spmv_fn(self, mode: str, multi_rhs: bool):
+        def build():
+            ax = self.axis_name
+
+            def body(dev, xs):
+                o = jax.tree.map(lambda leaf: leaf[0], dev)
+                y = self.ops.shard_body(o, xs[0], axis_name=ax, mode=mode,
+                                        multi_rhs=multi_rhs)
+                return y[None]
+
+            f = shard_map_compat(body, self.mesh,
+                                 in_specs=(self.dev_specs, P(ax)),
+                                 out_specs=P(ax))
+            return jax.jit(f)
+
+        return self.cached_fn(("spmm" if multi_rhs else "spmv", mode), build)
+
+    def spmv_sharded(self, xs: jnp.ndarray, *, mode: str | None = None,
+                     multi_rhs: bool = False) -> jnp.ndarray:
+        """Stacked-sharded [P, n_pad(, nb)] → same layout; one dispatch."""
+        mode = mode or self.exchange
+        if mode not in dh.EXCHANGE_MODES:
+            # validate here, not only in gather_halo: halo-free partitions
+            # (h_pad == 0) never reach the gather
+            raise ValueError(f"mode={mode!r} not in {dh.EXCHANGE_MODES}")
+        return self._spmv_fn(mode, multi_rhs)(self.dev, xs)
+
+    def spmv(self, x, *, mode: str | None = None) -> jnp.ndarray:
+        """y = A @ x for a global [n] vector (shard → dispatch → unshard)."""
+        return self.unshard_vector(self.spmv_sharded(
+            self.shard_vector(x), mode=mode))
+
+    def spmm(self, x, *, mode: str | None = None) -> jnp.ndarray:
+        """Y = A @ X for a global [n, nb] block (multi-RHS path: one pass
+        over each shard's packed words serves all nb right-hand sides)."""
+        if np.ndim(x) != 2:
+            raise ValueError(f"spmm expects [n, nb], got {np.shape(x)}")
+        return self.unshard_vector(self.spmv_sharded(
+            self.shard_vector(x), mode=mode, multi_rhs=True))
+
+    def warmup(self, nb: int = 0, modes=None) -> "DistSpMVPlan":
+        """Pre-trace the dispatches (serving-engine contract: the first
+        tick pays neither tracing nor plan construction)."""
+        for mode in (modes or (self.exchange,)):
+            jax.block_until_ready(
+                self.spmv(np.zeros(self.n, np.float32), mode=mode))
+            if nb:
+                jax.block_until_ready(
+                    self.spmm(np.zeros((self.n, nb), np.float32), mode=mode))
+        return self
+
+    # -- accounting ---------------------------------------------------------
+    def memory_stats(self) -> dict:
+        """Fleet memory + communication profile: per-shard PackSELL stats
+        aggregated over local and remote blocks, plus halo traffic."""
+        st = pk.aggregate_memory_stats(self.ops.mats_loc + self.ops.mats_rem)
+        st.update(
+            shards=self.n_shards, n_pad=self.ops.n_pad, h_pad=self.ops.h_pad,
+            halo_entries=int(self.ops.maps.counts.sum()),
+            halo_k_max=self.ops.maps.k_max, exchange=self.exchange)
+        return st
+
+
+def build_dist_plan(a: sp.csr_matrix, n_shards: int | None = None, *,
+                    mesh=None, axis_name: str = "shards",
+                    exchange: str = "ppermute", C: int = 32,
+                    sigma: int = 256, D: int = 15, codec: str = "fp16",
+                    devices=None) -> DistSpMVPlan:
+    """Partition ``a`` across a 1-D device mesh and build the jitted
+    distributed plan (the slow path — run once per matrix, like
+    ``kernels.plan.build_plan``). With no mesh given, one shard per visible
+    local device."""
+    if mesh is None:
+        mesh = make_shard_mesh(n_shards, axis_name=axis_name,
+                               devices=devices)
+    ops = build_operands(a, int(mesh.devices.size), C=C, sigma=sigma, D=D,
+                         codec=codec)
+    return DistSpMVPlan(ops, mesh, exchange=exchange)

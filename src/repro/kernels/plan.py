@@ -38,6 +38,7 @@ module moves every host-side decision out of the hot path:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import os
 import weakref
 from typing import Optional
@@ -303,6 +304,22 @@ class SpMVPlan:
             self._fns[kind] = fn
         return fn
 
+    def execute_with(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
+                     *, permuted: bool = False,
+                     multi_rhs: bool = False) -> jnp.ndarray:
+        """Run the plan's execution body with externally supplied device
+        operands (``{'cols': tuple|None, 'inv': array|None, 'outrow':
+        array}``) inside an existing trace — the shard_map reuse hook.
+
+        The distributed layer builds one concrete plan per shard, stacks the
+        per-shard operands along the mesh axis, and calls this inside the
+        mapped body with each shard's slice (``DistSpMVPlan``): the plan's
+        static decisions (variant, tiles, cursor-cache layout) are reused
+        across shards while the arrays flow through shard_map in_specs.
+        """
+        impl = self._execute_mm if multi_rhs else self._execute
+        return impl(mat, dev, x, permuted)
+
     def spmv(self, mat: PackSELLMatrix, x: jnp.ndarray, *,
              permuted: bool = False) -> jnp.ndarray:
         """y = A @ x — one jitted dispatch; ``permuted=True`` returns y in
@@ -449,21 +466,36 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
 
 _PLANS: dict = {}
 _STATS = {"hits": 0, "misses": 0, "evicted": 0}
+_TOKENS = itertools.count()
+
+
+def _plan_token(mat: PackSELLMatrix) -> int:
+    """Monotonic per-matrix cache token. ``id(mat)`` is unusable as a key
+    component: after GC reuses an address, the dead matrix's deferred
+    weakref callback would evict the *new* matrix's freshly cached plan
+    (same key). The token is assigned once per matrix object and never
+    recycled, so keys of distinct matrices can never collide."""
+    tok = getattr(mat, "_plan_token", None)
+    if tok is None:
+        tok = next(_TOKENS)
+        mat._plan_token = tok
+    return tok
 
 
 def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
              hw: int = _DEF_HW, force: str | None = None,
              interpret: bool | None = None) -> SpMVPlan:
-    """Cached plan lookup. Keyed on ``(id(mat), sb, wb, hw, policy,
-    interpret)``; entries are invalidated (weakref) when the matrix dies, so
-    a recycled ``id()`` can never alias a stale plan."""
+    """Cached plan lookup. Keyed on ``(mat._plan_token, sb, wb, hw, policy,
+    interpret)`` — a monotonically assigned per-matrix token (see
+    :func:`_plan_token`); entries are dropped (weakref) when the matrix
+    dies."""
     interpret = _interpret_default() if interpret is None else interpret
     policy = (force or _env_policy()).lower()
     if _is_traced(mat):
         # tracer matrices are per-trace objects: build ephemeral, skip cache
         return build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
                           interpret=interpret)
-    key = (id(mat), sb, wb, hw, policy, interpret)
+    key = (_plan_token(mat), sb, wb, hw, policy, interpret)
     ent = _PLANS.get(key)
     if ent is not None and ent[0]() is mat:
         _STATS["hits"] += 1

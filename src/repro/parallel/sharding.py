@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -114,6 +115,21 @@ def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, axis_names=None):
     if axis_names is not None:
         kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def make_shard_mesh(n_shards: int | None = None, *,
+                    axis_name: str = "shards", devices=None) -> Mesh:
+    """1-D mesh over (the first ``n_shards``) local devices — the device
+    axis the distributed PackSELL layer partitions matrices across
+    (``repro.distributed``). Defaults to every visible device."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_shards is not None:
+        if n_shards > len(devs):
+            raise ValueError(f"n_shards={n_shards} > {len(devs)} devices "
+                             "(run under XLA_FLAGS="
+                             "--xla_force_host_platform_device_count=N)")
+        devs = devs[:n_shards]
+    return Mesh(np.array(devs), (axis_name,))
 
 
 def constrain_batch(x):

@@ -87,12 +87,16 @@ class DecodeEngine:
                                static_argnums=(3,))
 
     # ------------------------------------------------------------------
-    def warmup(self, prompt_lens=(), sparse_layers=()) -> None:
+    def warmup(self, prompt_lens=(), sparse_layers=(),
+               dist_plans=()) -> None:
         """Move compilation out of the serving hot path (the engine analogue
         of the SpMVPlan rule: host-side decisions happen at setup, ticks are
         single dispatches). Compiles the pool decode step and the given
-        prefill prompt lengths, and pre-builds the cached SpMV plans of any
-        PackSELL layers (``models.sparse_linear.PackSELLLinear``) so the
+        prefill prompt lengths, pre-builds the cached SpMV plans of any
+        PackSELL layers (``models.sparse_linear.PackSELLLinear``), and
+        pre-traces any distributed plans
+        (``repro.distributed.DistSpMVPlan`` — weight matrices too large for
+        one device serve their matvecs through the sharded dispatch) so the
         first real tick pays neither tracing nor plan construction."""
         tokens = jnp.zeros((self.scfg.slots, 1), jnp.int32)
         logits, _ = self._decode(self.params, tokens, self.cache)
@@ -104,6 +108,8 @@ class DecodeEngine:
             jax.block_until_ready(logits)
         for lin in sparse_layers:
             lin.warmup()
+        for dp in dist_plans:
+            dp.warmup(nb=self.scfg.slots)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:

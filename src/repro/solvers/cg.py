@@ -21,28 +21,50 @@ class SolveInfo(NamedTuple):
     history: jnp.ndarray     # relres per iteration, -1 past convergence
 
 
-def _prep(b, x0, dtype):
+def dist_dot(axis_name: str):
+    """⟨a, b⟩ over a device mesh axis: the local partial reduces with a
+    ``psum`` so every shard holds the identical global scalar (vectors are
+    real; σ/shard padding slots must be zero — the distributed layer's
+    row-mask invariant guarantees it for its vectors)."""
+    return lambda a, b: jax.lax.psum(jnp.vdot(a, b), axis_name)
+
+
+def dist_norm(axis_name: str):
+    """‖a‖₂ over a device mesh axis (psum of local squared sums)."""
+    return lambda a: jnp.sqrt(jax.lax.psum(jnp.sum(a * a), axis_name))
+
+
+def _prep(b, x0, dtype, norm):
     dtype = dtype or b.dtype
     b = b.astype(dtype)
     x0 = jnp.zeros_like(b) if x0 is None else x0.astype(dtype)
-    bnorm = jnp.linalg.norm(b)
+    bnorm = norm(b)
     bnorm = jnp.where(bnorm == 0, 1.0, bnorm)
     return b, x0, bnorm, dtype
 
 
 def pcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec | None = None,
         tol: float = 1e-9, maxiter: int = 1000, x0=None,
-        dtype=None) -> tuple[jnp.ndarray, SolveInfo]:
-    """Preconditioned CG. ``M`` must be a *fixed* operator (SPD)."""
-    b, x0, bnorm, dtype = _prep(b, x0, dtype)
+        dtype=None, dot=None, norm=None) -> tuple[jnp.ndarray, SolveInfo]:
+    """Preconditioned CG. ``M`` must be a *fixed* operator (SPD).
+
+    ``dot`` / ``norm`` default to the single-device ``jnp.vdot`` /
+    ``jnp.linalg.norm``; the distributed solvers inject psum-reduced
+    versions (:func:`dist_dot` / :func:`dist_norm`) so the identical
+    iteration runs on sharded vectors inside a shard_map region — the
+    recurrence, and therefore the iteration count, is unchanged.
+    """
+    dot = dot or jnp.vdot
+    norm = norm or jnp.linalg.norm
+    b, x0, bnorm, dtype = _prep(b, x0, dtype, norm)
     M = M or (lambda r: r)
 
     r0 = b - matvec(x0).astype(dtype)
     z0 = M(r0).astype(dtype)
-    rz0 = jnp.vdot(r0, z0)
+    rz0 = dot(r0, z0)
     hist0 = jnp.full((maxiter + 1,), -1.0, dtype=jnp.float64 if
                      dtype == jnp.float64 else jnp.float32)
-    hist0 = hist0.at[0].set(jnp.linalg.norm(r0) / bnorm)
+    hist0 = hist0.at[0].set(norm(r0) / bnorm)
 
     def cond(s):
         k, x, r, z, p, rz, hist, done = s
@@ -51,22 +73,22 @@ def pcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec | None = None,
     def body(s):
         k, x, r, z, p, rz, hist, done = s
         Ap = matvec(p).astype(dtype)
-        pAp = jnp.vdot(p, Ap)
+        pAp = dot(p, Ap)
         alpha = rz / jnp.where(pAp == 0, 1.0, pAp)
         x = x + alpha * p
         r = r - alpha * Ap
-        relres = jnp.linalg.norm(r) / bnorm
+        relres = norm(r) / bnorm
         hist = hist.at[k + 1].set(relres.astype(hist.dtype))
         done = relres < tol
         z = M(r).astype(dtype)
-        rz_new = jnp.vdot(r, z)
+        rz_new = dot(r, z)
         beta = rz_new / jnp.where(rz == 0, 1.0, rz)
         p = z + beta * p
         return (k + 1, x, r, z, p, rz_new, hist, done)
 
     s0 = (jnp.asarray(0), x0, r0, z0, z0, rz0, hist0, jnp.asarray(False))
     k, x, r, z, p, rz, hist, done = jax.lax.while_loop(cond, body, s0)
-    return x, SolveInfo(k, jnp.linalg.norm(r) / bnorm, hist)
+    return x, SolveInfo(k, norm(r) / bnorm, hist)
 
 
 def fcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec, tol: float = 1e-9,
@@ -74,7 +96,7 @@ def fcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec, tol: float = 1e-9,
         dtype=None) -> tuple[jnp.ndarray, SolveInfo]:
     """Flexible CG (Notay 2000), FCG(1): tolerates a varying preconditioner
     (e.g. an inner Krylov solve — the IO-CG outer iteration, paper §5.2.2)."""
-    b, x0, bnorm, dtype = _prep(b, x0, dtype)
+    b, x0, bnorm, dtype = _prep(b, x0, dtype, jnp.linalg.norm)
 
     r0 = b - matvec(x0).astype(dtype)
     z0 = M(r0).astype(dtype)
@@ -140,6 +162,64 @@ def jacobi_pcg_stored(mat, plan, diag: jnp.ndarray, b: jnp.ndarray, *,
     x_s, info = pcg(matvec_s, b_s, M=M, tol=tol, maxiter=maxiter,
                     dtype=dtype)
     return plan.from_stored(x_s), info
+
+
+def jacobi_pcg_dist(dplan, diag: jnp.ndarray, b: jnp.ndarray, *,
+                    tol: float = 1e-9, maxiter: int = 1000,
+                    dtype=None, mode: str | None = None
+                    ) -> tuple[jnp.ndarray, SolveInfo]:
+    """Jacobi-PCG over a device mesh: the ENTIRE solve runs inside one
+    jitted shard_map region.
+
+    ``dplan`` is a :class:`~repro.distributed.plan.DistSpMVPlan`; each
+    iteration's matvec is the per-shard halo-exchange SpMV body (local
+    block overlapping the exchange, remote block on the gathered halo), and
+    every dot/norm is psum-reduced (:func:`dist_dot` / :func:`dist_norm`) so
+    all shards advance through the identical scalar recurrence — the
+    iteration count matches the single-device solver up to summation-order
+    rounding. Vectors stay sharded for the whole solve; only the final x
+    (and the replicated scalars/history) come back to the host.
+
+    ``diag``: matrix diagonal in global row order (the Jacobi
+    preconditioner); ``b``: global right-hand side; ``mode`` overrides the
+    plan's halo-exchange mode.
+    """
+    from jax.sharding import PartitionSpec as Pspec
+
+    from repro.parallel.sharding import shard_map_compat
+
+    b = jnp.asarray(b)
+    dtype = dtype or b.dtype
+    mode = mode or dplan.exchange
+    diag = jnp.asarray(diag)
+    dinv = jnp.where(diag == 0, 1.0, 1.0 / diag).astype(dtype)
+    ax = dplan.axis_name
+
+    def build():
+        dot, norm = dist_dot(ax), dist_norm(ax)
+
+        def body(dev, bs, ds):
+            ops = jax.tree.map(lambda leaf: leaf[0], dev)
+            b_l, dinv_l = bs[0], ds[0]
+
+            def matvec(v):
+                return dplan.ops.shard_body(ops, v, axis_name=ax, mode=mode)
+
+            x_l, info = pcg(matvec, b_l, M=lambda r: r * dinv_l, tol=tol,
+                            maxiter=maxiter, dtype=dtype, dot=dot, norm=norm)
+            return x_l[None], info.iters, info.relres, info.history
+
+        f = shard_map_compat(
+            body, dplan.mesh,
+            in_specs=(dplan.dev_specs, Pspec(ax), Pspec(ax)),
+            out_specs=(Pspec(ax), Pspec(), Pspec(), Pspec()))
+        return jax.jit(f)
+
+    fn = dplan.cached_fn(("pcg", tol, maxiter, jnp.dtype(dtype).name, mode),
+                         build)
+    xs, k, relres, hist = fn(dplan.dev, dplan.shard_vector(b.astype(dtype)),
+                             dplan.shard_vector(dinv))
+    return dplan.unshard_vector(xs), SolveInfo(k, relres, hist)
 
 
 def pcg_fixed_iters(matvec: Matvec, M: Matvec, m_in: int,

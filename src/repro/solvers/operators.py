@@ -70,7 +70,10 @@ class OperatorSet:
         'packsell_bf16' | 'packsell_e8m<D>' (e.g. packsell_e8m8) |
         'plan_<codec>' (same codecs, dispatched through the cached
         :class:`~repro.kernels.plan.SpMVPlan` engine — the single-dispatch
-        hot path for Krylov inner loops)."""
+        hot path for Krylov inner loops) | 'dist_<codec>' (same codecs,
+        partitioned over every visible device and dispatched through a
+        :class:`~repro.distributed.plan.DistSpMVPlan` shard_map; global
+        vectors in/out, so it drops into any solver unchanged)."""
         if kind in self._cache:
             return self._cache[kind][0]
         if kind in ("fp64", "fp32", "fp16", "bf16"):
@@ -91,6 +94,12 @@ class OperatorSet:
                               codec=codec)
             p = kplan.get_plan(mat)
             fn = lambda x, mat=mat, p=p: p.spmv(mat, x)
+        elif kind.startswith("dist_"):
+            from repro.distributed import build_dist_plan
+            codec, D = self._parse_codec(kind[len("dist_"):])
+            mat = build_dist_plan(self.csr, C=self.C, sigma=self.sigma,
+                                  D=D, codec=codec)
+            fn = lambda x, dp=mat: dp.spmv(x)
         elif kind == "csr64":
             mat = sps.csr_from_scipy(self.csr, "float64")
             fn = lambda x, mat=mat: mat.spmv(x, jnp.float64)
@@ -112,3 +121,11 @@ class OperatorSet:
         self.matvec(kind)
         mat = self._cache[kind][1]
         return mat, kplan.get_plan(mat)
+
+    def dist_plan(self, kind: str):
+        """The :class:`~repro.distributed.plan.DistSpMVPlan` behind a
+        'dist_<codec>' kind — what ``cg.jacobi_pcg_dist`` consumes."""
+        if not kind.startswith("dist_"):
+            raise ValueError(f"{kind!r} is not a dist_ kind")
+        self.matvec(kind)
+        return self._cache[kind][1]

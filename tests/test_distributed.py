@@ -1,0 +1,347 @@
+"""Distributed PackSELL: partitioner, halo maps, padded shard blocks, the
+shard_map DistSpMVPlan dispatch, and the distributed Jacobi-PCG.
+
+Device-free tests (partition correctness, the reference replay of the
+stacked operands) always run; real multi-device tests are gated on
+``jax.device_count()`` and exercised by ``make verify-dist`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import packsell, testmats
+from repro.distributed import (assemble_global, build_dist_plan,
+                               build_operands, comm_matrix, halo,
+                               partition_rows, reference_spmv, split_csr)
+from repro.kernels import plan as kplan
+from repro.solvers import cg
+from repro.solvers import operators as op
+
+NDEV = jax.device_count()
+RNG = np.random.default_rng(11)
+
+need4 = pytest.mark.skipif(NDEV < 4, reason="needs >=4 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8)")
+need8 = pytest.mark.skipif(NDEV < 8, reason="needs >=8 devices")
+
+
+def _x(m, seed=0):
+    return np.random.default_rng(seed).standard_normal(m).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# partitioner (host-side, device-free)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,P", [(10, 1), (10, 3), (64, 4), (5, 8), (1, 2)])
+def test_partition_rows_balanced(n, P):
+    part = partition_rows(n, P)
+    assert int(part.counts.sum()) == n
+    assert int(part.counts.max() - part.counts.min()) <= 1
+    # every row owned by exactly the shard whose range contains it
+    owners = part.owner(np.arange(n))
+    for p in range(P):
+        r0, r1 = part.rows_of(p)
+        assert np.all(owners[r0:r1] == p)
+
+
+@pytest.mark.parametrize("P", [1, 2, 3, 5])
+def test_split_roundtrip_and_halo_classification(P):
+    a = testmats.scattered(120, nnz_per_row=6, spd=True, seed=2)
+    part = partition_rows(a.shape[0], P)
+    splits, h_pad = split_csr(a, part, n_pad=int(part.counts.max()))
+    back = assemble_global(part, splits, a.shape)
+    assert (abs(a - back) > 0).nnz == 0
+    for p, s in enumerate(splits):
+        r0, r1 = part.rows_of(p)
+        # halo columns are exactly the off-block ones, sorted and distinct
+        assert np.all(np.diff(s.halo_cols) > 0)
+        assert not np.any((s.halo_cols >= r0) & (s.halo_cols < r1))
+        assert len(s.halo_cols) <= h_pad
+    if P > 1:
+        cm = comm_matrix(part, splits)
+        assert np.all(np.diag(cm) == 0)
+        assert cm.sum() == sum(len(s.halo_cols) for s in splits)
+
+
+def test_halo_maps_agree_between_modes():
+    a = testmats.random_banded(200, 30, 6, seed=4)
+    part = partition_rows(a.shape[0], 4)
+    n_pad = int(part.counts.max())
+    splits, h_pad = split_csr(a, part, n_pad=n_pad)
+    maps = halo.build_halo_maps(part, [s.halo_cols for s in splits],
+                                n_pad=n_pad, h_pad=h_pad)
+    xs = RNG.standard_normal((4, n_pad)).astype(np.float32)
+    via_gather = halo.gather_halo_reference(xs, maps, "all_gather")
+    via_ring = halo.gather_halo_reference(xs, maps, "ppermute")
+    # both modes fill the valid halo slots with identical entries
+    for p, s in enumerate(splits):
+        h = len(s.halo_cols)
+        np.testing.assert_array_equal(via_gather[p, :h], via_ring[p, :h])
+        # and those entries are the owners' x values
+        own = part.owner(s.halo_cols)
+        want = xs[own, s.halo_cols - part.starts[own]]
+        np.testing.assert_array_equal(via_gather[p, :h], want)
+
+
+# ---------------------------------------------------------------------------
+# per-partition build hooks (core/packsell.py)
+# ---------------------------------------------------------------------------
+
+def test_pad_uniform_preserves_decode():
+    a = testmats.random_banded(100, 10, 4, seed=5)
+    mat = packsell.from_csr(a, C=8, sigma=16, D=10, codec="e8m",
+                            bucket_strategy="uniform", device=False)
+    S, w, C = mat.packs[0].shape
+    padded = packsell.pad_uniform(mat, n_slices=S + 3, width=w + 5,
+                                  n_rows=(S + 3) * C, device=False)
+    dense = packsell.decode_to_dense(mat)
+    dense_p = packsell.decode_to_dense(padded)
+    np.testing.assert_array_equal(dense_p[:mat.n], dense)
+    assert not np.any(dense_p[mat.n:])          # padding rows stay dead
+    with pytest.raises(ValueError):
+        packsell.pad_uniform(mat, n_slices=S - 1)
+    with pytest.raises(ValueError):
+        packsell.pad_uniform(mat, n_rows=(S + 3) * C + 1, n_slices=S + 3)
+
+
+def test_pad_uniform_padding_rows_dead_through_gather_epilogue():
+    """Padding rows must produce exactly 0 through BOTH epilogue forms —
+    the sentinel-drop scatter and the plan engine's inverse-permutation
+    gather (each row needs its own all-PAD stored slot)."""
+    a = testmats.random_banded(100, 10, 4, seed=5)
+    mat = packsell.from_csr(a, C=8, sigma=16, bucket_strategy="uniform",
+                            device=False)
+    S, w, C = mat.packs[0].shape
+    padded = packsell.pad_uniform(mat, n_slices=S + 2, width=w + 3,
+                                  n_rows=(S + 2) * C)
+    x = jnp.asarray(_x(a.shape[1], seed=12))
+    plan = kplan.get_plan(padded)
+    assert plan.inv_cat is not None            # gather form is exercised
+    y = np.asarray(plan.spmv(padded, x))
+    y_ref = np.asarray(packsell.packsell_spmv_jnp(
+        packsell.from_csr(a, C=8, sigma=16, bucket_strategy="uniform"), x))
+    np.testing.assert_allclose(y[:mat.n], y_ref, rtol=1e-6, atol=1e-6)
+    assert not np.any(y[mat.n:])
+
+
+def test_aggregate_memory_stats():
+    mats = [packsell.from_csr(testmats.stencil_1d(80, 2, seed=s), C=8,
+                              sigma=16, device=False) for s in range(3)]
+    agg = packsell.aggregate_memory_stats(mats)
+    assert agg["shards"] == 3
+    assert agg["nnz"] == sum(m.nnz for m in mats)
+    assert agg["max_shard_bytes"] >= agg["min_shard_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# stacked operands: host reference replay (device-free)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec,D", [("fp16", 15), ("bf16", 15),
+                                     ("e8m", 8), ("fixed16", 10)])
+@pytest.mark.parametrize("P", [1, 3, 6])
+def test_reference_spmv_matches_single_device(codec, D, P):
+    a = testmats.scattered(150, nnz_per_row=7, spd=True, seed=6)
+    ops = build_operands(a, P, C=8, sigma=16, D=D, codec=codec)
+    x = _x(a.shape[0], seed=1)
+    y = reference_spmv(ops, x)
+    mat = packsell.from_csr(a, C=8, sigma=16, D=D, codec=codec)
+    y1 = np.asarray(packsell.packsell_spmv_jnp(mat, jnp.asarray(x)))
+    np.testing.assert_allclose(y, y1, rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(y, reference_spmv(ops, x,
+                                                    mode="ppermute"))
+
+
+def test_reference_spmv_empty_shards():
+    a = testmats.stencil_1d(5, 1)                 # 5 rows over 8 shards
+    ops = build_operands(a, 8, C=4, sigma=4)
+    assert np.any(ops.part.counts == 0)
+    x = _x(5)
+    np.testing.assert_allclose(
+        reference_spmv(ops, x),
+        np.asarray(a.astype(np.float64) @ x), rtol=1e-3, atol=1e-3)
+
+
+def test_reference_spmv_all_halo_columns():
+    # pure off-diagonal circulant: with P=2 every referenced column is
+    # remote, A_loc is empty on both shards
+    n = 32
+    rows = np.arange(n)
+    a = sp.csr_matrix((np.ones(n, np.float32),
+                       (rows, (rows + n // 2) % n)), shape=(n, n))
+    ops = build_operands(a, 2, C=4, sigma=8)
+    assert all(s == 0 for s in
+               (m.nnz for m in ops.mats_loc))
+    x = _x(n, seed=2)
+    np.testing.assert_allclose(reference_spmv(ops, x),
+                               np.asarray(a @ x), rtol=1e-3, atol=1e-3)
+
+
+def test_shard_vector_roundtrip_and_mask():
+    a = testmats.stencil_1d(37, 2)
+    ops = build_operands(a, 3, C=8, sigma=8)
+    v = _x(37, seed=3)
+    vs = ops.stack_vector(v)
+    assert vs.shape == (3, ops.n_pad)
+    np.testing.assert_array_equal(ops.unstack_vector(vs), v)
+    # mask matches the per-shard row counts
+    np.testing.assert_array_equal(
+        ops.host["rowmask"].sum(axis=1).astype(int), ops.part.counts)
+
+
+# ---------------------------------------------------------------------------
+# real shard_map dispatch (P=1 always; multi-device gated)
+# ---------------------------------------------------------------------------
+
+def test_dist_plan_single_device_matches_plan_engine():
+    a = testmats.random_banded(300, 20, 6, seed=7)
+    dplan = build_dist_plan(a, 1, C=8, sigma=32, D=15, codec="fp16")
+    x = _x(a.shape[0], seed=4)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=15, codec="fp16")
+    y1 = np.asarray(kplan.get_plan(mat).spmv(mat, jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(dplan.spmv(x)), y1,
+                               rtol=1e-6, atol=1e-6)
+    st = dplan.memory_stats()
+    assert st["shards"] == 1 and st["h_pad"] == 0
+
+
+@need4
+@pytest.mark.parametrize("codec,D", [("fp16", 15), ("bf16", 15),
+                                     ("e8m", 8), ("fixed16", 10)])
+def test_dist_spmv_matches_single_device(codec, D):
+    a = testmats.hpcg(8, 8, 8)
+    x = _x(a.shape[0], seed=5)
+    mat = packsell.from_csr(a, C=32, sigma=64, D=D, codec=codec)
+    y1 = np.asarray(kplan.get_plan(mat).spmv(mat, jnp.asarray(x)))
+    dplan = build_dist_plan(a, 4, C=32, sigma=64, D=D, codec=codec)
+    for mode in halo.EXCHANGE_MODES:
+        np.testing.assert_allclose(np.asarray(dplan.spmv(x, mode=mode)),
+                                   y1, rtol=2e-5, atol=2e-5)
+
+
+@need4
+def test_dist_exchange_modes_bitwise_equal():
+    a = testmats.scattered(400, nnz_per_row=9, spd=True, seed=8)
+    dplan = build_dist_plan(a, 4, C=16, sigma=32)
+    x = _x(a.shape[0], seed=6)
+    np.testing.assert_array_equal(
+        np.asarray(dplan.spmv(x, mode="ppermute")),
+        np.asarray(dplan.spmv(x, mode="all_gather")))
+
+
+@need4
+def test_dist_spmm_matches_spmv_columns():
+    a = testmats.random_banded(256, 16, 5, seed=9)
+    dplan = build_dist_plan(a, 4, C=16, sigma=32)
+    X = RNG.standard_normal((a.shape[0], 4)).astype(np.float32)
+    Y = np.asarray(dplan.spmm(X))
+    for j in range(4):
+        np.testing.assert_allclose(Y[:, j], np.asarray(dplan.spmv(X[:, j])),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@need4
+def test_dist_matches_reference_replay():
+    a = testmats.powerlaw(300, mean_deg=4, seed=10)
+    a = a + a.T + sp.eye(300)                     # symmetric, nonzero diag
+    a = a.tocsr()
+    dplan = build_dist_plan(a, 4, C=8, sigma=16, D=8, codec="e8m")
+    x = _x(300, seed=7)
+    np.testing.assert_allclose(np.asarray(dplan.spmv(x)),
+                               reference_spmv(dplan.ops, x),
+                               rtol=1e-6, atol=1e-6)
+
+
+@need8
+def test_dist_spmv_8_devices_all_codecs():
+    a = testmats.hpcg(8, 8, 8)
+    x = _x(a.shape[0], seed=8)
+    for codec, D in [("fp16", 15), ("bf16", 15), ("e8m", 8),
+                     ("e8m", 4), ("fixed16", 10)]:
+        mat = packsell.from_csr(a, C=32, sigma=64, D=D, codec=codec)
+        y1 = np.asarray(kplan.get_plan(mat).spmv(mat, jnp.asarray(x)))
+        dplan = build_dist_plan(a, 8, C=32, sigma=64, D=D, codec=codec)
+        np.testing.assert_allclose(np.asarray(dplan.spmv(x)), y1,
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# distributed solvers
+# ---------------------------------------------------------------------------
+
+@need4
+def test_jacobi_pcg_dist_matches_stored_iterations():
+    a = testmats.hpcg(8, 8, 8)
+    s, _ = op.sym_scale(a)
+    b = jnp.asarray(RNG.standard_normal(s.shape[0]))
+    ops_set = op.OperatorSet(s, C=32, sigma=64)
+    mat, plan = ops_set.plan_pair("plan_fp16")
+    x1, info1 = cg.jacobi_pcg_stored(mat, plan, s.diagonal(), b,
+                                     tol=1e-6, maxiter=400,
+                                     dtype=jnp.float64)
+    dplan = build_dist_plan(s, 4, C=32, sigma=64, D=15, codec="fp16")
+    xd, infod = cg.jacobi_pcg_dist(dplan, s.diagonal(), b, tol=1e-6,
+                                   maxiter=400, dtype=jnp.float64)
+    assert int(infod.iters) == int(info1.iters)
+    assert float(infod.relres) < 1e-6
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(x1),
+                               rtol=1e-4, atol=1e-6)
+    # history agrees to summation-order rounding
+    h1, hd = np.asarray(info1.history), np.asarray(infod.history)
+    k = int(info1.iters)
+    np.testing.assert_allclose(hd[:k + 1], h1[:k + 1], rtol=1e-5, atol=0)
+
+
+@need8
+def test_jacobi_pcg_dist_8_devices():
+    a = testmats.hpcg(8, 8, 8)
+    s, _ = op.sym_scale(a)
+    b = jnp.asarray(RNG.standard_normal(s.shape[0]))
+    ops_set = op.OperatorSet(s, C=32, sigma=64)
+    mat, plan = ops_set.plan_pair("plan_fp16")
+    _, info1 = cg.jacobi_pcg_stored(mat, plan, s.diagonal(), b,
+                                    tol=1e-6, maxiter=400,
+                                    dtype=jnp.float64)
+    dplan = build_dist_plan(s, 8, C=32, sigma=64, D=15, codec="fp16")
+    _, infod = cg.jacobi_pcg_dist(dplan, s.diagonal(), b, tol=1e-6,
+                                  maxiter=400, dtype=jnp.float64)
+    assert int(infod.iters) == int(info1.iters)
+
+
+def test_operator_set_dist_kind():
+    a = testmats.stencil_3d(6, 6, 6, neighbours=7)
+    s, _ = op.sym_scale(a)
+    ops_set = op.OperatorSet(s, C=16, sigma=32)
+    mv = ops_set.matvec("dist_fp16")              # P = visible devices
+    x = _x(s.shape[0], seed=9)
+    y_ref = np.asarray(ops_set.matvec("plan_fp16")(jnp.asarray(x)))
+    np.testing.assert_allclose(np.asarray(mv(jnp.asarray(x))), y_ref,
+                               rtol=2e-5, atol=2e-5)
+    dplan = ops_set.dist_plan("dist_fp16")
+    assert dplan.n_shards == NDEV
+    with pytest.raises(ValueError):
+        ops_set.dist_plan("plan_fp16")
+
+
+def test_dist_matvec_inside_solver_loop():
+    """The dist_ matvec must be tracer-compatible: solvers call it on
+    loop-carried iterates inside ``lax.while_loop`` (the 'drops into any
+    solver unchanged' contract)."""
+    a = testmats.stencil_3d(6, 6, 6, neighbours=7)
+    s, _ = op.sym_scale(a)
+    ops_set = op.OperatorSet(s, C=16, sigma=32)
+    b = jnp.asarray(_x(s.shape[0], seed=13))
+    diag = jnp.asarray(s.diagonal().astype(np.float32))
+    M = lambda r: r / diag
+    x_d, info_d = cg.pcg(ops_set.matvec("dist_fp16"), b, M=M, tol=1e-5,
+                         maxiter=300, dtype=jnp.float32)
+    x_p, info_p = cg.pcg(ops_set.matvec("plan_fp16"), b, M=M, tol=1e-5,
+                         maxiter=300, dtype=jnp.float32)
+    assert int(info_d.iters) == int(info_p.iters)
+    np.testing.assert_allclose(np.asarray(x_d), np.asarray(x_p),
+                               rtol=1e-4, atol=1e-5)

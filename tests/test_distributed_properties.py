@@ -1,0 +1,85 @@
+"""Property-based tests (hypothesis) for the distributed layer: for random
+matrices, shard counts, codecs, and delta widths, partition-then-SpMV must
+equal the single-device result — including empty shards (n < P) and shards
+whose rows reference only remote columns. Uses the host reference replay of
+the stacked operands, so the properties hold on a single device; the real
+shard_map dispatch is pinned to the replay in tests/test_distributed.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import packsell as pk
+from repro.distributed import build_operands, reference_spmv
+
+FORMATS = st.sampled_from([("fp16", 15), ("bf16", 15), ("e8m", 4),
+                           ("e8m", 8), ("e8m", 12), ("fixed16", 10)])
+
+
+@st.composite
+def square_mats(draw, max_n=80):
+    n = draw(st.integers(1, max_n))
+    density = draw(st.floats(0.02, 0.4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    a = sp.random(n, n, density=density, random_state=rng,
+                  data_rvs=lambda k: rng.standard_normal(k)).tocsr()
+    a.sort_indices()
+    return a
+
+
+@given(square_mats(), st.integers(1, 7), FORMATS)
+@settings(max_examples=25, deadline=None)
+def test_partition_spmv_matches_single_device(a, n_shards, fmt):
+    codec, D = fmt
+    ops = build_operands(a, n_shards, C=4, sigma=8, D=D, codec=codec)
+    x = np.random.default_rng(0).standard_normal(a.shape[0]) \
+        .astype(np.float32)
+    y = reference_spmv(ops, x)
+    mat = pk.from_csr(a, C=4, sigma=8, D=D, codec=codec)
+    y1 = np.asarray(pk.packsell_spmv_jnp(mat, jnp.asarray(x)))
+    np.testing.assert_allclose(y, y1, rtol=3e-5, atol=3e-5)
+
+
+@given(square_mats(max_n=40), st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_partition_spmv_off_diagonal_only(a, n_shards):
+    """All-halo-column stress: zero the diagonal blocks so every stored
+    entry of every shard is remote."""
+    n = a.shape[0]
+    coo = a.tocoo()
+    # drop entries whose row and column land in the same shard
+    base, rem = divmod(n, n_shards)
+    counts = base + (np.arange(n_shards) < rem)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    owner = lambda i: np.searchsorted(starts, i, side="right") - 1
+    keep = owner(coo.row) != owner(coo.col)
+    a_off = sp.csr_matrix((coo.data[keep], (coo.row[keep], coo.col[keep])),
+                          shape=a.shape)
+    ops = build_operands(a_off, n_shards, C=4, sigma=8)
+    assert all(m.nnz == 0 for m in ops.mats_loc)
+    x = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    y1 = np.asarray(pk.packsell_spmv_jnp(
+        pk.from_csr(a_off, C=4, sigma=8), jnp.asarray(x)))
+    np.testing.assert_allclose(reference_spmv(ops, x), y1,
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(st.integers(1, 12), st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_partition_handles_empty_shards(n, n_shards):
+    """n < P leaves trailing shards with zero rows; SpMV must still match."""
+    rng = np.random.default_rng(n * 31 + n_shards)
+    a = sp.csr_matrix(rng.standard_normal((n, n)) *
+                      (rng.random((n, n)) < 0.5))
+    ops = build_operands(a, n_shards, C=4, sigma=4)
+    x = rng.standard_normal(n).astype(np.float32)
+    y1 = np.asarray(pk.packsell_spmv_jnp(
+        pk.from_csr(a, C=4, sigma=4), jnp.asarray(x)))
+    np.testing.assert_allclose(reference_spmv(ops, x), y1,
+                               rtol=3e-5, atol=3e-5)

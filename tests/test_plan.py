@@ -50,6 +50,41 @@ def test_plan_cache_hit_miss(banded_mat):
     assert kplan.cache_stats() == dict(hits=1, misses=3, evicted=0, size=3)
 
 
+def test_plan_cache_token_survives_id_reuse():
+    """Cache keys use a monotonically assigned per-matrix token, not
+    ``id(mat)``: after GC recycles an address, the dead matrix's deferred
+    weakref callback must not evict (or alias) the new matrix's plan."""
+    import gc
+
+    def make(seed):
+        return packsell.from_csr(testmats.stencil_1d(150, 2, seed=seed),
+                                 C=8, sigma=16, D=10, codec="e8m")
+
+    kplan.clear_cache()
+    mat = make(0)
+    kplan.get_plan(mat)
+    tok0 = mat._plan_token
+    dead_id = id(mat)
+    del mat
+    gc.collect()
+    assert kplan.cache_stats()["size"] == 0
+    hit_reused_id = False
+    for seed in range(1, 16):
+        m2 = make(seed)
+        hit_reused_id |= (id(m2) == dead_id)
+        p2 = kplan.get_plan(m2)
+        assert m2._plan_token != tok0          # tokens are never recycled
+        gc.collect()                           # flush stale weakref drops
+        assert kplan.get_plan(m2) is p2        # id reuse cannot evict/alias
+        tok0 = m2._plan_token
+        dead_id = id(m2)
+        del m2, p2
+        gc.collect()
+    # CPython reuses freed addresses aggressively; the loop above almost
+    # always exercises a genuine id collision, but correctness of the
+    # assertions does not depend on it.
+
+
 def test_plan_cache_evicts_on_matrix_death():
     kplan.clear_cache()
     a = testmats.stencil_1d(200, 2, seed=3)
