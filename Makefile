@@ -1,7 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test verify verify-dist bench bench-spmv bench-dist
+.PHONY: test verify verify-dist verify-precision bench bench-spmv \
+	bench-dist bench-precision
 
 test:
 	python -m pytest -x -q
@@ -19,6 +20,12 @@ verify-dist:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 		python examples/distributed_pcg.py --side 8
 
+# adaptive precision subsystem: selection/mixed/store tests + an
+# adaptive_pcg smoke (must hit 1e-8 with a low-precision preconditioner)
+verify-precision:
+	python -m pytest -x -q tests/test_precision.py tests/test_codec_edges.py
+	python examples/mixed_precision_solver.py --nx 6
+
 bench:
 	python -m benchmarks.run
 
@@ -29,3 +36,7 @@ bench-spmv:
 # regenerate the checked-in distributed scaling curve (small scale)
 bench-dist:
 	python -m benchmarks.run --only distributed --scale small
+
+# regenerate the checked-in accuracy/throughput frontier (small scale)
+bench-precision:
+	python -m benchmarks.run --only precision --scale small

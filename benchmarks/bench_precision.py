@@ -1,0 +1,165 @@
+"""Adaptive precision: accuracy-vs-throughput frontier + adaptive PCG trace.
+
+Two figures (the paper's accuracy/performance trade-off analogues,
+DESIGN.md §8):
+
+1. **Frontier** — for each suite matrix, every candidate codec's measured
+   probe error against its SpMV throughput and bytes/nnz, with the
+   selector's pick at a few budgets marked. This is the curve
+   ``precision.select`` walks.
+2. **Adaptive PCG trace** — outer-residual trajectory of
+   ``solvers.cg.adaptive_pcg`` (tier per step, promotions) vs the
+   full-FP32 PCG baseline on the SPD classes: iterations, wall time, and
+   the fraction of matvecs served by a sub-32-bit codec.
+
+Writes ``BENCH_precision.json`` at the repo root (perf trajectory file).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packsell as pk
+from repro.core import testmats
+from repro.kernels import plan as kplan
+from repro.precision import analyze, select_codec
+from repro.precision.select import DEFAULT_CANDIDATES
+from repro.solvers import cg
+from repro.solvers.operators import OperatorSet, row_scale, sym_scale
+
+from . import common
+
+_JSON_PATH = os.environ.get(
+    "REPRO_BENCH_PRECISION_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_precision.json"))
+
+BUDGETS = (1e-2, 1e-4, 1e-6)
+
+
+def _spd_suite(scale: str) -> dict:
+    if scale == "tiny":
+        return {"banded": testmats.random_banded(512, 24, 6, seed=1),
+                "powerlaw": testmats.powerlaw(512, mean_deg=5, spd=True,
+                                              seed=2)}
+    n = 4000 if scale == "small" else 20_000
+    return {"banded": testmats.random_banded(n, 24, 6, seed=1),
+            "powerlaw": testmats.powerlaw(n, mean_deg=5, spd=True, seed=2)}
+
+
+def _frontier(name: str, a0) -> list:
+    """Probe error vs throughput for every candidate on one matrix."""
+    a, _ = row_scale(a0)
+    a = a.tocsr()
+    a.sort_indices()
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
+    rows = []
+    for codec, D in DEFAULT_CANDIDATES:
+        mat = pk.from_csr(a, C=32, sigma=256, D=D, codec=codec)
+        # dispatch through the plan engine: the matrix rides as a jit
+        # ARGUMENT (a closure constant would be XLA-constant-folded —
+        # minutes of compile per candidate on the wide matrices)
+        plan = kplan.get_plan(mat)
+        fn = lambda x, mm=mat, p=plan: p.spmv(mm, x)      # noqa: E731
+        t = common.time_fn(fn, x)
+        perr = analyze.probe_error(a, codec, D, n_probes=2, seed=0)
+        st = mat.memory_stats()
+        row = dict(codec=codec, D=D, t_us=t * 1e6,
+                   probe_err=perr,
+                   bytes_per_nnz=st["packsell_bytes"] / max(a.nnz, 1),
+                   dummy_frac=mat.n_dummy / max(a.nnz, 1))
+        rows.append(row)
+        common.emit("precision_frontier", f"{name}_{codec}{D}", **row)
+    # the selector's picks at each budget
+    for budget in BUDGETS:
+        plan = select_codec(a, budget, n_probes=2)
+        c = plan.primary
+        common.emit("precision_select", f"{name}_b{budget:g}",
+                    budget=budget, codec=c.codec, D=c.D)
+        rows.append(dict(selected_at_budget=budget, codec=c.codec, D=c.D))
+    return rows
+
+
+def _adaptive_trace(name: str, a0, budget: float = 1e-3) -> dict:
+    """adaptive_pcg iteration/time trace vs full-FP32 PCG."""
+    a, _ = sym_scale(a0)
+    ops = OperatorSet(a, C=32, sigma=256)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal(a.shape[0]))
+    diag = ops.diag()
+    dinv = jnp.asarray(np.where(diag == 0, 1.0, 1.0 / diag))
+    M = lambda r: r * dinv                                   # noqa: E731
+
+    def timed(fn):
+        fn()                          # compile
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out[0])
+        return out, time.perf_counter() - t0
+
+    mv32 = ops.matvec("fp32")
+    (x32, i32), t_fp32 = timed(lambda: cg.pcg(
+        mv32, b, M=M, tol=1e-8, maxiter=2000))
+    tiers, labels, sub32, hi = ops.adaptive_tiers(budget, n_probes=2)
+    (xa, ia), t_ad = timed(lambda: cg.adaptive_pcg(
+        tiers, b, M=M, matvec_hi=hi, tol=1e-8, maxiter=60, m_in=16))
+
+    btrue = np.asarray(b, np.float64)
+    true32 = float(np.linalg.norm(btrue - a @ np.asarray(x32, np.float64))
+                   / np.linalg.norm(btrue))
+    truead = float(np.linalg.norm(btrue - a @ np.asarray(xa, np.float64))
+                   / np.linalg.norm(btrue))
+    counts = np.asarray(ia.tier_matvecs)
+    total_mv = int(counts.sum() + int(ia.hi_matvecs))
+    frac = float(counts[np.asarray(sub32)].sum() / max(total_mv, 1))
+    k = int(ia.iters)
+    trace = dict(
+        ladder=labels, budget=budget,
+        fp32_pcg=dict(iters=int(i32.iters), true_relres=true32,
+                      t_s=t_fp32, matvecs=int(i32.iters) + 1),
+        adaptive=dict(outer=k, true_relres=truead, t_s=t_ad,
+                      relres_history=[float(v) for v in
+                                      np.asarray(ia.history)[:k + 1]],
+                      tier_history=[int(v) for v in
+                                    np.asarray(ia.tier_history)[:k]],
+                      promotions=int(ia.promotions),
+                      tier_matvecs=[int(c) for c in counts],
+                      hi_matvecs=int(ia.hi_matvecs),
+                      sub32_matvec_frac=frac),
+    )
+    common.emit("precision_adaptive", name,
+                fp32_iters=int(i32.iters), fp32_true=true32,
+                adaptive_outer=k, adaptive_true=truead,
+                promotions=int(ia.promotions), sub32_frac=frac,
+                t_fp32_s=t_fp32, t_adaptive_s=t_ad)
+    return trace
+
+
+def run(scale: str | None = None) -> None:
+    scale = scale or common.SCALE
+    frontier = {}
+    for name, a0 in testmats.suite("tiny" if scale == "tiny"
+                                   else "small").items():
+        frontier[name] = _frontier(name, a0)
+
+    traces = {}
+    for name, a0 in _spd_suite(scale).items():
+        traces[name] = _adaptive_trace(name, a0)
+
+    payload = dict(
+        scale=scale, backend=jax.default_backend(),
+        note=("frontier: probe error vs SpMV throughput per codec, with "
+              "select_codec picks; adaptive: adaptive_pcg trace vs "
+              "full-FP32 PCG (both to 1e-8)"),
+        frontier=frontier, adaptive=traces,
+    )
+    with open(_JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
+    print(f"[bench_precision] wrote {_JSON_PATH}")

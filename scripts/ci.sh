@@ -20,6 +20,14 @@ if [[ "${1:-}" != "fast" ]]; then
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
     python examples/distributed_pcg.py --side 8
 
+  echo "== precision: subsystem tests + adaptive_pcg smoke =="
+  # the example's adaptive section must converge to 1e-8 with a
+  # low-precision (sub-32-bit) operator/preconditioner; the store
+  # round-trips under a tmpdir inside the pytest run
+  python -m pytest -x -q tests/test_precision.py tests/test_codec_edges.py
+  python examples/mixed_precision_solver.py --nx 6 | tee /tmp/adaptive_smoke.txt
+  grep -q "sub-32-bit matvecs" /tmp/adaptive_smoke.txt
+
   echo "== smoke: benchmarks (spmv, tiny scale) =="
   # writes artifacts/bench_results.json and BENCH_spmv.json; the tiny-scale
   # JSON is a smoke artifact only — the checked-in BENCH_spmv.json is

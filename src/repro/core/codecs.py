@@ -31,6 +31,14 @@ Codecs supported (all W=32):
 
 All pack/unpack entry points exist twice: a numpy version (host-side format
 construction) and a jnp version (device compute / Pallas kernel bodies).
+
+Choosing *which* codec and delta width to use is the job of the adaptive
+precision subsystem (``repro.precision``): ``precision.analyze`` carries the
+per-codec a-priori quantization-error model (ulp bounds, range-clipping
+penalties) validated by empirical probes, and ``precision.select`` turns an
+error budget into a :class:`~repro.precision.select.PrecisionPlan`. The
+error model, the selection policy, and the special-value (inf/NaN/subnormal)
+rounding rules of the encoders below are documented in DESIGN.md §8.
 """
 from __future__ import annotations
 
@@ -84,7 +92,8 @@ class Codec:
 
 def _encode_f16_np(values: np.ndarray, D: int) -> np.ndarray:
     assert D <= 15, "fp16 embed needs V >= 16 (D <= 15)"
-    h = values.astype(np.float16)
+    with np.errstate(over="ignore"):  # out-of-range -> inf, IEEE overflow
+        h = values.astype(np.float16)
     return h.view(np.uint16).astype(np.uint32) << np.uint32(16)
 
 
@@ -97,14 +106,36 @@ def _decode_f16_np(vbits: np.ndarray, D: int) -> np.ndarray:
     return (vbits >> np.uint32(16)).astype(np.uint16).view(np.float16)
 
 
+def _rne_truncate_f32_np(u: np.ndarray, low: int) -> np.ndarray:
+    """RNE-truncate FP32 bit patterns to their top ``32 - low`` bits.
+
+    inf/NaN (exponent all-ones) are truncated WITHOUT rounding: adding the
+    rounding increment to an all-ones pattern wraps the uint32 and would
+    silently turn a NaN into a small finite number. A NaN whose surviving
+    mantissa bits are all zero keeps the quiet bit (bit 22) when that bit is
+    kept, so NaN stays NaN; with no mantissa bits kept it collapses to inf
+    (documented in DESIGN.md §8).
+    """
+    u = np.asarray(u, dtype=np.uint32)
+    mask = ~np.uint32((1 << low) - 1)
+    lsb = (u >> np.uint32(low)) & np.uint32(1)
+    with np.errstate(over="ignore"):
+        rounded = (u + lsb + np.uint32((1 << (low - 1)) - 1)) & mask
+    special = (u & np.uint32(0x7F800000)) == np.uint32(0x7F800000)
+    if not np.any(special):
+        return rounded
+    trunc = u & mask
+    is_nan = special & ((u & np.uint32(0x007FFFFF)) != 0)
+    if low <= 22:  # quiet bit survives truncation
+        trunc = np.where(is_nan, trunc | np.uint32(1 << 22), trunc)
+    return np.where(special, trunc, rounded)
+
+
 def _encode_bf16_np(values: np.ndarray, D: int) -> np.ndarray:
     assert D <= 15, "bf16 embed needs V >= 16 (D <= 15)"
     u = np.ascontiguousarray(values.astype(np.float32)).view(np.uint32)
     # round-to-nearest-even truncation to the top 16 bits
-    low = np.uint32(16)
-    lsb = (u >> low) & np.uint32(1)
-    rounded = u + lsb + np.uint32((1 << 15) - 1)
-    return rounded & np.uint32(0xFFFF0000)
+    return _rne_truncate_f32_np(u, 16)
 
 
 def _decode_bf16_jnp(vbits: jnp.ndarray, D: int) -> jnp.ndarray:
@@ -127,12 +158,8 @@ def _encode_e8m_np(values: np.ndarray, D: int) -> np.ndarray:
     but round-to-nearest-even instead of round-half-away (documented in
     DESIGN.md; difference is at most 1 ulp of the truncated format).
     """
-    u = np.ascontiguousarray(values.astype(np.float32)).view(np.uint32).copy()
-    low = np.uint32(D + 1)
-    lsb = (u >> low) & np.uint32(1)
-    half = np.uint32((1 << D) - 1)  # (1 << (low-1)) - 1
-    rounded = u + lsb + half  # RNE: add half, ties to even via lsb
-    return rounded & ~np.uint32(delta_mask(D))
+    u = np.ascontiguousarray(values.astype(np.float32)).view(np.uint32)
+    return _rne_truncate_f32_np(u, D + 1)
 
 
 def _decode_e8m_jnp(vbits: jnp.ndarray, D: int) -> jnp.ndarray:
@@ -196,10 +223,26 @@ def pack_words_np(values: np.ndarray, deltas: np.ndarray, flags: np.ndarray,
     flags==1: value embedded, delta must fit D bits.
     flags==0: delta occupies 31 bits, value ignored (dummy / padding).
     """
+    deltas = np.asarray(deltas)
+    if np.any(deltas < 0):
+        raise ValueError("negative delta in word stream")
     deltas = deltas.astype(np.uint64)
     flags = flags.astype(np.uint32)
-    assert np.all(deltas[flags == 1] < (1 << D)), "flag=1 delta overflows D bits"
-    assert np.all(deltas < (1 << (W - 1))), "delta overflows W-1 bits"
+    # Explicit validation (not asserts): a delta that overflows its field
+    # would silently wrap into the value/flag bits and corrupt the matrix.
+    bad = (flags == 1) & (deltas >= (1 << D))
+    if np.any(bad):
+        k = int(np.nonzero(bad)[0][0])
+        raise ValueError(
+            f"flag=1 delta {int(deltas[k])} at word {k} overflows the "
+            f"D={D}-bit field; insert a dummy word "
+            f"(core.delta.emit_word_stream) or raise D")
+    if np.any(deltas >= (1 << (W - 1))):
+        k = int(np.nonzero(deltas >= (1 << (W - 1)))[0][0])
+        raise ValueError(
+            f"dummy delta {int(deltas[k])} at word {k} overflows the "
+            f"{W - 1}-bit field; chain dummy words "
+            f"(core.delta.dummies_for_deltas)")
     payload = codec.encode_np(np.asarray(values, dtype=np.float32), D)
     word1 = payload | ((deltas.astype(np.uint32)) << np.uint32(1)) | np.uint32(1)
     word0 = (deltas.astype(np.uint32)) << np.uint32(1)

@@ -327,9 +327,9 @@ def from_csr(a: sp.csr_matrix, *, C: int = 128, sigma: int = 256, D: int = 15,
 
     k_left = de.lower_bandwidth(indptr, indices, n)
     d0_row = de.d0_for_rows(n, sigma, k_left)
-    deltas, needs_dummy, stored_len = de.encode_rows(indptr, indices, d0_row, D)
+    deltas, n_dummies, stored_len = de.encode_rows(indptr, indices, d0_row, D)
     w_values, w_deltas, w_flags, _, n_words = de.emit_word_stream(
-        values, deltas, needs_dummy)
+        values, deltas, n_dummies)
     words = cd.pack_words_np(w_values, w_deltas, w_flags, codec_obj, D)
     row_word_start = _cumsum0(stored_len)
 
@@ -383,7 +383,7 @@ def from_csr(a: sp.csr_matrix, *, C: int = 128, sigma: int = 256, D: int = 15,
         maxcols=tuple(to_dev(mc) for mc in maxcols_l),
         perm=to_dev(perm),
         n=n, m=m, C=C, sigma=sigma, D=D, codec_name=codec, k_left=k_left,
-        nnz=int(a.nnz), n_dummy=int(needs_dummy.sum()),
+        nnz=int(a.nnz), n_dummy=int(n_dummies.sum()),
         words_sell_padded=words_sell_padded, words_bucketed=int(words_bucketed),
     )
 

@@ -108,13 +108,13 @@ def scattered(n: int, m: int | None = None, nnz_per_row: int = 8,
 
 
 def powerlaw(n: int, mean_deg: int = 8, alpha: float = 2.0,
-             seed: int = 0) -> sp.csr_matrix:
+             spd: bool = False, seed: int = 0) -> sp.csr_matrix:
     rng = np.random.default_rng(seed)
     deg = np.minimum((rng.pareto(alpha, n) + 1) * mean_deg, n // 2).astype(int)
     rows = np.repeat(np.arange(n), deg)
     cols = rng.integers(0, n, size=rows.size)
     vals = rng.standard_normal(rows.size) * 0.1
-    return _finish(rows, cols, vals, n, n, rng, False)
+    return _finish(rows, cols, vals, n, n, rng, spd)
 
 
 def hpcg(nx: int, ny: int, nz: int, seed: int = 0) -> sp.csr_matrix:

@@ -345,6 +345,15 @@ class SpMVPlan:
         return self._dispatch("spmm")(mat, self._device_operands(), x,
                                       permuted)
 
+    def describe(self) -> dict:
+        """Machine-readable plan summary (serving warmup logs, and the
+        precision store's retile records key off this)."""
+        return {"variant": self.variant, "policy": self.policy,
+                "tiles": [list(t) for t in self.tiles], "hw": self.hw,
+                "interpret": self.interpret, "n": self.n, "m": self.m,
+                "total_stored": self.total_stored,
+                "cursor_cache": self.cols is not None}
+
     # -- autotune hook -----------------------------------------------------
     def retile(self, tiles) -> None:
         """Install per-bucket (sb, wb) winners (benchmarks/bench_kernels.py

@@ -13,6 +13,7 @@ the Pallas kernel path serves the single-request case).
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,8 @@ import scipy.sparse as sp
 
 from repro.core import packsell as pk
 from repro.kernels import plan as kplan
+
+log = logging.getLogger(__name__)
 
 
 def prune_magnitude(w: np.ndarray, density: float) -> np.ndarray:
@@ -44,18 +47,57 @@ class PackSELLLinear:
     mat: pk.PackSELLMatrix
     density: float
     dense_bytes: int
+    # adaptive-precision provenance (codec="auto"; DESIGN.md §8)
+    precision_plan: object = None     # precision.select.PrecisionPlan | None
+    fingerprint: str | None = None
+    from_store: bool = False
 
     @classmethod
     def from_dense(cls, w: np.ndarray, *, density: float = 0.3,
                    codec: str = "bf16", D: int = 15, C: int = 128,
-                   sigma: int = 256) -> "PackSELLLinear":
+                   sigma: int = 256, error_budget: float = 1e-3,
+                   store=None) -> "PackSELLLinear":
         """``w``: [in, out] dense kernel (column-major convention used by
-        ``layers.dense_init``); stored transposed so rows = outputs."""
+        ``layers.dense_init``); stored transposed so rows = outputs.
+
+        ``codec="auto"`` hands the choice to the adaptive precision
+        subsystem: ``repro.precision`` selects the cheapest ``(codec, D)``
+        whose probe error fits ``error_budget`` on the pruned weight, with
+        ``store`` (a ``precision.PrecisionStore`` or path) skipping
+        re-analysis across restarts. The selection plan and matrix
+        fingerprint are kept on the layer for serving-warmup logs.
+        """
+        from repro import precision as pr
         wp = prune_magnitude(np.asarray(w, np.float32), density)
         csr = sp.csr_matrix(wp.T)     # [out, in]
+        pplan, from_store = None, False
+        # fingerprint unconditionally: warmup restores (sb, wb) retile
+        # winners for caller-fixed codecs too, not only codec="auto"
+        fingerprint = pr.matrix_fingerprint(csr)
+        if codec == "auto":
+            if store is not None:
+                store = pr.PrecisionStore.coerce(store)
+                pplan, from_store = store.lookup_or_select(
+                    csr, error_budget, sigma=sigma)
+            else:
+                pplan = pr.select_codec(csr, error_budget, sigma=sigma)
+            prim = pplan.primary
+            if prim.codec == "fp32":
+                # no packed codec fits the budget; the best PackSELL can
+                # store is E8M21 — louder than the budget, so say so
+                codec, D = "e8m", 1
+                log.warning(
+                    "PackSELLLinear codec='auto': no packed codec fits "
+                    "error_budget=%.3g (selection says fp32); storing "
+                    "e8m/D=1 (~2.4e-7 relative error) instead — the "
+                    "budget is NOT met", error_budget)
+            else:
+                codec, D = prim.codec, prim.D
         mat = pk.from_csr(csr, C=C, sigma=sigma, D=D, codec=codec)
         return cls(mat=mat, density=density,
-                   dense_bytes=w.size * np.dtype(np.float32).itemsize)
+                   dense_bytes=w.size * np.dtype(np.float32).itemsize,
+                   precision_plan=pplan, fingerprint=fingerprint,
+                   from_store=from_store)
 
     @property
     def plan(self) -> kplan.SpMVPlan:
@@ -84,6 +126,21 @@ class PackSELLLinear:
             xb = jnp.zeros((batch, self.mat.m), jnp.float32)
             jax.block_until_ready(self(xb))
         return self.plan
+
+    def describe(self) -> dict:
+        """Codec provenance for serving-warmup logs (DecodeEngine)."""
+        return {
+            "codec": self.mat.codec_name, "D": self.mat.D,
+            "shape": [self.mat.n, self.mat.m], "density": self.density,
+            "auto_selected": self.precision_plan is not None,
+            # False only when selection fell back to fp32 but the layer
+            # had to store a packed codec anyway (budget not certified)
+            "budget_met": (self.precision_plan is None
+                           or self.precision_plan.primary.codec
+                           == self.mat.codec_name),
+            "from_store": self.from_store, "fingerprint": self.fingerprint,
+            "memory_ratio": self.memory_ratio(),
+        }
 
     def memory_ratio(self) -> float:
         """Stored bytes vs the dense fp32 weight."""

@@ -1,0 +1,30 @@
+"""Adaptive precision subsystem (DESIGN.md §8).
+
+The paper's central axis is precision *agnosticism*: PackSELL gives
+fine-grained control over the bit split between column deltas and values.
+This package is the decision layer above the format — it chooses the split
+instead of requiring the caller to:
+
+* :mod:`~repro.precision.analyze` — per-matrix value/delta statistics, an
+  a-priori quantization-error model per codec, and a cheap empirical probe.
+* :mod:`~repro.precision.select` — turns an error budget into a
+  :class:`~repro.precision.select.PrecisionPlan` (globally or per
+  row-class), with a machine-readable rationale.
+* :mod:`~repro.precision.mixed` — :class:`~repro.precision.mixed.MixedPackSELL`,
+  rows partitioned by required precision into PackSELL blocks at different
+  codecs, composed as one jitted operator.
+* :mod:`~repro.precision.store` — on-disk JSON autotune store keyed by a
+  matrix fingerprint, merged with ``(sb, wb)`` retile winners, so serving
+  restarts skip re-analysis.
+
+The end-to-end mixed-precision solve (``solvers/cg.py::adaptive_pcg``)
+consumes the plan's tier ladder: low-precision inner PCG, residual
+stagnation detection, codec-tier promotion mid-solve.
+"""
+from .analyze import (AnalysisReport, CandidateReport, analyze_matrix,  # noqa: F401
+                      matrix_stats, model_error, probe_error,
+                      probe_error_rows)
+from .mixed import MixedPackSELL  # noqa: F401
+from .select import (PrecisionClass, PrecisionPlan, select_codec,  # noqa: F401
+                     tier_ladder)
+from .store import PrecisionStore, matrix_fingerprint  # noqa: F401

@@ -1,0 +1,206 @@
+"""On-disk autotune store for precision selections (DESIGN.md §8.4).
+
+Selection costs an analysis pass plus probe matvecs per candidate; a
+serving restart should not pay it again. The store is a single JSON file
+mapping a **matrix fingerprint** — shape / nnz / bandwidth / row-degree
+histogram / value-range hash, NOT the full contents — to:
+
+* ``precision``: the serialized :class:`~repro.precision.select.PrecisionPlan`
+  (with its machine-readable rationale), and
+* ``retile``: the ``(sb, wb)`` tile winners per plan-cache key from the
+  kernel autotuner (``benchmarks/bench_kernels.py`` →
+  ``SpMVPlan.retile``), merged into the same entry so one lookup restores
+  both decisions.
+
+Writes are atomic (tmp file + ``os.replace``) so a crashed process never
+truncates the store. The fingerprint hashes a deterministic sample of the
+sparsity pattern and values: collisions between *different* matrices of
+identical shape statistics are possible in principle but harmless — the
+stored plan is a starting point whose probe guarantee can be re-validated
+cheaply via ``validate=True``.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+import numpy as np
+import scipy.sparse as sp
+
+from . import analyze as an
+from . import select as se
+
+
+def matrix_fingerprint(a: sp.csr_matrix) -> str:
+    """Stable content fingerprint of a CSR matrix (hex, 16 chars)."""
+    a = a.tocsr()
+    a.sort_indices()
+    h = hashlib.sha256()
+    n, m = a.shape
+    row_nnz = np.diff(a.indptr)
+    # log2-binned row-degree histogram: shape of the sparsity structure
+    hist = np.bincount(
+        np.clip(np.log2(np.maximum(row_nnz, 1)).astype(np.int64), 0, 31),
+        minlength=32)
+    data = np.abs(a.data.astype(np.float64))
+    nzmin = float(data[data > 0].min()) if np.any(data > 0) else 0.0
+    stats = (n, m, int(a.nnz), float(data.max(initial=0.0)), nzmin,
+             float(a.data.astype(np.float64).sum()))
+    h.update(repr(stats).encode())
+    h.update(hist.tobytes())
+    # deterministic sample of the pattern + values
+    step = max(1, a.nnz // 1024)
+    h.update(np.ascontiguousarray(a.indices[::step]).tobytes())
+    h.update(np.ascontiguousarray(
+        a.data[::step].astype(np.float32)).tobytes())
+    return h.hexdigest()[:16]
+
+
+class PrecisionStore:
+    """A JSON file of fingerprint → {precision, retile, meta} entries."""
+
+    VERSION = 1
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        self._entries: dict = {}
+        self.load()
+
+    @classmethod
+    def coerce(cls, store_or_path) -> "PrecisionStore":
+        """Accept an existing store or a path to one (the polymorphic
+        ``store=`` argument every integration point takes)."""
+        if isinstance(store_or_path, cls):
+            return store_or_path
+        return cls(store_or_path)
+
+    # -- persistence -------------------------------------------------------
+    def load(self) -> None:
+        if os.path.exists(self.path):
+            with open(self.path) as f:
+                blob = json.load(f)
+            if blob.get("version", 1) != self.VERSION:
+                raise ValueError(
+                    f"precision store {self.path} has version "
+                    f"{blob.get('version')}, expected {self.VERSION}")
+            self._entries = blob.get("entries", {})
+        else:
+            self._entries = {}
+
+    def save(self) -> None:
+        """Atomic write: tmp file in the same directory + os.replace."""
+        blob = {"version": self.VERSION, "entries": self._entries}
+        d = os.path.dirname(os.path.abspath(self.path)) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, default=float)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    # -- precision plans ---------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return fingerprint in self._entries
+
+    def get_plan(self, fingerprint: str,
+                 mode: str = "global") -> se.PrecisionPlan | None:
+        ent = self._entries.get(fingerprint)
+        key = "precision" if mode == "global" else f"precision:{mode}"
+        if ent is None or key not in ent:
+            return None
+        return se.PrecisionPlan.from_dict(ent[key])
+
+    def put_plan(self, plan: se.PrecisionPlan, *,
+                 fingerprint: str | None = None, save: bool = True) -> str:
+        fp = fingerprint or plan.fingerprint
+        if not fp:
+            raise ValueError("need a fingerprint (plan.fingerprint unset)")
+        key = ("precision" if plan.mode == "global"
+               else f"precision:{plan.mode}")
+        self._entries.setdefault(fp, {})[key] = plan.to_dict()
+        if save:
+            self.save()
+        return fp
+
+    def lookup_or_select(self, a: sp.csr_matrix, error_budget: float, *,
+                         validate: bool = False, save: bool = True,
+                         **select_kw):
+        """Return ``(plan, from_store)``: the stored selection when the
+        fingerprint hits (optionally re-validating its probe guarantee
+        against the actual matrix), a fresh :func:`~repro.precision.select.
+        select_codec` run (persisted) otherwise.
+
+        A stored plan only counts as a hit when its selection semantics
+        cover the request: same ``mode`` (a rows-mode plan's primary class
+        is NOT budget-certified for the whole matrix and vice versa), a
+        budget and safety at least as tight as requested, and — when the
+        caller restricts ``candidates`` — every stored class inside the
+        requested candidate set.
+        """
+        fp = matrix_fingerprint(a)
+        mode = select_kw.get("mode", "global")
+        safety = select_kw.get("safety", 0.5)
+        plan = self.get_plan(fp, mode=mode)
+        if plan is not None and "candidates" in select_kw:
+            allowed = {tuple(c) for c in select_kw["candidates"]}
+            allowed.add(("fp32", 0))     # the fallback is always legal
+            if not all((c.codec, c.D) in allowed for c in plan.classes):
+                plan = None              # stored plan uses excluded codecs
+        if plan is not None and plan.primary.codec == "fp32":
+            # fallback plan: certifies "nothing packed fits plan.budget",
+            # which transfers to TIGHTER requests only — a looser budget
+            # may admit a packed codec and must reselect
+            budget_ok = error_budget <= plan.error_budget
+        elif plan is not None:
+            budget_ok = plan.error_budget <= error_budget
+        else:
+            budget_ok = False
+        if (plan is not None and budget_ok
+                and plan.rationale.get("safety", 1.0) <= safety):
+            if not validate:
+                return plan, True
+            c = plan.primary
+            err = (0.0 if c.codec == "fp32" else an.probe_error(
+                a, c.codec, c.D,
+                n_probes=select_kw.get("n_probes", 3),
+                seed=select_kw.get("seed", 0) + 1))
+            if err <= error_budget:
+                return plan, True
+            # stale entry (fingerprint collision / matrix drift): reselect
+        plan = se.select_codec(a, error_budget, fingerprint=fp, **select_kw)
+        self.put_plan(plan, fingerprint=fp, save=save)
+        return plan, False
+
+    # -- retile winners ----------------------------------------------------
+    def put_retile(self, fingerprint: str, key: str, tiles, *,
+                   save: bool = True) -> None:
+        """Record kernel-autotune ``(sb, wb)`` winners under a plan key
+        (e.g. ``'plan_e8m8'`` or a bucket signature)."""
+        ent = self._entries.setdefault(fingerprint, {})
+        ent.setdefault("retile", {})[key] = [
+            [int(sb), int(wb)] for sb, wb in tiles]
+        if save:
+            self.save()
+
+    def get_retile(self, fingerprint: str, key: str):
+        ent = self._entries.get(fingerprint, {})
+        tiles = ent.get("retile", {}).get(key)
+        return None if tiles is None else [tuple(t) for t in tiles]
+
+    def apply_retile(self, fingerprint: str, key: str, plan) -> bool:
+        """Install stored tile winners into an
+        :class:`~repro.kernels.plan.SpMVPlan`; True when applied."""
+        tiles = self.get_retile(fingerprint, key)
+        if tiles is None or len(tiles) != len(plan.tiles):
+            return False
+        plan.retile(tiles)
+        return True

@@ -19,9 +19,12 @@ tests.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from functools import partial
 from typing import Optional
+
+log = logging.getLogger(__name__)
 
 import jax
 import jax.numpy as jnp
@@ -88,7 +91,7 @@ class DecodeEngine:
 
     # ------------------------------------------------------------------
     def warmup(self, prompt_lens=(), sparse_layers=(),
-               dist_plans=()) -> None:
+               dist_plans=(), precision_store=None) -> None:
         """Move compilation out of the serving hot path (the engine analogue
         of the SpMVPlan rule: host-side decisions happen at setup, ticks are
         single dispatches). Compiles the pool decode step and the given
@@ -97,7 +100,16 @@ class DecodeEngine:
         pre-traces any distributed plans
         (``repro.distributed.DistSpMVPlan`` — weight matrices too large for
         one device serve their matvecs through the sharded dispatch) so the
-        first real tick pays neither tracing nor plan construction."""
+        first real tick pays neither tracing nor plan construction.
+
+        ``precision_store`` — a ``repro.precision.PrecisionStore`` or a
+        path to one — restores kernel-autotune ``(sb, wb)`` retile winners
+        into each layer's plan and logs which layers run auto-selected
+        codecs (``PackSELLLinear.from_dense(codec="auto")``)."""
+        store = precision_store
+        if store is not None:
+            from repro.precision import PrecisionStore
+            store = PrecisionStore.coerce(store)
         tokens = jnp.zeros((self.scfg.slots, 1), jnp.int32)
         logits, _ = self._decode(self.params, tokens, self.cache)
         jax.block_until_ready(logits)
@@ -106,8 +118,25 @@ class DecodeEngine:
             logits, _ = self._prefill_fn(int(plen))(
                 self.params, {"tokens": toks})
             jax.block_until_ready(logits)
-        for lin in sparse_layers:
-            lin.warmup()
+        for i, lin in enumerate(sparse_layers):
+            desc = lin.describe() if hasattr(lin, "describe") else {}
+            if store is not None and desc.get("fingerprint"):
+                key = f"plan_{desc['codec']}{desc['D']}"
+                if store.apply_retile(desc["fingerprint"], key, lin.plan):
+                    log.info("warmup: layer %d retiled from store (%s)",
+                             i, key)
+            plan = lin.warmup()
+            if desc.get("auto_selected"):
+                log.info(
+                    "warmup: layer %d codec=%s D=%d auto-selected (%s), "
+                    "memory_ratio=%.3f, plan=%s", i, desc["codec"],
+                    desc["D"],
+                    "store hit" if desc.get("from_store") else "analyzed",
+                    desc.get("memory_ratio", float("nan")),
+                    plan.describe()["variant"])
+            elif desc:
+                log.info("warmup: layer %d codec=%s D=%d (caller-fixed)",
+                         i, desc["codec"], desc["D"])
         for dp in dist_plans:
             dp.warmup(nb=self.scfg.slots)
 

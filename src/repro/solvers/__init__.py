@@ -1,5 +1,5 @@
 """Mixed-precision Krylov solvers built on the PackSELL SpMV substrate."""
 from . import cg, f3r, gmres, iocg, operators, precond, richardson  # noqa: F401
-from .cg import fcg, pcg, pcg_fixed_iters  # noqa: F401
+from .cg import adaptive_pcg, fcg, pcg, pcg_fixed_iters  # noqa: F401
 from .gmres import fgmres, fgmres_fixed_cycles  # noqa: F401
 from .operators import OperatorSet, row_scale, sym_scale  # noqa: F401

@@ -21,6 +21,18 @@ class SolveInfo(NamedTuple):
     history: jnp.ndarray     # relres per iteration, -1 past convergence
 
 
+class AdaptiveSolveInfo(NamedTuple):
+    """Outcome of :func:`adaptive_pcg` (all device scalars/arrays)."""
+
+    iters: jnp.ndarray         # outer (refinement) steps executed
+    relres: jnp.ndarray        # final TRUE relative residual ||b-Ax||/||b||
+    history: jnp.ndarray       # true relres per outer step, -1 past end
+    tier_history: jnp.ndarray  # int32 tier used per outer step, -1 past end
+    promotions: jnp.ndarray    # number of codec-tier promotions
+    tier_matvecs: jnp.ndarray  # int32[n_tiers] inner matvecs per tier
+    hi_matvecs: jnp.ndarray    # high-precision (residual) matvecs
+
+
 def dist_dot(axis_name: str):
     """⟨a, b⟩ over a device mesh axis: the local partial reduces with a
     ``psum`` so every shard holds the identical global scalar (vectors are
@@ -220,6 +232,113 @@ def jacobi_pcg_dist(dplan, diag: jnp.ndarray, b: jnp.ndarray, *,
     xs, k, relres, hist = fn(dplan.dev, dplan.shard_vector(b.astype(dtype)),
                              dplan.shard_vector(dinv))
     return dplan.unshard_vector(xs), SolveInfo(k, relres, hist)
+
+
+def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
+                 matvec_hi: Matvec | None = None, tol: float = 1e-9,
+                 maxiter: int = 60, m_in: int = 16, x0=None,
+                 dtype=None, stag_factor: float = 0.25,
+                 start_tier: int = 0
+                 ) -> tuple[jnp.ndarray, AdaptiveSolveInfo]:
+    """Residual-adaptive mixed-precision PCG (the paper's §6 recipe,
+    iterative-refinement style; DESIGN.md §8.5).
+
+    ``tiers`` is an ordered codec ladder of matvec callables, lowest
+    precision first and an (effectively) exact operator last — typically
+    ``precision.select.build_tier_matvecs`` over a
+    :class:`~repro.precision.select.PrecisionPlan`'s
+    :func:`~repro.precision.select.tier_ladder`. The solve runs entirely
+    inside ONE ``lax.while_loop``:
+
+    * each outer step runs ``m_in`` inner PCG iterations on the correction
+      equation ``A_q d = r`` using the CURRENT tier's low-precision
+      operator (and the preconditioner ``M``), then updates ``x`` and
+      recomputes the TRUE residual with ``matvec_hi`` (default: the last
+      tier) — the classic iterative-refinement outer loop, so the final
+      accuracy is set by the outer precision, not the codec;
+    * **residual stagnation** — the true residual contracting by less than
+      ``stag_factor`` over an outer step (the contraction of refinement is
+      ≈ ``ε_codec·κ``, so a weak contraction means the tier's quantization
+      floor has been hit) — **promotes** the operator to the next codec
+      tier mid-solve. Tier choice is a traced ``lax.switch``: no re-trace,
+      no loop exit.
+
+    Returns ``(x, AdaptiveSolveInfo)`` with per-tier matvec counts, so
+    callers can verify how much of the solve ran sub-32-bit.
+    """
+    if not tiers:
+        raise ValueError("need at least one tier")
+    n_tiers = len(tiers)
+    dot, norm = jnp.vdot, jnp.linalg.norm
+    b, x0, bnorm, dtype = _prep(b, x0, dtype, norm)
+    M = M or (lambda r: r)
+    hi = matvec_hi or tiers[-1]
+    branches = [lambda v, f=f: f(v).astype(dtype) for f in tiers]
+
+    def mv(tier, v):
+        return jax.lax.switch(tier, branches, v)
+
+    def inner_solve(tier, rhs):
+        """m_in PCG iterations on A_tier d = rhs from d0 = 0."""
+        d = jnp.zeros_like(rhs)
+        r = rhs
+        z = M(r).astype(dtype)
+        p = z
+        rz = dot(r, z)
+
+        def body(_, s):
+            d, r, z, p, rz = s
+            Ap = mv(tier, p)
+            pAp = dot(p, Ap)
+            alpha = rz / jnp.where(pAp == 0, 1.0, pAp)
+            d = d + alpha * p
+            r = r - alpha * Ap
+            z = M(r).astype(dtype)
+            rz_new = dot(r, z)
+            beta = rz_new / jnp.where(rz == 0, 1.0, rz)
+            p = z + beta * p
+            return (d, r, z, p, rz_new)
+
+        d, *_ = jax.lax.fori_loop(0, m_in, body, (d, r, z, p, rz))
+        return d
+
+    hist_dtype = jnp.float64 if dtype == jnp.float64 else jnp.float32
+    r0 = b - hi(x0).astype(dtype)
+    rel0 = norm(r0) / bnorm
+    hist0 = jnp.full((maxiter + 1,), -1.0, hist_dtype).at[0].set(
+        rel0.astype(hist_dtype))
+    thist0 = jnp.full((maxiter + 1,), -1, jnp.int32)
+    mv0 = jnp.zeros((n_tiers,), jnp.int32)
+
+    def cond(s):
+        k, x, r, relres, tier, nprom, mvc, hic, hist, thist = s
+        return jnp.logical_and(k < maxiter, relres >= tol)
+
+    def body(s):
+        k, x, r, relres, tier, nprom, mvc, hic, hist, thist = s
+        d = inner_solve(tier, r)
+        x = x + d
+        r = b - hi(x).astype(dtype)
+        rel_new = norm(r) / bnorm
+        mvc = mvc.at[tier].add(m_in)
+        hic = hic + 1
+        # stagnation: the tier's quantization floor caps the contraction
+        stalled = rel_new > stag_factor * relres
+        promote = jnp.logical_and(
+            jnp.logical_and(stalled, rel_new >= tol),
+            tier < n_tiers - 1)
+        tier_next = tier + promote.astype(tier.dtype)
+        hist = hist.at[k + 1].set(rel_new.astype(hist_dtype))
+        thist = thist.at[k].set(tier.astype(jnp.int32))
+        return (k + 1, x, r, rel_new, tier_next,
+                nprom + promote.astype(nprom.dtype), mvc, hic, hist, thist)
+
+    s0 = (jnp.asarray(0), x0, r0, rel0,
+          jnp.asarray(min(start_tier, n_tiers - 1)), jnp.asarray(0),
+          mv0, jnp.asarray(1), hist0, thist0)
+    k, x, r, relres, tier, nprom, mvc, hic, hist, thist = \
+        jax.lax.while_loop(cond, body, s0)
+    return x, AdaptiveSolveInfo(k, relres, hist, thist, nprom, mvc, hic)
 
 
 def pcg_fixed_iters(matvec: Matvec, M: Matvec, m_in: int,

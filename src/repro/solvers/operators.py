@@ -65,6 +65,46 @@ class OperatorSet:
             return "e8m", int(sub[3:])
         raise ValueError(sub)
 
+    # -- adaptive-precision hooks (repro.precision; DESIGN.md §8) ----------
+    def precision_plan(self, error_budget: float, *, mode: str = "global",
+                       store=None, **select_kw):
+        """Budget → :class:`~repro.precision.select.PrecisionPlan` for this
+        matrix (cached per (budget, mode)). ``store`` — a
+        :class:`~repro.precision.store.PrecisionStore` (or path) — skips
+        re-analysis across restarts."""
+        from repro import precision as pr
+
+        key = ("pplan", error_budget, mode,
+               None if store is None else getattr(store, "path", store),
+               tuple(sorted(select_kw.items())))
+        if key in self._cache:
+            return self._cache[key]
+        if store is not None:
+            store = pr.PrecisionStore.coerce(store)
+            plan, _ = store.lookup_or_select(self.csr, error_budget,
+                                             mode=mode, sigma=self.sigma,
+                                             **select_kw)
+        else:
+            plan = pr.select_codec(self.csr, error_budget, mode=mode,
+                                   sigma=self.sigma, **select_kw)
+        self._cache[key] = plan
+        return plan
+
+    def adaptive_tiers(self, error_budget: float, *, store=None,
+                       **select_kw):
+        """The ``adaptive_pcg`` inputs for this matrix at a budget:
+        ``(matvecs, labels, sub32_mask, matvec_hi)`` over the plan's tier
+        ladder. ``matvec_hi`` is the FP64 operator for the outer
+        (true-residual) recomputation — iterative refinement recovers the
+        OUTER precision, so the 1e-8 criterion needs it even though every
+        inner tier stays sub-32-bit."""
+        from repro.precision import select as psel
+
+        plan = self.precision_plan(error_budget, store=store, **select_kw)
+        mvs, labels, sub32 = psel.build_tier_matvecs(
+            self, psel.tier_ladder(plan))
+        return mvs, labels, sub32, self.matvec("fp64")
+
     def matvec(self, kind: str) -> Matvec:
         """kind: 'fp64' | 'fp32' | 'fp16' | 'bf16' | 'packsell_fp16' |
         'packsell_bf16' | 'packsell_e8m<D>' (e.g. packsell_e8m8) |
@@ -73,7 +113,11 @@ class OperatorSet:
         hot path for Krylov inner loops) | 'dist_<codec>' (same codecs,
         partitioned over every visible device and dispatched through a
         :class:`~repro.distributed.plan.DistSpMVPlan` shard_map; global
-        vectors in/out, so it drops into any solver unchanged)."""
+        vectors in/out, so it drops into any solver unchanged) |
+        'auto:<budget>' (adaptive: ``repro.precision`` selects the codec
+        for the error budget, e.g. auto:1e-3) | 'mixed:<budget>'
+        (per-row-class selection composed as one
+        :class:`~repro.precision.mixed.MixedPackSELL` operator)."""
         if kind in self._cache:
             return self._cache[kind][0]
         if kind in ("fp64", "fp32", "fp16", "bf16"):
@@ -103,6 +147,22 @@ class OperatorSet:
         elif kind == "csr64":
             mat = sps.csr_from_scipy(self.csr, "float64")
             fn = lambda x, mat=mat: mat.spmv(x, jnp.float64)
+        elif kind.startswith("auto:"):
+            # budget-driven global selection ('auto:1e-3') — delegates to
+            # the selected codec's plan_ kind (or fp32 fallback)
+            from repro.precision import select as psel
+            plan = self.precision_plan(float(kind[len("auto:"):]))
+            fn = self.matvec(psel.operator_kind(plan.primary))
+            mat = self._cache[psel.operator_kind(plan.primary)][1]
+        elif kind.startswith("mixed:"):
+            # budget-driven per-row-class selection ('mixed:1e-3') — a
+            # MixedPackSELL composite operator
+            from repro import precision as pr
+            plan = self.precision_plan(float(kind[len("mixed:"):]),
+                                       mode="rows")
+            mat = pr.MixedPackSELL(self.csr, plan, C=self.C,
+                                   sigma=self.sigma)
+            fn = mat.spmv
         else:
             raise ValueError(kind)
         self._cache[kind] = (fn, mat)

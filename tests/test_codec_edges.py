@@ -1,0 +1,289 @@
+"""Codec edge cases: E8MY round-to-nearest-even corners, special values,
+delta-overflow validation, chained dummy words (ISSUE 3 satellites)."""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import codecs as cd
+from repro.core import delta as de
+from repro.core import packsell
+
+F32 = np.float32
+
+
+def _q(name, D, vals):
+    return cd.quantize_np(np.asarray(vals, F32), cd.make_codec(name), D)
+
+
+# ---------------------------------------------------------------------------
+# E8MY round-to-nearest-even
+# ---------------------------------------------------------------------------
+
+
+def test_e8m_rne_ties_to_even():
+    """A value exactly halfway between two representable outputs must round
+    to the one with an even (zero) last kept mantissa bit."""
+    D = 15                      # Y = 7 mantissa bits kept
+    # construct exact ties: kept mantissa k, dropped bits = 100...0
+    for k in (0, 1, 2, 3):
+        u = np.array([0x3F800000 | (k << (D + 1)) | (1 << D)], np.uint32)
+        v = u.view(F32)[0]
+        q = _q("e8m", D, [v])[0]
+        qu = int(np.asarray([q], F32).view(np.uint32)[0])
+        kept = (qu >> (D + 1)) & 0x7F
+        assert kept % 2 == 0, (k, hex(qu))        # ties -> even
+
+
+def test_e8m_rounds_to_nearest_not_truncate():
+    D = 15
+    # value just ABOVE the halfway point must round up
+    v = np.array([0x3F800000 | (1 << D) | 1], np.uint32).view(F32)[0]
+    q = _q("e8m", D, [v])[0]
+    assert q > v
+    # value just BELOW halfway must round down (to the base)
+    v2 = np.array([0x3F800000 | ((1 << D) - 1)], np.uint32).view(F32)[0]
+    q2 = _q("e8m", D, [v2])[0]
+    assert q2 == np.float32(1.0)
+
+
+@pytest.mark.parametrize("D", [1, 8, 15, 22])
+def test_e8m_special_values_preserved(D):
+    """inf stays inf, NaN stays NaN (or inf at Y=0 where no mantissa bit
+    survives — documented), signs preserved, no uint32 wraparound."""
+    vals = np.array([np.inf, -np.inf, np.nan, 0.0, -0.0], F32)
+    q = _q("e8m", D, vals)
+    assert np.isposinf(q[0]) and np.isneginf(q[1])
+    if D <= 21:                 # Y >= 1: a mantissa bit survives
+        assert np.isnan(q[2])
+    else:                       # Y = 0: NaN collapses to inf
+        assert np.isinf(q[2])
+    assert q[3] == 0.0 and q[4] == 0.0
+
+
+@pytest.mark.parametrize("name,D", [("e8m", 8), ("bf16", 15)])
+def test_rne_no_wraparound_on_allones_patterns(name, D):
+    """The old rounding added the increment to ALL patterns; an all-ones
+    NaN pattern (0xFFFFFFFF) wrapped past 2^32 into a tiny positive
+    number. Regression: specials never round."""
+    u = np.array([0xFFFFFFFF, 0x7FFFFFFF], np.uint32)
+    vals = u.view(F32)
+    q = _q(name, D, vals)
+    assert np.all(np.isnan(q))
+
+
+@pytest.mark.parametrize("name,D", [("e8m", 8), ("e8m", 1), ("bf16", 15),
+                                    ("fp16", 15)])
+def test_overflow_rounds_to_inf_not_wrap(name, D):
+    """Finite values at the top of the range round to ±inf (IEEE), never
+    wrap into the other sign or a small number."""
+    vals = np.array([3.4028235e38, -3.4028235e38], F32)  # max finite fp32
+    q = _q(name, D, vals)
+    if name == "e8m" and D == 1:
+        # Y=21: max finite survives
+        assert np.isfinite(q).all() or np.isinf(q).all()
+        assert np.sign(q[0]) > 0 and np.sign(q[1]) < 0
+    else:
+        assert np.isposinf(q[0]) and np.isneginf(q[1])
+
+
+def test_e8m_subnormal_inputs_truncate_toward_zero_magnitude():
+    """Subnormals keep exponent 0: truncation yields a (smaller-magnitude)
+    subnormal or zero — never a normal number or a wrapped pattern."""
+    tiny = np.array([1e-40, -1e-40, 5e-324, 2.0 ** -149], F32)
+    for D in (1, 8, 22):
+        q = _q("e8m", D, tiny)
+        # RNE on the subnormal grid: at most one truncated-ulp above
+        assert np.all(np.abs(q) <= np.abs(tiny) + (1 << D) * 2.0 ** -149)
+        assert np.all(np.isfinite(q))
+        assert np.all(np.sign(q) * np.sign(tiny) >= 0)
+
+
+@pytest.mark.parametrize("D", [1, 22])
+def test_e8m_extreme_D_roundtrip_bounds(D):
+    """D at both extremes: Y=21 is near-lossless, Y=0 keeps only sign+exp
+    (error up to a factor of 2 relative)."""
+    rng = np.random.default_rng(0)
+    vals = (rng.standard_normal(2048) *
+            np.exp(rng.uniform(-20, 20, 2048))).astype(F32)
+    q = _q("e8m", D, vals)
+    Y = 22 - D
+    rel = np.abs(q.astype(np.float64) - vals.astype(np.float64)) / \
+        np.abs(vals.astype(np.float64))
+    assert np.all(rel <= 2.0 ** -(Y + 1) + 1e-12)
+
+
+def test_e8m_idempotent():
+    """quantize(quantize(v)) == quantize(v) for every D (RNE to a fixed
+    grid is a projection)."""
+    rng = np.random.default_rng(1)
+    vals = rng.standard_normal(512).astype(F32)
+    for D in (1, 8, 15, 22):
+        q1 = _q("e8m", D, vals)
+        q2 = _q("e8m", D, q1)
+        np.testing.assert_array_equal(q1, q2)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis round-trip property (guarded: container may lack hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def _ulp_bound(name: str, D: int) -> float:
+    return {"e8m": 2.0 ** -(23 - D), "bf16": 2.0 ** -8,
+            "fp16": 2.0 ** -11}.get(name, np.inf)
+
+
+def test_roundtrip_error_within_documented_ulp_bound_all_codecs():
+    """decode(encode(v)) error <= the documented ulp bound for every
+    registered codec (dense random sweep; the hypothesis variant below
+    explores adversarial bit patterns when available)."""
+    rng = np.random.default_rng(2)
+    vals = (rng.standard_normal(4096) *
+            np.exp(rng.uniform(-8, 8, 4096))).astype(F32)
+    cases = [("fp16", 15), ("fp16", 8), ("bf16", 15)] + \
+        [("e8m", D) for D in (1, 4, 8, 12, 15, 22)]
+    for name, D in cases:
+        q = _q(name, D, vals).astype(np.float64)
+        v64 = vals.astype(np.float64)
+        if name == "fp16":
+            in_range = (np.abs(v64) < 65504) & (np.abs(v64) >= 2.0 ** -14)
+        else:
+            in_range = np.abs(v64) >= 2.0 ** -126
+        rel = np.abs(q - v64)[in_range] / np.abs(v64)[in_range]
+        assert rel.max(initial=0.0) <= _ulp_bound(name, D) + 1e-12, (name, D)
+    # fixed point: absolute bound within range
+    for frac, D in ((16, 10), (8, 4)):
+        c = cd.make_codec(f"fixed{frac}")
+        vals_f = rng.uniform(-100, 100, 1024).astype(F32)
+        V = cd.vbits_for(D)
+        lim = 2.0 ** (V - 1 - frac)
+        ok = np.abs(vals_f) < lim * 0.99
+        q = cd.quantize_np(vals_f, c, D).astype(np.float64)
+        aerr = np.abs(q - vals_f.astype(np.float64))[ok]
+        assert aerr.max(initial=0.0) <= 2.0 ** -(frac + 1) + 1e-12
+
+
+def test_roundtrip_property_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st_
+
+    @settings(max_examples=200, deadline=None)
+    @given(st_.floats(width=32, allow_nan=False, allow_infinity=False,
+                      min_value=2.0 ** -120, max_value=3e38),
+           st_.sampled_from([("e8m", 1), ("e8m", 8), ("e8m", 15),
+                             ("e8m", 22), ("bf16", 15), ("fp16", 15)]),
+           st_.booleans())
+    def prop(v, case, neg):
+        name, D = case
+        v = -v if neg else v
+        q = float(_q(name, D, [v])[0])
+        if name == "fp16" and (abs(v) >= 65504 or abs(v) < 2.0 ** -14):
+            return
+        if not np.isfinite(q):
+            # RNE overflow at the very top of the fp32 range (coarse Y
+            # rounds values above ~1.5*2^127 up to inf)
+            assert abs(v) > 1e38
+            return
+        assert abs(q - v) <= _ulp_bound(name, D) * abs(v) + 1e-45
+
+    prop()
+    del hyp
+
+
+# ---------------------------------------------------------------------------
+# delta-overflow validation + chained dummies (satellite bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_pack_words_rejects_overflowing_flag1_delta():
+    c = cd.make_codec("fp16")
+    with pytest.raises(ValueError, match="overflows the D=4-bit field"):
+        cd.pack_words_np(np.zeros(1, F32), np.array([1 << 10]),
+                         np.array([1], np.uint8), c, 4)
+
+
+def test_pack_words_rejects_overflowing_dummy_delta():
+    c = cd.make_codec("fp16")
+    with pytest.raises(ValueError, match="chain dummy words"):
+        cd.pack_words_np(np.zeros(1, F32), np.array([1 << 31]),
+                         np.array([0], np.uint8), c, 4)
+
+
+def test_pack_words_rejects_negative_delta():
+    c = cd.make_codec("fp16")
+    with pytest.raises(ValueError, match="negative delta"):
+        cd.pack_words_np(np.zeros(1, F32), np.array([-1]),
+                         np.array([1], np.uint8), c, 4)
+
+
+def test_chained_dummies_reconstruct_any_delta():
+    deltas = np.array([5, (1 << 31) + 12345, (1 << 33) + 7, 1 << 40],
+                      np.int64)
+    nd = de.dummies_for_deltas(deltas, 4)
+    assert nd.tolist() == [0, 2, 5, 513]
+    wv, wd, wf, pos, nw = de.emit_word_stream(
+        np.arange(len(deltas), dtype=F32), deltas, nd)
+    assert nw == len(deltas) + nd.sum()
+    # the chain sums back to the original delta ahead of each element
+    acc, got = 0, []
+    for d, f in zip(wd, wf):
+        acc += int(d)
+        if f == 1:
+            got.append(acc)
+            acc = 0
+    assert got == deltas.tolist()
+    # and every emitted word fits its field
+    c = cd.make_codec("fp16")
+    words = cd.pack_words_np(wv, wd, wf, c, 4)
+    _, d2, f2 = cd.unpack_words_np(words, c, 4)
+    np.testing.assert_array_equal(d2, wd)
+    np.testing.assert_array_equal(f2, wf)
+
+
+def test_from_csr_pathological_gap_matrix_regression():
+    """Regression (satellite bugfix): sparse rows whose column gap exceeds
+    the D-bit delta field must decode exactly via auto-inserted dummy
+    words — never silently wrap the column cursor."""
+    n, m = 8, 1_000_001
+    rows, cols, vals = [], [], []
+    for i in range(n):
+        rows += [i, i, i]
+        cols += [0, 65_537, 999_999]      # gaps straddle 2^16 and ~2^20
+        vals += [1.0, 2.0, 3.0]
+    a = sp.csr_matrix((vals, (rows, cols)), shape=(n, m))
+    for D, codec in ((1, "e8m"), (8, "e8m"), (15, "fp16"), (22, "e8m")):
+        mat = packsell.from_csr(a, C=4, sigma=8, D=D, codec=codec)
+        # gaps ~2^16 and ~2^20: dummies required below D=20, not at D=22
+        assert (mat.n_dummy > 0) == (D < 20)
+        dense = packsell.decode_to_dense(mat)
+        ref = np.zeros((n, m), np.float32)
+        ref[:, 0], ref[:, 65_537], ref[:, 999_999] = 1.0, 2.0, 3.0
+        # values land on exactly the right columns, codec-quantized
+        # (at D=22 / Y=0 even 3.0 rounds — compare the quantized truth)
+        want = cd.quantize_np(ref, cd.make_codec(codec), D)
+        np.testing.assert_array_equal(dense, want)
+
+
+def test_from_csr_beyond_31_bit_gap_uses_dummy_chain():
+    """A column gap >= 2^31 (previously an assert / silent wrap under -O)
+    now packs via a chain of dummy words and decodes to the right
+    columns."""
+    m = (1 << 31) + 1000
+    a = sp.csr_matrix(
+        (np.array([1.0, 2.0]),
+         (np.array([0, 0]), np.array([3, (1 << 31) + 500], dtype=np.int64))),
+        shape=(2, m))
+    mat = packsell.from_csr(a, C=2, sigma=4, D=8, codec="e8m")
+    assert mat.n_dummy >= 2
+    pack = np.asarray(mat.packs[0])
+    S, w, C = pack.shape
+    v, d, f = cd.unpack_words_np(pack.reshape(-1), mat.codec, mat.D)
+    d = d.astype(np.int64).reshape(S, w, C)
+    f = f.reshape(S, w, C)
+    v = np.asarray(v, F32).reshape(S, w, C)
+    cols = np.asarray(mat.d0s[0])[:, None, None] + np.cumsum(d, axis=1)
+    got = sorted((int(cols[s, j, c]), float(v[s, j, c]))
+                 for s in range(S) for j in range(w) for c in range(C)
+                 if f[s, j, c] == 1)
+    assert got == [(3, 1.0), ((1 << 31) + 500, 2.0)]

@@ -1,0 +1,519 @@
+"""Adaptive precision subsystem: analyze / select / mixed / store /
+adaptive_pcg (DESIGN.md §8)."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import codecs as cd
+from repro.core import packsell as pk
+from repro.core import testmats
+from repro.precision import (MixedPackSELL, PrecisionStore, analyze,
+                             matrix_fingerprint, select_codec, tier_ladder)
+from repro.precision.select import (PrecisionClass, PrecisionPlan,
+                                    build_tier_matvecs, operator_kind)
+from repro.solvers import cg
+from repro.solvers.operators import OperatorSet, sym_scale
+
+TINY = list(testmats.suite("tiny").items())
+
+
+# ---------------------------------------------------------------------------
+# analyze
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_stats_values_and_deltas():
+    a = sp.csr_matrix(np.array([[2.0, 0, 0, 0.5],
+                                [0, -8.0, 0, 0],
+                                [0, 0, 0.25, 0],
+                                [1.0, 0, 0, 4.0]]))
+    st = analyze.matrix_stats(a, sigma=4)
+    assert st.n == st.m == 4 and st.nnz == 6
+    assert st.max_abs == 8.0 and st.min_abs_nz == 0.25
+    assert st.dyn_range == 32.0
+    assert st.row_max_abs[1] == 8.0
+    assert st.row_min_abs_nz[0] == 0.5
+    assert st.max_delta == 3  # row 0: 0 -> 3
+
+
+@pytest.mark.parametrize("name,a", TINY, ids=[m[0] for m in TINY])
+def test_dummy_word_count_matches_format(name, a):
+    """stats.dummy_words(D) must equal what from_csr actually inserts."""
+    st = analyze.matrix_stats(a, sigma=32)
+    for D in (2, 8, 15):
+        mat = pk.from_csr(a, C=8, sigma=32, D=D, codec="e8m"
+                          if D <= 22 else "fp16")
+        assert st.dummy_words(D) == mat.n_dummy
+
+
+def test_model_error_orders_by_mantissa():
+    a = testmats.stencil_1d(200, 2)
+    st = analyze.matrix_stats(a)
+    errs = [analyze.model_error("e8m", D, st) for D in (15, 10, 5, 1)]
+    assert errs == sorted(errs, reverse=True)
+    # fp16 overflow clipping -> inf
+    big = sp.csr_matrix(np.array([[1e38, 0], [0, 1.0]]))
+    stb = analyze.matrix_stats(big)
+    assert analyze.model_error("fp16", 15, stb) == np.inf
+    assert np.isfinite(analyze.model_error("bf16", 15, stb))
+
+
+@pytest.mark.parametrize("codec,D", [("e8m", 8), ("e8m", 1), ("bf16", 15),
+                                     ("fp16", 15)])
+def test_probe_error_within_model_bound(codec, D):
+    """The measured probe error respects the a-priori element bound up to
+    the row-sum amplification (|A||x| / |Ax| is O(1) for these SPD mats)."""
+    a = testmats.hpcg(6, 6, 6)
+    st = analyze.matrix_stats(a)
+    bound = analyze.model_error(codec, D, st)
+    probe = analyze.probe_error(a, codec, D, n_probes=2, seed=0)
+    assert probe <= 50 * bound
+    assert probe >= 0.0
+
+
+def test_probe_error_rows_flags_quantization_heavy_rows():
+    rng = np.random.default_rng(0)
+    dense = np.zeros((8, 8))
+    dense[:4, :4] = rng.standard_normal((4, 4))
+    dense[4:, 4:] = rng.standard_normal((4, 4)) * 1.0000001  # same scale
+    a = sp.csr_matrix(dense)
+    errs = analyze.probe_error_rows(a, "e8m", 8, n_probes=2)
+    assert errs.shape == (8,)
+    assert np.all(errs <= 2.0 ** -13)  # elementwise bound, no cancellation
+
+
+# ---------------------------------------------------------------------------
+# select — the acceptance property
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,a", TINY, ids=[m[0] for m in TINY])
+@pytest.mark.parametrize("budget", [1e-2, 1e-4, 1e-6])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_selected_codec_respects_budget(name, a, budget, seed):
+    """Acceptance: on every Table-1 analogue class, the selected codec's
+    measured probe error — re-measured with INDEPENDENT probe vectors —
+    respects the requested budget."""
+    plan = select_codec(a, budget, n_probes=2, seed=seed)
+    c = plan.primary
+    if c.codec == "fp32":
+        return  # fallback is exact
+    fresh = analyze.probe_error(a, c.codec, c.D, n_probes=3,
+                                seed=seed + 1000)
+    assert fresh <= budget, (name, c.label, fresh, budget)
+
+
+def test_select_rationale_is_machine_readable():
+    a = TINY[0][1]
+    plan = select_codec(a, 1e-3, n_probes=2)
+    blob = json.loads(plan.to_json())
+    assert blob["mode"] == "global"
+    decisions = [c["decision"] for c in blob["rationale"]["candidates"]]
+    assert any(d.startswith("selected") for d in decisions)
+    # round-trip
+    plan2 = PrecisionPlan.from_json(plan.to_json())
+    assert plan2.primary == plan.primary
+    assert plan2.error_budget == plan.error_budget
+
+
+def test_select_prefers_fewer_words_at_budget():
+    """The cost ranking must price delta feasibility: a long-gap matrix at
+    a loose budget should pick a D large enough to avoid dummy words."""
+    a = testmats.scattered(512, nnz_per_row=5, seed=3)
+    plan = select_codec(a, 1e-2, n_probes=2)
+    st = analyze.matrix_stats(a)
+    c = plan.primary
+    sel = next(x for x in plan.rationale["candidates"]
+               if x["decision"].startswith("selected"))
+    # no candidate with fewer words also fits the budget
+    for cand in plan.rationale["candidates"]:
+        if cand["words"] < sel["words"]:
+            assert not cand["decision"].startswith("selected")
+    assert st.dummy_words(c.D) == sel["dummy_words"]
+
+
+def test_select_falls_back_to_fp32_on_impossible_budget():
+    a = TINY[0][1]
+    plan = select_codec(a, 1e-12, n_probes=2)
+    assert plan.primary.codec == "fp32"
+    assert "fallback" in plan.rationale
+
+
+def test_select_rows_partitions_and_respects_budget():
+    a = testmats.powerlaw(512, mean_deg=5, seed=5)
+    budget = 1e-4
+    plan = select_codec(a, budget, mode="rows", n_probes=2, max_classes=2)
+    assert plan.mode == "rows"
+    assert len(plan.classes) <= 2
+    all_rows = np.concatenate([np.asarray(c.rows) for c in plan.classes])
+    assert sorted(all_rows.tolist()) == list(range(a.shape[0]))
+    # every row's class respects the budget on fresh probes
+    for c in plan.classes:
+        if c.codec == "fp32":
+            continue
+        errs = analyze.probe_error_rows(a, c.codec, c.D, n_probes=2,
+                                        seed=99)
+        assert np.all(errs[np.asarray(c.rows)] <= budget)
+
+
+# ---------------------------------------------------------------------------
+# MixedPackSELL
+# ---------------------------------------------------------------------------
+
+
+def _mixed_reference(a, plan):
+    """Dense reference: each row quantized at its class codec."""
+    dense = a.toarray().astype(np.float64)
+    out = np.zeros_like(dense)
+    for c in plan.classes:
+        rows = (np.arange(a.shape[0]) if c.rows is None
+                else np.asarray(c.rows))
+        if c.codec == "fp32":
+            out[rows] = dense[rows].astype(np.float32)
+        else:
+            out[rows] = cd.quantize_np(
+                dense[rows].astype(np.float32), cd.make_codec(c.codec), c.D)
+    return out
+
+
+def test_mixed_spmv_matches_per_class_quantized_reference():
+    a = testmats.powerlaw(512, mean_deg=5, seed=5)
+    plan = select_codec(a, 1e-4, mode="rows", n_probes=2, max_classes=3)
+    mx = MixedPackSELL(a, plan, C=8, sigma=32)
+    ref = _mixed_reference(a, plan)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(a.shape[1]).astype(np.float32)
+    y = np.asarray(mx.spmv(jnp.asarray(x)), np.float64)
+    want = ref @ x.astype(np.float64)
+    np.testing.assert_allclose(y, want, rtol=0, atol=2e-5 * np.abs(want).max())
+
+
+def test_mixed_handcrafted_classes_and_fp32_block():
+    a = testmats.random_banded(200, 10, 4, seed=2)
+    rows_lo = tuple(range(0, 100))
+    rows_hi = tuple(range(100, 200))
+    plan = PrecisionPlan(
+        mode="rows",
+        classes=(PrecisionClass("e8m", 12, rows_lo),
+                 PrecisionClass("fp32", 0, rows_hi)),
+        error_budget=1e-3, rationale={})
+    mx = MixedPackSELL(a, plan, C=8, sigma=32)
+    x = np.random.default_rng(3).standard_normal(200).astype(np.float32)
+    y = np.asarray(mx.spmv(jnp.asarray(x)), np.float64)
+    ref = _mixed_reference(a, plan) @ x.astype(np.float64)
+    np.testing.assert_allclose(y, ref, rtol=0, atol=1e-5 * np.abs(ref).max())
+    # fp32 rows are exact vs the fp32 dense product
+    st = mx.memory_stats()
+    assert len(st["classes"]) == 2
+    assert st["mixed_bytes"] == sum(c["bytes"] for c in st["classes"])
+    assert st["bytes_per_nnz"] > 0
+
+
+def test_mixed_spmm_matches_stacked_spmv():
+    a = testmats.powerlaw(256, mean_deg=4, seed=6)
+    plan = select_codec(a, 1e-3, mode="rows", n_probes=2)
+    mx = MixedPackSELL(a, plan, C=8, sigma=32)
+    rng = np.random.default_rng(4)
+    X = rng.standard_normal((a.shape[1], 3)).astype(np.float32)
+    Y = np.asarray(mx.spmm(jnp.asarray(X)))
+    for j in range(3):
+        yj = np.asarray(mx.spmv(jnp.asarray(X[:, j])))
+        np.testing.assert_allclose(Y[:, j], yj, rtol=1e-6, atol=1e-6)
+
+
+def test_mixed_rejects_non_covering_classes():
+    a = testmats.random_banded(64, 4, 3, seed=1)
+    plan = PrecisionPlan(
+        mode="rows",
+        classes=(PrecisionClass("e8m", 8, tuple(range(10))),
+                 PrecisionClass("fp32", 0, tuple(range(20, 64)))),
+        error_budget=1e-3, rationale={})
+    with pytest.raises(ValueError, match="cover"):
+        MixedPackSELL(a, plan, C=8, sigma=32)
+    # a single partial class must raise too, never silently widen to all
+    # rows (the uncovered rows were never budget-certified at that codec)
+    one = PrecisionPlan(mode="rows",
+                        classes=(PrecisionClass("e8m", 8, tuple(range(10))),),
+                        error_budget=1e-3, rationale={})
+    with pytest.raises(ValueError, match="cover"):
+        MixedPackSELL(a, one, C=8, sigma=32)
+
+
+# ---------------------------------------------------------------------------
+# store
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_and_content_sensitive():
+    a = testmats.random_banded(128, 8, 4, seed=0)
+    assert matrix_fingerprint(a) == matrix_fingerprint(a.copy())
+    b = a.copy()
+    b.data = b.data.copy()
+    b.data[0] *= 2.0
+    assert matrix_fingerprint(a) != matrix_fingerprint(b)
+    c = testmats.random_banded(128, 8, 4, seed=1)
+    assert matrix_fingerprint(a) != matrix_fingerprint(c)
+
+
+def test_store_roundtrip_tmpdir(tmp_path):
+    path = os.fspath(tmp_path / "sub" / "store.json")
+    a = testmats.random_banded(128, 8, 4, seed=0)
+    st = PrecisionStore(path)
+    plan, hit = st.lookup_or_select(a, 1e-3, n_probes=2)
+    assert not hit
+    assert os.path.exists(path)
+    # fresh handle: hit, identical selection
+    st2 = PrecisionStore(path)
+    plan2, hit2 = st2.lookup_or_select(a, 1e-3, n_probes=2)
+    assert hit2
+    assert plan2.primary == plan.primary
+    assert plan2.rationale["candidates"] == plan.rationale["candidates"]
+    # retile winners merge into the same entry and survive reload
+    fp = matrix_fingerprint(a)
+    st2.put_retile(fp, "plan_e8m8", [(8, 32), (4, 16)])
+    st3 = PrecisionStore(path)
+    assert st3.get_retile(fp, "plan_e8m8") == [(8, 32), (4, 16)]
+    assert st3.get_plan(fp).primary == plan.primary
+    # the JSON on disk is one valid document (atomic write)
+    with open(path) as f:
+        blob = json.load(f)
+    assert blob["version"] == 1 and fp in blob["entries"]
+
+
+def test_store_validate_reselects_on_budget_miss(tmp_path):
+    path = os.fspath(tmp_path / "store.json")
+    a = testmats.random_banded(128, 8, 4, seed=0)
+    st = PrecisionStore(path)
+    st.lookup_or_select(a, 1e-2, n_probes=2)
+    # tighter budget: the stored (looser) plan must NOT satisfy it
+    plan, hit = st.lookup_or_select(a, 1e-7, n_probes=2)
+    assert not hit
+    assert plan.error_budget == 1e-7
+
+
+def test_store_keeps_modes_separate(tmp_path):
+    """A rows-mode plan must never be returned for a global request (its
+    primary class is only budget-certified for a row subset), and vice
+    versa; both live side by side in one entry."""
+    path = os.fspath(tmp_path / "store.json")
+    a = testmats.powerlaw(256, mean_deg=5, seed=5)
+    st = PrecisionStore(path)
+    p_rows, hit = st.lookup_or_select(a, 1e-4, mode="rows", n_probes=2)
+    assert not hit and p_rows.mode == "rows"
+    p_glob, hit = st.lookup_or_select(a, 1e-4, mode="global", n_probes=2)
+    assert not hit and p_glob.mode == "global"
+    # both now hit, each under its own mode
+    assert st.lookup_or_select(a, 1e-4, mode="rows", n_probes=2)[1]
+    assert st.lookup_or_select(a, 1e-4, mode="global", n_probes=2)[1]
+    fp = matrix_fingerprint(a)
+    assert PrecisionStore(path).get_plan(fp, mode="rows").mode == "rows"
+    assert PrecisionStore(path).get_plan(fp).mode == "global"
+
+
+def test_store_hit_requires_safety_at_least_as_tight(tmp_path):
+    path = os.fspath(tmp_path / "store.json")
+    a = testmats.random_banded(128, 8, 4, seed=0)
+    st = PrecisionStore(path)
+    st.lookup_or_select(a, 1e-3, n_probes=2, safety=0.9)
+    # a stricter safety must NOT reuse the loosely-certified plan
+    plan, hit = st.lookup_or_select(a, 1e-3, n_probes=2, safety=0.1)
+    assert not hit
+    assert plan.rationale["safety"] == 0.1
+
+
+def test_precision_plan_cache_keys_on_selection_params():
+    a0 = testmats.random_banded(256, 12, 5, seed=4)
+    a, _ = sym_scale(a0)
+    ops = OperatorSet(a, C=8, sigma=32)
+    p1 = ops.precision_plan(1e-3, n_probes=2, safety=0.5)
+    p2 = ops.precision_plan(1e-3, n_probes=2, safety=0.01)
+    assert p1.rationale["safety"] == 0.5
+    assert p2.rationale["safety"] == 0.01
+    assert ops.precision_plan(1e-3, n_probes=2, safety=0.5) is p1
+
+
+def test_tier_ladder_fp32_fallback_is_single_tier():
+    plan = PrecisionPlan(mode="global",
+                         classes=(PrecisionClass("fp32", 0),),
+                         error_budget=1e-15, rationale={})
+    assert tier_ladder(plan) == [PrecisionClass("fp32", 0)]
+
+
+def test_store_fp32_fallback_does_not_hit_looser_budgets(tmp_path):
+    """A stored fp32-fallback plan certifies 'nothing packed fits THAT
+    budget' — a looser request may admit a packed codec and must
+    reselect (regression: the hit rule used to serve fp32 forever)."""
+    path = os.fspath(tmp_path / "store.json")
+    a = testmats.random_banded(128, 8, 4, seed=0)
+    st = PrecisionStore(path)
+    p0, _ = st.lookup_or_select(a, 1e-12, n_probes=2)
+    assert p0.primary.codec == "fp32"
+    plan, hit = st.lookup_or_select(a, 1e-3, n_probes=2)
+    assert not hit
+    assert plan.primary.codec != "fp32"
+    # tighter-than-stored requests may reuse the fallback (still correct)
+    plan2, hit2 = st.lookup_or_select(a, 1e-13, n_probes=2)
+    assert plan2.primary.codec == "fp32"
+
+
+def test_store_hit_respects_candidate_restriction(tmp_path):
+    """A caller that restricts `candidates` must never receive a stored
+    plan built from codecs outside that set (e.g. a deployment that only
+    ships e8m kernels)."""
+    path = os.fspath(tmp_path / "store.json")
+    a = testmats.random_banded(128, 8, 4, seed=0)
+    st = PrecisionStore(path)
+    p0, _ = st.lookup_or_select(a, 1e-3, n_probes=2)
+    restricted = (("e8m", 4),)
+    assert (p0.primary.codec, p0.primary.D) not in restricted
+    plan, hit = st.lookup_or_select(a, 1e-3, n_probes=2,
+                                    candidates=restricted)
+    assert not hit
+    assert (plan.primary.codec, plan.primary.D) in set(restricted) | \
+        {("fp32", 0)}
+
+
+def test_store_apply_retile_on_plan(tmp_path):
+    from repro.kernels import plan as kplan
+    a = testmats.random_banded(128, 8, 4, seed=0)
+    mat = pk.from_csr(a, C=8, sigma=32, D=8, codec="e8m")
+    plan = kplan.get_plan(mat)
+    st = PrecisionStore(os.fspath(tmp_path / "s.json"))
+    fp = matrix_fingerprint(a)
+    tiles = [(4, 16)] * len(plan.tiles)
+    st.put_retile(fp, "plan_e8m8", tiles)
+    assert st.apply_retile(fp, "plan_e8m8", plan)
+    assert plan.tiles == tuple(tiles)
+    # wrong arity: not applied
+    st.put_retile(fp, "bad", [(4, 16)] * (len(plan.tiles) + 1))
+    assert not st.apply_retile(fp, "bad", plan)
+
+
+# ---------------------------------------------------------------------------
+# adaptive_pcg — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+def _run_adaptive(a0, budget=1e-3, tol=1e-8):
+    a, _ = sym_scale(a0)
+    ops = OperatorSet(a, C=32, sigma=256)
+    rng = np.random.default_rng(0)
+    b = jnp.asarray(rng.standard_normal(a.shape[0]))
+    diag = ops.diag()
+    dinv = jnp.asarray(np.where(diag == 0, 1.0, 1.0 / diag))
+    M = lambda r: r * dinv                                   # noqa: E731
+    x32, info32 = cg.pcg(ops.matvec("fp32"), b, M=M, tol=tol, maxiter=2000)
+    tiers, labels, sub32, hi = ops.adaptive_tiers(budget, n_probes=2)
+    x, info = cg.adaptive_pcg(tiers, b, M=M, matvec_hi=hi, tol=tol,
+                              maxiter=60, m_in=16)
+    btrue = np.asarray(b, np.float64)
+    t32 = np.linalg.norm(btrue - a @ np.asarray(x32, np.float64)) \
+        / np.linalg.norm(btrue)
+    tad = np.linalg.norm(btrue - a @ np.asarray(x, np.float64)) \
+        / np.linalg.norm(btrue)
+    counts = np.asarray(info.tier_matvecs)
+    frac = counts[np.asarray(sub32)].sum() / \
+        (counts.sum() + int(info.hi_matvecs))
+    return t32, tad, float(info.relres), frac, info
+
+
+@pytest.mark.parametrize("name,gen", [
+    ("banded", lambda: testmats.random_banded(1200, 24, 6, seed=1)),
+    ("powerlaw", lambda: testmats.powerlaw(1200, mean_deg=5, spd=True,
+                                           seed=2)),
+])
+def test_adaptive_pcg_acceptance(name, gen):
+    """Acceptance: adaptive_pcg on banded + power-law classes matches the
+    full-FP32 PCG final residual (<= 1e-8) with >= 80% of matvecs in a
+    sub-32-bit codec."""
+    t32, tad, relres, frac, info = _run_adaptive(gen())
+    assert relres <= 1e-8
+    assert tad <= 1e-8          # TRUE residual, not just the recurrence
+    assert tad <= max(t32, 1e-8)  # no worse than the fp32 baseline
+    assert frac >= 0.80, (name, frac)
+
+
+def test_adaptive_pcg_promotes_on_stagnation():
+    """An ill-conditioned operator under a coarse codec (E8M7: eps*kappa>1,
+    iterative refinement cannot contract) must trigger tier promotion and
+    still converge through the finer tiers."""
+    n = 96
+    a = sp.diags([-np.ones(n - 1), 2 * np.ones(n), -np.ones(n - 1)],
+                 [-1, 0, 1]).tocsr()   # 1D Laplacian, kappa ~ 4 n^2 / pi^2
+    ops = OperatorSet(a, C=8, sigma=32)
+    b = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    ladder = [PrecisionClass("e8m", 15), PrecisionClass("e8m", 1),
+              PrecisionClass("fp32", 0)]
+    tiers, labels, sub32 = build_tier_matvecs(ops, ladder)
+    # m_in ~ sqrt(kappa) iterations so the inner solve is accurate enough
+    # that any stall is the codec's fault, not the inner solver's
+    x, info = cg.adaptive_pcg(tiers, b, matvec_hi=ops.matvec("fp64"),
+                              tol=1e-8, maxiter=60, m_in=48)
+    assert int(info.promotions) >= 1
+    assert float(info.relres) <= 1e-8
+    used = np.asarray(info.tier_history)[:int(info.iters)]
+    assert used[0] == 0 and used[-1] > 0  # started low, ended promoted
+
+
+def test_adaptive_pcg_tier_ladder_shapes():
+    plan = PrecisionPlan(mode="global",
+                         classes=(PrecisionClass("e8m", 12),),
+                         error_budget=1e-3, rationale={})
+    ladder = tier_ladder(plan)
+    assert ladder[0] == PrecisionClass("e8m", 12)
+    assert ladder[-1].codec == "fp32"
+    errs = [0.0 if c.codec == "fp32" else 2.0 ** -(23 - c.D)
+            for c in ladder]
+    assert errs == sorted(errs, reverse=True)
+    assert operator_kind(ladder[0]) == "plan_e8m12"
+    assert operator_kind(ladder[-1]) == "fp32"
+
+
+def test_operator_set_auto_and_mixed_kinds():
+    a0 = testmats.random_banded(300, 12, 5, seed=4)
+    a, _ = sym_scale(a0)
+    ops = OperatorSet(a, C=8, sigma=32)
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(a.shape[0])
+                    .astype(np.float32))
+    y_auto = np.asarray(ops.matvec("auto:1e-3")(x), np.float64)
+    y_mixed = np.asarray(ops.matvec("mixed:1e-3")(x), np.float64)
+    ref = a.astype(np.float64) @ np.asarray(x, np.float64)
+    for y in (y_auto, y_mixed):
+        assert np.linalg.norm(y - ref) / np.linalg.norm(ref) <= 1e-3
+    # the mixed kind exposes its MixedPackSELL for memory accounting
+    mx = ops.stored("mixed:1e-3")
+    assert isinstance(mx, MixedPackSELL)
+    assert mx.memory_stats()["nnz"] == a.nnz
+
+
+def test_packsell_linear_auto_codec(tmp_path):
+    from repro.models.sparse_linear import PackSELLLinear
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 48)).astype(np.float32)
+    path = os.fspath(tmp_path / "prec.json")
+    lin = PackSELLLinear.from_dense(w, density=0.4, codec="auto",
+                                    error_budget=1e-3, store=path,
+                                    C=8, sigma=32)
+    assert lin.precision_plan is not None
+    assert not lin.from_store
+    d = lin.describe()
+    assert d["auto_selected"] and d["codec"] == lin.mat.codec_name
+    # restart: same weight hits the store
+    lin2 = PackSELLLinear.from_dense(w, density=0.4, codec="auto",
+                                     error_budget=1e-3, store=path,
+                                     C=8, sigma=32)
+    assert lin2.from_store
+    assert lin2.mat.codec_name == lin.mat.codec_name
+    assert lin2.mat.D == lin.mat.D
+    # the layer still computes
+    y = lin(jnp.asarray(rng.standard_normal(64).astype(np.float32)))
+    assert y.shape == (48,)
+    # caller-fixed codecs still get a fingerprint (warmup retile restore)
+    fixed = PackSELLLinear.from_dense(w, density=0.4, codec="e8m", D=8,
+                                      C=8, sigma=32)
+    assert fixed.fingerprint is not None
+    assert fixed.precision_plan is None and not fixed.describe()["auto_selected"]

@@ -275,6 +275,34 @@ class TestServing:
             tok = jnp.asarray([[nxt]], jnp.int32)
         assert got == want
 
+    def test_warmup_with_precision_store(self, engine_setup, tmp_path,
+                                         caplog):
+        """warmup(precision_store=...) logs auto-selected layer codecs and
+        restores (sb, wb) retile winners into the layer plans."""
+        import logging
+
+        from repro.models.sparse_linear import PackSELLLinear
+        from repro.precision import PrecisionStore
+
+        cfg, params = engine_setup
+        eng = DecodeEngine(cfg, params, ServeConfig(slots=1, max_len=32))
+        w = np.random.default_rng(0).standard_normal((48, 32)) \
+            .astype(np.float32)
+        path = str(tmp_path / "prec.json")
+        lin = PackSELLLinear.from_dense(w, density=0.4, codec="auto",
+                                        error_budget=1e-3, store=path,
+                                        C=8, sigma=32)
+        st = PrecisionStore(path)
+        tiles = [(4, 16)] * len(lin.plan.tiles)
+        st.put_retile(lin.fingerprint,
+                      f"plan_{lin.mat.codec_name}{lin.mat.D}", tiles)
+        with caplog.at_level(logging.INFO, logger="repro.serving.engine"):
+            eng.warmup(sparse_layers=[lin], precision_store=path)
+        msgs = " ".join(r.getMessage() for r in caplog.records)
+        assert "auto-selected" in msgs
+        assert "retiled from store" in msgs
+        assert lin.plan.tiles == tuple(tiles)
+
     def test_eos_terminates(self, engine_setup):
         cfg, params = engine_setup
         # find the first greedy token, then make it the EOS
