@@ -1,8 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test verify verify-dist verify-precision bench bench-spmv \
-	bench-dist bench-precision
+.PHONY: test verify verify-dist verify-precision verify-composite bench \
+	bench-spmv bench-dist bench-precision bench-composite
 
 test:
 	python -m pytest -x -q
@@ -26,6 +26,14 @@ verify-precision:
 	python -m pytest -x -q tests/test_precision.py tests/test_codec_edges.py
 	python examples/mixed_precision_solver.py --nx 6
 
+# block-composition engine: composite/kind-parser/warmup tests plus the
+# mesh-gated dist_mixed × adaptive_pcg_dist acceptance tests under 4
+# simulated devices
+verify-composite:
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+		python -m pytest -x -q tests/test_composite.py \
+		tests/test_composite_properties.py
+
 bench:
 	python -m benchmarks.run
 
@@ -40,3 +48,7 @@ bench-dist:
 # regenerate the checked-in accuracy/throughput frontier (small scale)
 bench-precision:
 	python -m benchmarks.run --only precision --scale small
+
+# regenerate the checked-in dist-mixed vs dist-fp32 PCG curve (small scale)
+bench-composite:
+	python -m benchmarks.run --only composite --scale small

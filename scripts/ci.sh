@@ -20,6 +20,15 @@ if [[ "${1:-}" != "fast" ]]; then
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
     python examples/distributed_pcg.py --side 8
 
+  echo "== composite: block-composition engine + dist_mixed acceptance =="
+  # tests the shared CompositePlan layer (mixed/dist wrappers, kind
+  # parser, WarmupSpec) and — under 4 simulated devices — that a
+  # dist_mixed budget drives adaptive_pcg_dist to 1e-8 with iteration
+  # counts identical to the single-device solver
+  XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=4" \
+    python -m pytest -x -q tests/test_composite.py \
+    tests/test_composite_properties.py
+
   echo "== precision: subsystem tests + adaptive_pcg smoke =="
   # the example's adaptive section must converge to 1e-8 with a
   # low-precision (sub-32-bit) operator/preconditioner; the store

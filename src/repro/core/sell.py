@@ -138,3 +138,44 @@ def from_csr(a: sp.csr_matrix, *, C: int = 128, sigma: int = 256,
 
 def from_dense(a: np.ndarray, **kw) -> SELLMatrix:
     return from_csr(sp.csr_matrix(np.asarray(a)), **kw)
+
+
+def pad_uniform(mat: SELLMatrix, *, n_slices: int | None = None,
+                width: int | None = None,
+                device: bool = True) -> SELLMatrix:
+    """Pad a single-bucket ('uniform') SELL matrix to a common [S, w, C]
+    shape — the fp32/fp64 twin of :func:`repro.core.packsell.pad_uniform`,
+    used by the distributed composite to stack uncompressed members across
+    shards. Padding entries carry ``val=0, col=0`` (a harmless read that
+    contributes nothing); padded slices get sentinel outrows (>= n)."""
+    if len(mat.vals) != 1:
+        raise ValueError("pad_uniform needs a single-bucket matrix "
+                         "(build with bucket_strategy='uniform')")
+    val = np.asarray(mat.vals[0])
+    col = np.asarray(mat.cols[0])
+    outrow = np.asarray(mat.outrows[0])
+    perm = np.asarray(mat.perm)
+    S, w, C = val.shape
+    S_t = S if n_slices is None else int(n_slices)
+    w_t = w if width is None else int(width)
+    if S_t < S or w_t < w:
+        raise ValueError(f"cannot shrink: have (S={S}, w={w}), "
+                         f"asked (S={S_t}, w={w_t})")
+    val_p = np.zeros((S_t, w_t, C), val.dtype)
+    val_p[:S, :w, :] = val
+    col_p = np.zeros((S_t, w_t, C), np.int32)
+    col_p[:S, :w, :] = col
+    outrow_p = np.full(S_t * C, mat.n, np.int32)
+    outrow_p[:S * C] = outrow
+    perm_p = np.zeros(S_t * C, perm.dtype)
+    perm_p[:len(perm)] = perm
+
+    to_dev = jnp.asarray if device else (lambda v: v)
+    return SELLMatrix(
+        vals=(to_dev(val_p),), cols=(to_dev(col_p),),
+        outrows=(to_dev(outrow_p),), perm=to_dev(perm_p),
+        n=mat.n, m=mat.m, C=C, sigma=mat.sigma,
+        value_dtype=mat.value_dtype, nnz=mat.nnz,
+        words_sell_padded=mat.words_sell_padded,
+        words_bucketed=int(val_p.size),
+    )

@@ -6,4 +6,6 @@ from .partition import (RowPartition, ShardSplit,  # noqa: F401
                         assemble_global, comm_matrix, partition_rows,
                         split_csr)
 from .plan import (DistOperands, DistSpMVPlan,  # noqa: F401
-                   build_dist_plan, build_operands, reference_spmv)
+                   DistTierLadder, build_composite_operands,
+                   build_dist_plan, build_dist_tiers, build_operands,
+                   reference_spmv)

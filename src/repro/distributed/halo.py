@@ -118,6 +118,26 @@ def gather_halo(x_loc: jnp.ndarray, dev: dict, *, axis_name: str,
     return x_halo
 
 
+def prestage(shared: dict, *, axis_name: str, n_shards: int, h_pad: int,
+             mode: str):
+    """The halo exchange packaged as a **composite pre-stage**
+    (DESIGN.md §9.2): a function mapping a shard's local x-block to the
+    tuple of extra input vectors — ``(x_halo,)``, or ``()`` for halo-free
+    partitions — that remote composite members consume as input index 1.
+
+    Hoisting the exchange into a pre-stage is what lets the distributed
+    tier ladder (``cg.adaptive_pcg_dist``) run ONE collective per matvec
+    outside the tier ``lax.switch``: every tier shares the same index
+    maps, so the gathered buffer feeds whichever tier is active.
+    """
+    def pre(x_loc: jnp.ndarray) -> tuple:
+        if h_pad == 0:
+            return ()
+        return (gather_halo(x_loc, shared, axis_name=axis_name,
+                            n_shards=n_shards, h_pad=h_pad, mode=mode),)
+    return pre
+
+
 def gather_halo_reference(x_stacked: np.ndarray, maps: HaloMaps,
                           mode: str = "all_gather") -> np.ndarray:
     """Host-side oracle of :func:`gather_halo` over the full stacked x

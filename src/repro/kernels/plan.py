@@ -345,6 +345,14 @@ class SpMVPlan:
         return self._dispatch("spmm")(mat, self._device_operands(), x,
                                       permuted)
 
+    def as_composite(self, mat: PackSELLMatrix):
+        """This plan as the single-member case of the block-composition
+        engine (:class:`~repro.kernels.composite.CompositePlan`) — the
+        degenerate composition mixed-precision and distributed SpMV build
+        on."""
+        from . import composite
+        return composite.CompositePlan.single(mat, self)
+
     def describe(self) -> dict:
         """Machine-readable plan summary (serving warmup logs, and the
         precision store's retile records key off this)."""

@@ -202,7 +202,13 @@ def probe_error(a: sp.csr_matrix, codec_name: str, D: int, *,
     e = _quantized(a, codec_name, D).astype(np.float64) - a64
     worst = 0.0
     for x, axn in zip(xs, ax_norms):
-        worst = max(worst, float(np.linalg.norm(e @ x)) / axn)
+        err = float(np.linalg.norm(e @ x)) / axn
+        if not np.isfinite(err):
+            # range overflow quantizes to ±inf, so e @ x is inf/nan —
+            # and max(0.0, nan) would silently report a PERFECT probe;
+            # an out-of-range codec certifies nothing
+            return float("inf")
+        worst = max(worst, err)
     return worst
 
 

@@ -4,43 +4,25 @@ A per-row-class :class:`~repro.precision.select.PrecisionPlan` partitions
 the rows by required precision. Each class becomes its own PackSELL block
 (built over that class's row submatrix — full column space, so x is shared)
 at its own ``(codec, D)``; an ``fp32`` class becomes an uncompressed SELL
-block. The blocks are composed exactly like the distributed layer's
-local/remote block pair (``distributed/plan.py``): one jitted dispatch runs
-every block's :class:`~repro.kernels.plan.SpMVPlan` body via
-``SpMVPlan.execute_with`` in ``permuted=True`` (stored-row) mode,
-concatenates the block outputs, and applies ONE precomputed global
-inverse-permutation gather — no per-block scatters, no per-block dispatch.
+block.
 
-``memory_stats()`` reports the blended bytes/nnz across blocks plus the
-per-class breakdown (the mixed analogue of
-:meth:`~repro.core.packsell.PackSELLMatrix.memory_stats`).
+Since PR 4 this class is a THIN wrapper over the shared block-composition
+engine, :class:`~repro.kernels.composite.CompositePlan` (DESIGN.md §9):
+every class is one composite member in a single term — one jitted dispatch
+runs every member's stored-row body, and ONE precomputed global
+inverse-permutation gather produces y. The bespoke dispatch/blend code this
+module used to carry (a re-implementation of the distributed layer's
+local/remote composition) is gone; ``memory_stats`` is the composite blend
+re-keyed to the historical per-class layout.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax
 import jax.numpy as jnp
-import numpy as np
 import scipy.sparse as sp
 
-from repro.core import packsell as pk
-from repro.core import sell as sl
-from repro.kernels import plan as kplan
+from repro.kernels import composite as kc
 
 from .select import PrecisionPlan
-
-
-@dataclasses.dataclass
-class _Block:
-    """One row-class block: a PackSELL (or SELL fp32) sub-operator."""
-
-    codec: str
-    D: int
-    rows: np.ndarray             # int64[n_b] global rows, ascending
-    mat: object                  # PackSELLMatrix | SELLMatrix
-    plan: object                 # SpMVPlan | None (fp32/SELL block)
-    stored: int                  # stored output slots this block emits
 
 
 class MixedPackSELL:
@@ -48,7 +30,7 @@ class MixedPackSELL:
 
     Built from a CSR matrix and a ``mode='rows'`` (or global)
     :class:`PrecisionPlan`. Use :meth:`spmv` / :meth:`spmm` or the
-    ``matvec`` callable; both run one jitted dispatch.
+    ``matvec`` callable; both run one jitted composite dispatch.
     """
 
     def __init__(self, a: sp.csr_matrix, plan: PrecisionPlan, *,
@@ -59,104 +41,25 @@ class MixedPackSELL:
         self.nnz = int(a.nnz)
         self.pplan = plan
         self.C, self.sigma = C, sigma
-
-        covered = np.zeros(self.n, dtype=bool)
-        self.blocks: list[_Block] = []
-        for cls in plan.classes:
-            rows = (np.arange(self.n, dtype=np.int64) if cls.rows is None
-                    else np.asarray(cls.rows, dtype=np.int64))
-            if np.any(covered[rows]):
-                raise ValueError("precision classes overlap in rows")
-            covered[rows] = True
-            sub = a[rows]                       # row submatrix, all columns
-            if cls.codec == "fp32":
-                mat = sl.from_csr(sub, C=C, sigma=sigma,
-                                  value_dtype="float32")
-                blk = _Block(cls.codec, cls.D, rows, mat, None, len(rows))
-            else:
-                mat = pk.from_csr(sub, C=C, sigma=sigma, D=cls.D,
-                                  codec=cls.codec)
-                splan = kplan.get_plan(mat)
-                blk = _Block(cls.codec, cls.D, rows, mat, splan,
-                             splan.total_stored)
-            self.blocks.append(blk)
-        if not np.all(covered):
-            raise ValueError(
-                f"precision classes cover {int(covered.sum())} of "
-                f"{self.n} rows; every row needs a class")
-
-        self._inv = jnp.asarray(self._build_global_inverse())
-        self._fns: dict = {}
+        # coverage/overlap validation happens inside the composite build:
+        # every row needs exactly one class slot for the gather epilogue
+        self.cplan = kc.CompositePlan.from_classes(
+            a, [(c.codec, c.D, c.rows) for c in plan.classes],
+            C=C, sigma=sigma, name="mixed")
 
     # ------------------------------------------------------------------
-    def _build_global_inverse(self) -> np.ndarray:
-        """inv[r] = slot of global row r in the concatenated block
-        outputs — the mixed analogue of ``SpMVPlan.inv_cat``."""
-        inv = np.zeros(self.n, dtype=np.int32)
-        off = 0
-        for blk in self.blocks:
-            if blk.plan is None:
-                # SELL block output is already in block-row order
-                inv[blk.rows] = off + np.arange(len(blk.rows),
-                                                dtype=np.int32)
-            else:
-                out = np.asarray(blk.plan.outrow_cat)
-                valid = out < len(blk.rows)
-                slots = np.nonzero(valid)[0].astype(np.int32)
-                inv[blk.rows[out[valid]]] = off + slots
-            off += blk.stored
-        return inv
+    @property
+    def blocks(self):
+        """The per-class composite members (back-compat alias)."""
+        return self.cplan.members
 
-    def _mats(self) -> tuple:
-        return tuple(blk.mat for blk in self.blocks)
-
-    def _devs(self) -> tuple:
-        return tuple({} if blk.plan is None else
-                     blk.plan._device_operands() for blk in self.blocks)
-
-    def _execute(self, mats, devs, inv, x, multi_rhs):
-        xc = x.astype(jnp.float32)
-        parts = []
-        for blk, mat, dev in zip(self.blocks, mats, devs):
-            if blk.plan is None:
-                if multi_rhs:
-                    # SELL spmv is single-RHS; map over columns
-                    t = jax.vmap(lambda col, m_=mat: sl.sell_spmv_jnp(
-                        m_, col, jnp.float32), in_axes=1, out_axes=1)(xc)
-                else:
-                    t = sl.sell_spmv_jnp(mat, xc, jnp.float32)
-                parts.append(t)
-            else:
-                t = blk.plan.execute_with(mat, dev, xc, permuted=True,
-                                          multi_rhs=multi_rhs)
-                parts.append(t)
-        t_cat = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-        return jnp.take(t_cat, inv, axis=0)
-
-    def _dispatch(self, multi_rhs: bool):
-        fn = self._fns.get(multi_rhs)
-        if fn is None:
-            fn = jax.jit(lambda mats, devs, inv, x,
-                         mr=multi_rhs: self._execute(mats, devs, inv, x, mr))
-            self._fns[multi_rhs] = fn
-        return fn
-
-    # ------------------------------------------------------------------
     def spmv(self, x: jnp.ndarray) -> jnp.ndarray:
         """y = A x with each row computed at its class's precision."""
-        if isinstance(x, jax.core.Tracer):
-            return self._execute(self._mats(), self._devs(), self._inv, x,
-                                 False)
-        return self._dispatch(False)(self._mats(), self._devs(), self._inv,
-                                     x)
+        return self.cplan.spmv(x)
 
     def spmm(self, x: jnp.ndarray) -> jnp.ndarray:
         """Y = A X for X: [m, nb]."""
-        if isinstance(x, jax.core.Tracer):
-            return self._execute(self._mats(), self._devs(), self._inv, x,
-                                 True)
-        return self._dispatch(True)(self._mats(), self._devs(), self._inv,
-                                    x)
+        return self.cplan.spmm(x)
 
     @property
     def matvec(self):
@@ -169,29 +72,20 @@ class MixedPackSELL:
     # ------------------------------------------------------------------
     def memory_stats(self) -> dict:
         """Blended memory profile: total bytes, bytes/nnz, and the
-        per-class breakdown."""
-        per_class = []
-        total_bytes = 0
-        for blk in self.blocks:
-            st = blk.mat.memory_stats()
-            b = int(st.get("packsell_bytes") or st.get("sell_bytes") or 0)
-            nnz_b = int(blk.mat.nnz)
-            per_class.append({
-                "codec": blk.codec, "D": blk.D, "rows": len(blk.rows),
-                "bytes": b, "nnz": nnz_b,
-                "bytes_per_nnz": b / max(nnz_b, 1)})
-            total_bytes += b
+        per-class breakdown (composite blend, historical key layout)."""
+        st = self.cplan.memory_stats()
         return {
-            "mixed_bytes": total_bytes,
-            "bytes_per_nnz": total_bytes / max(self.nnz, 1),
+            "mixed_bytes": st["composite_bytes"],
+            "bytes_per_nnz": st["composite_bytes"] / max(self.nnz, 1),
             "nnz": self.nnz, "n": self.n, "m": self.m,
-            "classes": per_class,
+            "classes": [{
+                "codec": mb["codec"], "D": mb["D"], "rows": mb["rows"],
+                "bytes": mb["bytes"], "nnz": mb["nnz"],
+                "bytes_per_nnz": mb["bytes_per_nnz"],
+            } for mb in st["members"]],
         }
 
     def warmup(self, nb: int = 0) -> "MixedPackSELL":
         """Trace the dispatch(es) ahead of the first real call."""
-        jax.block_until_ready(self.spmv(jnp.zeros((self.m,), jnp.float32)))
-        if nb:
-            jax.block_until_ready(
-                self.spmm(jnp.zeros((self.m, nb), jnp.float32)))
+        self.cplan.warmup(nb=nb)
         return self

@@ -204,3 +204,83 @@ class PrecisionStore:
             return False
         plan.retile(tiles)
         return True
+
+
+# ---------------------------------------------------------------------------
+# Per-shard selection (distributed composites, DESIGN.md §9.3)
+# ---------------------------------------------------------------------------
+
+
+def shard_fingerprints(a: sp.csr_matrix, n_shards: int) -> list[str]:
+    """Per-row-shard content fingerprints: the distributed layer's store
+    key. Shards are the same balanced contiguous row blocks the
+    partitioner produces, so a restart with the same fleet size hits the
+    same entries."""
+    from repro.distributed.partition import partition_rows
+
+    a = a.tocsr()
+    part = partition_rows(a.shape[0], n_shards)
+    return [matrix_fingerprint(a[part.rows_of(p)[0]:part.rows_of(p)[1]])
+            for p in range(n_shards)]
+
+
+def select_codec_per_shard(a: sp.csr_matrix, n_shards: int,
+                           error_budget: float, *, store=None,
+                           **select_kw):
+    """Global-mode codec selection run per row shard — fingerprint +
+    store lookup per shard — then coalesced to ONE fleet-wide class.
+
+    SPMD dispatch traces one program for every shard, so the fleet must
+    agree on a codec; the coalescing rule is *most conservative wins*,
+    certified per shard: distinct per-shard picks are tried most-accurate
+    first (smallest a-priori ulp bound; the fp32 fallback dominates
+    everything) and the fleet takes the first one whose measured probe
+    error fits ``safety × budget`` on EVERY shard — a shard's pick can be
+    range-infeasible on another shard (fp16 overflow, say), so the ulp
+    ranking alone is not a certificate. No pick certifying everywhere →
+    fp32. Each shard's selection (with its own fingerprint) is still
+    recorded in ``store``, so a later repartition or per-shard-capable
+    dispatch reuses the analyses.
+
+    Returns ``(per_shard_plans, fleet_class)``.
+    """
+    from repro.distributed.partition import partition_rows
+
+    from . import select as se_
+
+    a = a.tocsr()
+    part = partition_rows(a.shape[0], n_shards)
+    fps = shard_fingerprints(a, n_shards)
+    store = None if store is None else PrecisionStore.coerce(store)
+    plans, subs = [], []
+    for p in range(n_shards):
+        r0, r1 = part.rows_of(p)
+        sub = a[r0:r1]
+        if sub.shape[0] == 0:
+            plans.append(None)        # empty shard: no constraint
+            continue
+        subs.append(sub)
+        if store is not None:
+            plan, _ = store.lookup_or_select(sub, error_budget, **select_kw)
+        else:
+            plan = se_.select_codec(sub, error_budget, fingerprint=fps[p],
+                                    **select_kw)
+        plans.append(plan)
+
+    threshold = select_kw.get("safety", 0.5) * error_budget
+    n_probes = select_kw.get("n_probes", 3)
+    seed = select_kw.get("seed", 0)
+    picks = {(pl.primary.codec, pl.primary.D)
+             for pl in plans if pl is not None}
+    # one probe context per shard, shared across candidate certifications
+    ctxs = [an._probe_context(sub, n_probes, seed + 1) for sub in subs]
+    fleet = se_.PrecisionClass(*se_.FP32_CLASS)
+    for codec, D in sorted(picks, key=lambda cd_: an.ulp_bound(*cd_)):
+        if codec == "fp32":
+            break                     # a shard fell back: fleet must too
+        if all(an.probe_error(sub, codec, D, n_probes=n_probes,
+                              seed=seed + 1, _ctx=ctx) <= threshold
+               for sub, ctx in zip(subs, ctxs)):
+            fleet = se_.PrecisionClass(codec, D)   # rows=None
+            break
+    return plans, fleet

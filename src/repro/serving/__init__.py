@@ -1,2 +1,3 @@
 """Serving substrate: KV-cache decode engine with continuous batching."""
-from .engine import DecodeEngine, Request, ServeConfig  # noqa: F401
+from .engine import (DecodeEngine, Request, ServeConfig,  # noqa: F401
+                     WarmupSpec)

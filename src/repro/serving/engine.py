@@ -43,6 +43,36 @@ class ServeConfig:
     seed: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class WarmupSpec:
+    """Everything :meth:`DecodeEngine.warmup` should pre-compile, in one
+    place — the keyword surface (``sparse_layers=``, ``dist_plans=``, …)
+    had grown one argument per subsystem; composite plans warm up through
+    this single path.
+
+    * ``prompt_lens`` — prefill prompt lengths to compile.
+    * ``sparse_layers`` — ``models.sparse_linear.PackSELLLinear`` layers:
+      pre-builds their cached SpMV plans (and restores store retiles).
+    * ``dist_plans`` — ``repro.distributed.DistSpMVPlan``\\ s to pre-trace
+      (weight matrices too large for one device).
+    * ``composites`` — any object with ``warmup(nb=...)``:
+      ``kernels.composite.CompositePlan``, ``precision.MixedPackSELL``,
+      distributed tier ladders wrapped in a composite, …
+    * ``precision_store`` — a ``repro.precision.PrecisionStore`` or path:
+      restores kernel-autotune ``(sb, wb)`` retile winners into each
+      layer's plan and logs auto-selected codecs.
+    * ``nb`` — multi-RHS width for plan/composite warmups (default: the
+      engine's slot count).
+    """
+
+    prompt_lens: tuple = ()
+    sparse_layers: tuple = ()
+    dist_plans: tuple = ()
+    composites: tuple = ()
+    precision_store: object = None
+    nb: Optional[int] = None
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -90,35 +120,51 @@ class DecodeEngine:
                                static_argnums=(3,))
 
     # ------------------------------------------------------------------
-    def warmup(self, prompt_lens=(), sparse_layers=(),
-               dist_plans=(), precision_store=None) -> None:
+    def warmup(self, spec: WarmupSpec | None = None, *, prompt_lens=(),
+               sparse_layers=(), dist_plans=(), composites=(),
+               precision_store=None) -> None:
         """Move compilation out of the serving hot path (the engine analogue
         of the SpMVPlan rule: host-side decisions happen at setup, ticks are
-        single dispatches). Compiles the pool decode step and the given
-        prefill prompt lengths, pre-builds the cached SpMV plans of any
-        PackSELL layers (``models.sparse_linear.PackSELLLinear``), and
-        pre-traces any distributed plans
-        (``repro.distributed.DistSpMVPlan`` — weight matrices too large for
-        one device serve their matvecs through the sharded dispatch) so the
-        first real tick pays neither tracing nor plan construction.
+        single dispatches). Takes a :class:`WarmupSpec` — the single
+        consolidated description of what to pre-compile — or, back-compat,
+        the historical keyword arguments (merged into a spec internally).
 
-        ``precision_store`` — a ``repro.precision.PrecisionStore`` or a
-        path to one — restores kernel-autotune ``(sb, wb)`` retile winners
-        into each layer's plan and logs which layers run auto-selected
-        codecs (``PackSELLLinear.from_dense(codec="auto")``)."""
-        store = precision_store
+        Compiles the pool decode step and the given prefill prompt lengths,
+        pre-builds the cached SpMV plans of any PackSELL layers, pre-traces
+        distributed plans and composite plans (one ``warmup(nb=...)`` path
+        for every composition — plain, mixed-precision, distributed), and
+        restores precision-store retiles; the first real tick pays neither
+        tracing nor plan construction."""
+        if spec is not None and not isinstance(spec, WarmupSpec):
+            # historical positional call: warmup([16, 32]) meant prompt_lens
+            if prompt_lens:
+                raise ValueError("pass a WarmupSpec OR keyword arguments, "
+                                 "not both")
+            prompt_lens, spec = tuple(spec), None
+        if spec is None:
+            spec = WarmupSpec(prompt_lens=tuple(prompt_lens),
+                              sparse_layers=tuple(sparse_layers),
+                              dist_plans=tuple(dist_plans),
+                              composites=tuple(composites),
+                              precision_store=precision_store)
+        elif (prompt_lens or sparse_layers or dist_plans or composites
+              or precision_store is not None):
+            raise ValueError("pass a WarmupSpec OR keyword arguments, "
+                             "not both")
+        store = spec.precision_store
         if store is not None:
             from repro.precision import PrecisionStore
             store = PrecisionStore.coerce(store)
+        nb = self.scfg.slots if spec.nb is None else int(spec.nb)
         tokens = jnp.zeros((self.scfg.slots, 1), jnp.int32)
         logits, _ = self._decode(self.params, tokens, self.cache)
         jax.block_until_ready(logits)
-        for plen in prompt_lens:
+        for plen in spec.prompt_lens:
             toks = jnp.zeros((1, int(plen)), jnp.int32)
             logits, _ = self._prefill_fn(int(plen))(
                 self.params, {"tokens": toks})
             jax.block_until_ready(logits)
-        for i, lin in enumerate(sparse_layers):
+        for i, lin in enumerate(spec.sparse_layers):
             desc = lin.describe() if hasattr(lin, "describe") else {}
             if store is not None and desc.get("fingerprint"):
                 key = f"plan_{desc['codec']}{desc['D']}"
@@ -137,8 +183,12 @@ class DecodeEngine:
             elif desc:
                 log.info("warmup: layer %d codec=%s D=%d (caller-fixed)",
                          i, desc["codec"], desc["D"])
-        for dp in dist_plans:
-            dp.warmup(nb=self.scfg.slots)
+        for dp in spec.dist_plans:
+            dp.warmup(nb=nb)
+        for comp in spec.composites:
+            comp.warmup(nb=nb)
+            if hasattr(comp, "describe"):
+                log.info("warmup: composite %s", comp.describe())
 
     # ------------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:

@@ -238,7 +238,8 @@ def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
                  matvec_hi: Matvec | None = None, tol: float = 1e-9,
                  maxiter: int = 60, m_in: int = 16, x0=None,
                  dtype=None, stag_factor: float = 0.25,
-                 start_tier: int = 0
+                 start_tier: int = 0, dot=None, norm=None,
+                 prestage=None
                  ) -> tuple[jnp.ndarray, AdaptiveSolveInfo]:
     """Residual-adaptive mixed-precision PCG (the paper's §6 recipe,
     iterative-refinement style; DESIGN.md §8.5).
@@ -263,20 +264,34 @@ def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
       tier mid-solve. Tier choice is a traced ``lax.switch``: no re-trace,
       no loop exit.
 
+    ``dot`` / ``norm`` default to the single-device reductions; the
+    distributed solver injects psum-reduced versions (:func:`dist_dot` /
+    :func:`dist_norm`) so the identical recurrence — and therefore the
+    iteration and promotion schedule — runs on sharded vectors inside a
+    shard_map region. ``prestage`` (distributed: the halo gather) maps the
+    matvec input to extra operands every tier *and* ``matvec_hi`` receive
+    as trailing arguments; it is hoisted out of the tier ``lax.switch`` so
+    one collective per matvec serves whichever tier is active.
+
     Returns ``(x, AdaptiveSolveInfo)`` with per-tier matvec counts, so
     callers can verify how much of the solve ran sub-32-bit.
     """
     if not tiers:
         raise ValueError("need at least one tier")
     n_tiers = len(tiers)
-    dot, norm = jnp.vdot, jnp.linalg.norm
+    dot = dot or jnp.vdot
+    norm = norm or jnp.linalg.norm
+    pre = prestage or (lambda v: ())
     b, x0, bnorm, dtype = _prep(b, x0, dtype, norm)
     M = M or (lambda r: r)
-    hi = matvec_hi or tiers[-1]
-    branches = [lambda v, f=f: f(v).astype(dtype) for f in tiers]
+    hi_raw = matvec_hi or tiers[-1]
+    branches = [lambda v, *ex, f=f: f(v, *ex).astype(dtype) for f in tiers]
 
     def mv(tier, v):
-        return jax.lax.switch(tier, branches, v)
+        return jax.lax.switch(tier, branches, v, *pre(v))
+
+    def hi(v):
+        return hi_raw(v, *pre(v)).astype(dtype)
 
     def inner_solve(tier, rhs):
         """m_in PCG iterations on A_tier d = rhs from d0 = 0."""
@@ -339,6 +354,88 @@ def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
     k, x, r, relres, tier, nprom, mvc, hic, hist, thist = \
         jax.lax.while_loop(cond, body, s0)
     return x, AdaptiveSolveInfo(k, relres, hist, thist, nprom, mvc, hic)
+
+
+def adaptive_pcg_dist(ladder, diag: jnp.ndarray, b: jnp.ndarray, *,
+                      tol: float = 1e-9, maxiter: int = 60, m_in: int = 16,
+                      stag_factor: float = 0.25, start_tier: int = 0,
+                      dtype=None, mode: str | None = None
+                      ) -> tuple[jnp.ndarray, AdaptiveSolveInfo]:
+    """Residual-adaptive mixed-precision PCG over a device mesh: the
+    ENTIRE tier-promoting refinement loop runs inside ONE jitted shard_map
+    region (DESIGN.md §9.4).
+
+    ``ladder`` is a :class:`~repro.distributed.plan.DistTierLadder` — one
+    stacked member set per codec tier over one shared partition, plus the
+    exact fp64 set for the outer true-residual step. The body is
+    :func:`adaptive_pcg` verbatim with three injections:
+
+    * ``dot`` / ``norm`` psum-reduce over the mesh axis, so every shard
+      advances through the identical scalar recurrence — iteration counts
+      and tier promotions match the single-device solver up to
+      summation-order rounding;
+    * each tier's matvec is the per-shard composite body
+      (``DistOperands.shard_body``) selected by the traced ``lax.switch``;
+    * the halo gather is the shared ``prestage``, hoisted out of the
+      switch — one collective per matvec regardless of the active tier.
+
+    ``diag``: matrix diagonal in global row order (Jacobi preconditioner);
+    ``b``: global right-hand side; ``mode`` overrides the ladder's
+    halo-exchange mode.
+    """
+    from jax.sharding import PartitionSpec as Pspec
+
+    from repro.distributed import halo as dh
+    from repro.parallel.sharding import shard_map_compat
+
+    b = jnp.asarray(b)
+    dtype = dtype or b.dtype
+    mode = mode or ladder.exchange
+    diag = jnp.asarray(diag)
+    dinv = jnp.where(diag == 0, 1.0, 1.0 / diag).astype(dtype)
+    ax = ladder.axis_name
+    h_pad = ladder.h_pad
+
+    def build():
+        dot, norm = dist_dot(ax), dist_norm(ax)
+
+        def body(dev, bs, ds):
+            sh = jax.tree.map(lambda leaf: leaf[0], dev)
+            b_l, dinv_l = bs[0], ds[0]
+            pre = dh.prestage(sh["shared"], axis_name=ax,
+                              n_shards=ladder.n_shards, h_pad=h_pad,
+                              mode=mode)
+
+            def tier_fn(ops_t, dev_t):
+                def matvec(v, *extras):
+                    return ops_t.shard_body(
+                        dev_t, v, axis_name=ax, mode=mode,
+                        x_halo=extras[0] if extras else None,
+                        shared=sh["shared"])
+                return matvec
+
+            tiers = [tier_fn(o, d)
+                     for o, d in zip(ladder.tiers, sh["tiers"])]
+            hi = tier_fn(ladder.hi, sh["hi"])
+            x_l, info = adaptive_pcg(
+                tiers, b_l, M=lambda r: r * dinv_l, matvec_hi=hi,
+                tol=tol, maxiter=maxiter, m_in=m_in, dtype=dtype,
+                stag_factor=stag_factor, start_tier=start_tier,
+                dot=dot, norm=norm, prestage=pre)
+            return (x_l[None],) + tuple(info)
+
+        f = shard_map_compat(
+            body, ladder.mesh,
+            in_specs=(ladder.dev_specs, Pspec(ax), Pspec(ax)),
+            out_specs=(Pspec(ax),) + (Pspec(),) * 7)
+        return jax.jit(f)
+
+    fn = ladder.cached_fn(
+        ("adaptive", tol, maxiter, m_in, stag_factor, start_tier,
+         jnp.dtype(dtype).name, mode), build)
+    out = fn(ladder.dev, ladder.shard_vector(b.astype(dtype)),
+             ladder.shard_vector(dinv))
+    return ladder.unshard_vector(out[0]), AdaptiveSolveInfo(*out[1:])
 
 
 def pcg_fixed_iters(matvec: Matvec, M: Matvec, m_in: int,

@@ -5,11 +5,16 @@ an FP64 operator for the outer iteration and FP16 / E8MY PackSELL operators
 inside. ``OperatorSet`` builds all requested variants of one matrix once and
 hands out matvec callables; solvers are written against plain callables so
 any format/precision combination plugs in.
+
+Kind strings are parsed in ONE place (:func:`parse_kind`) — every entry
+point (``matvec`` / ``plan_pair`` / ``dist_plan``) consumes the parsed
+:class:`KindSpec` instead of re-splitting prefixes ad hoc, and malformed
+kinds fail with the full menu of valid ones.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -40,13 +45,104 @@ def sym_scale(a: sp.csr_matrix) -> tuple[sp.csr_matrix, np.ndarray]:
     return s, d
 
 
+# ---------------------------------------------------------------------------
+# Kind-string parsing (satellite: one parser, informative errors)
+# ---------------------------------------------------------------------------
+
+#: engine-less dense/baseline kinds
+DENSE_KINDS = ("fp64", "fp32", "fp16", "bf16")
+
+#: the valid-kind menu malformed inputs are pointed at
+KIND_MENU = (
+    "fp64 | fp32 | fp16 | bf16 | csr64 | packsell_<codec> | plan_<codec> "
+    "| dist_<codec> | auto:<budget> | mixed:<budget> | dist_auto:<budget> "
+    "| dist_mixed:<budget>   (<codec>: fp16 | bf16 | e8m<D>, e.g. e8m8; "
+    "<budget>: a positive float, e.g. 1e-3)")
+
+
+@dataclasses.dataclass(frozen=True)
+class KindSpec:
+    """One parsed operator-kind string.
+
+    ``family`` is the dispatch class: ``'dense'`` (SELL at a float dtype),
+    ``'csr64'``, ``'packsell'`` (per-call jnp path), ``'plan'`` (cached
+    SpMVPlan engine), ``'dist'`` (DistSpMVPlan shard_map), ``'auto'`` /
+    ``'mixed'`` (budget-driven selection, global / per-row-class) and their
+    distributed compositions ``'dist_auto'`` / ``'dist_mixed'``.
+    """
+
+    raw: str
+    family: str
+    codec: Optional[str] = None     # codec families
+    D: Optional[int] = None
+    budget: Optional[float] = None  # budget families
+
+    @property
+    def distributed(self) -> bool:
+        return self.family.startswith("dist")
+
+
+def _parse_codec(sub: str, kind: str) -> tuple[str, int]:
+    if sub in ("fp16", "bf16"):
+        return sub, 15
+    if sub.startswith("e8m") and sub[3:].isdigit():
+        # *_e8mD where D is the *delta* width (Y = 22 - D)
+        return "e8m", int(sub[3:])
+    raise ValueError(
+        f"unknown codec {sub!r} in operator kind {kind!r}; valid kinds: "
+        f"{KIND_MENU}")
+
+
+def _parse_budget(sub: str, kind: str) -> float:
+    try:
+        budget = float(sub)
+    except ValueError:
+        raise ValueError(
+            f"malformed error budget {sub!r} in operator kind {kind!r}; "
+            f"valid kinds: {KIND_MENU}") from None
+    if not budget > 0:
+        raise ValueError(
+            f"error budget must be positive, got {budget} in operator "
+            f"kind {kind!r}; valid kinds: {KIND_MENU}")
+    return budget
+
+
+def parse_kind(kind: str) -> KindSpec:
+    """Parse an operator kind string; raises ValueError listing every
+    valid kind on malformed input."""
+    if not isinstance(kind, str):
+        raise ValueError(
+            f"operator kind must be a string, got {type(kind).__name__}; "
+            f"valid kinds: {KIND_MENU}")
+    if kind in DENSE_KINDS:
+        return KindSpec(kind, "dense", codec=kind)
+    if kind == "csr64":
+        return KindSpec(kind, "csr64")
+    for family in ("dist_auto", "dist_mixed", "auto", "mixed"):
+        if kind.startswith(family + ":"):
+            return KindSpec(kind, family,
+                            budget=_parse_budget(kind[len(family) + 1:],
+                                                 kind))
+    for family in ("packsell", "plan", "dist"):
+        if kind.startswith(family + "_"):
+            codec, D = _parse_codec(kind[len(family) + 1:], kind)
+            return KindSpec(kind, family, codec=codec, D=D)
+    raise ValueError(
+        f"unknown operator kind {kind!r}; valid kinds: {KIND_MENU}")
+
+
 @dataclasses.dataclass
 class OperatorSet:
-    """All precision variants of one (scaled) matrix, built lazily."""
+    """All precision variants of one (scaled) matrix, built lazily.
+
+    ``store`` — an optional :class:`~repro.precision.store.PrecisionStore`
+    (or path) every budget-driven kind consults, including the per-shard
+    fingerprint lookups of ``dist_auto:<budget>``."""
 
     csr: sp.csr_matrix
     C: int = 32
     sigma: int = 256
+    store: object = None
     _cache: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -55,15 +151,6 @@ class OperatorSet:
 
     def diag(self) -> np.ndarray:
         return self.csr.diagonal()
-
-    @staticmethod
-    def _parse_codec(sub: str) -> tuple[str, int]:
-        if sub in ("fp16", "bf16"):
-            return sub, 15
-        if sub.startswith("e8m"):
-            # *_e8mD where D is the *delta* width (Y = 22 - D)
-            return "e8m", int(sub[3:])
-        raise ValueError(sub)
 
     # -- adaptive-precision hooks (repro.precision; DESIGN.md §8) ----------
     def precision_plan(self, error_budget: float, *, mode: str = "global",
@@ -74,6 +161,7 @@ class OperatorSet:
         re-analysis across restarts."""
         from repro import precision as pr
 
+        store = store if store is not None else self.store
         key = ("pplan", error_budget, mode,
                None if store is None else getattr(store, "path", store),
                tuple(sorted(select_kw.items())))
@@ -105,68 +193,105 @@ class OperatorSet:
             self, psel.tier_ladder(plan))
         return mvs, labels, sub32, self.matvec("fp64")
 
+    def dist_adaptive_tiers(self, error_budget: float, *,
+                            n_shards: int | None = None, mesh=None,
+                            exchange: str = "ppermute", store=None,
+                            **select_kw):
+        """The SAME tier ladder as :meth:`adaptive_tiers`, materialized as
+        a :class:`~repro.distributed.plan.DistTierLadder` for
+        ``cg.adaptive_pcg_dist`` — per-tier stacked member sets over one
+        shared partition plus the exact fp64 outer operator. Identical
+        ladder ⇒ the distributed solve reproduces the single-device
+        iteration and promotion schedule."""
+        from repro.distributed import build_dist_tiers
+        from repro.precision import select as psel
+
+        plan = self.precision_plan(error_budget, store=store, **select_kw)
+        return build_dist_tiers(self.csr, psel.tier_ladder(plan),
+                                n_shards=n_shards, mesh=mesh,
+                                exchange=exchange, C=self.C,
+                                sigma=self.sigma)
+
     def matvec(self, kind: str) -> Matvec:
-        """kind: 'fp64' | 'fp32' | 'fp16' | 'bf16' | 'packsell_fp16' |
-        'packsell_bf16' | 'packsell_e8m<D>' (e.g. packsell_e8m8) |
-        'plan_<codec>' (same codecs, dispatched through the cached
-        :class:`~repro.kernels.plan.SpMVPlan` engine — the single-dispatch
-        hot path for Krylov inner loops) | 'dist_<codec>' (same codecs,
-        partitioned over every visible device and dispatched through a
-        :class:`~repro.distributed.plan.DistSpMVPlan` shard_map; global
-        vectors in/out, so it drops into any solver unchanged) |
-        'auto:<budget>' (adaptive: ``repro.precision`` selects the codec
-        for the error budget, e.g. auto:1e-3) | 'mixed:<budget>'
-        (per-row-class selection composed as one
-        :class:`~repro.precision.mixed.MixedPackSELL` operator)."""
+        """kind: any entry of :data:`KIND_MENU` — dense SELL dtypes, the
+        per-call ``packsell_`` path, the cached single-dispatch ``plan_``
+        engine, the shard_map ``dist_`` engine (global vectors in/out, so
+        it drops into any solver unchanged), budget-driven ``auto:`` /
+        ``mixed:`` selection (global /
+        :class:`~repro.precision.mixed.MixedPackSELL` per-row-class), and
+        their distributed compositions ``dist_auto:`` (per-shard
+        fingerprinted selection coalesced to one fleet codec) and
+        ``dist_mixed:`` (per-shard per-class composite members — the
+        distributed × mixed-precision operator)."""
         if kind in self._cache:
             return self._cache[kind][0]
-        if kind in ("fp64", "fp32", "fp16", "bf16"):
-            dtype = {"fp64": "float64", "fp32": "float32", "fp16": "float16",
-                     "bf16": "bfloat16"}[kind]
+        spec = parse_kind(kind)
+        if spec.family == "dense":
+            dtype = {"fp64": "float64", "fp32": "float32",
+                     "fp16": "float16", "bf16": "bfloat16"}[spec.codec]
             mat = sl.from_csr(self.csr, C=self.C, sigma=self.sigma,
                               value_dtype=dtype)
-            comp = jnp.float64 if kind == "fp64" else jnp.float32
+            comp = jnp.float64 if spec.codec == "fp64" else jnp.float32
             fn = lambda x, mat=mat, comp=comp: sl.sell_spmv_jnp(mat, x, comp)
-        elif kind.startswith("packsell_"):
-            codec, D = self._parse_codec(kind[len("packsell_"):])
-            mat = pk.from_csr(self.csr, C=self.C, sigma=self.sigma, D=D,
-                              codec=codec)
+        elif spec.family == "packsell":
+            mat = pk.from_csr(self.csr, C=self.C, sigma=self.sigma,
+                              D=spec.D, codec=spec.codec)
             fn = lambda x, mat=mat: pk.packsell_spmv_jnp(mat, x, jnp.float32)
-        elif kind.startswith("plan_"):
-            codec, D = self._parse_codec(kind[len("plan_"):])
-            mat = pk.from_csr(self.csr, C=self.C, sigma=self.sigma, D=D,
-                              codec=codec)
+        elif spec.family == "plan":
+            mat = pk.from_csr(self.csr, C=self.C, sigma=self.sigma,
+                              D=spec.D, codec=spec.codec)
             p = kplan.get_plan(mat)
             fn = lambda x, mat=mat, p=p: p.spmv(mat, x)
-        elif kind.startswith("dist_"):
+        elif spec.family == "dist":
             from repro.distributed import build_dist_plan
-            codec, D = self._parse_codec(kind[len("dist_"):])
             mat = build_dist_plan(self.csr, C=self.C, sigma=self.sigma,
-                                  D=D, codec=codec)
+                                  D=spec.D, codec=spec.codec)
             fn = lambda x, dp=mat: dp.spmv(x)
-        elif kind == "csr64":
+        elif spec.family == "csr64":
             mat = sps.csr_from_scipy(self.csr, "float64")
             fn = lambda x, mat=mat: mat.spmv(x, jnp.float64)
-        elif kind.startswith("auto:"):
+        elif spec.family == "auto":
             # budget-driven global selection ('auto:1e-3') — delegates to
             # the selected codec's plan_ kind (or fp32 fallback)
             from repro.precision import select as psel
-            plan = self.precision_plan(float(kind[len("auto:"):]))
+            plan = self.precision_plan(spec.budget)
             fn = self.matvec(psel.operator_kind(plan.primary))
             mat = self._cache[psel.operator_kind(plan.primary)][1]
-        elif kind.startswith("mixed:"):
+        elif spec.family == "mixed":
             # budget-driven per-row-class selection ('mixed:1e-3') — a
             # MixedPackSELL composite operator
             from repro import precision as pr
-            plan = self.precision_plan(float(kind[len("mixed:"):]),
-                                       mode="rows")
+            plan = self.precision_plan(spec.budget, mode="rows")
             mat = pr.MixedPackSELL(self.csr, plan, C=self.C,
                                    sigma=self.sigma)
             fn = mat.spmv
-        else:
+        elif spec.family == "dist_auto":
+            # per-shard fingerprinted selection, coalesced to the most
+            # conservative fleet codec (SPMD dispatch needs ONE program)
+            from repro.distributed import build_dist_plan
+            from repro.precision.store import select_codec_per_shard
+            _, fleet = select_codec_per_shard(
+                self.csr, self._dist_shards(), spec.budget,
+                store=self.store, sigma=self.sigma)
+            mat = build_dist_plan(self.csr, C=self.C, sigma=self.sigma,
+                                  classes=[(fleet.codec, fleet.D, None)])
+            fn = lambda x, dp=mat: dp.spmv(x)
+        elif spec.family == "dist_mixed":
+            # distributed × mixed: per-shard per-class composite members
+            from repro.distributed import build_dist_plan
+            plan = self.precision_plan(spec.budget, mode="rows")
+            mat = build_dist_plan(self.csr, C=self.C, sigma=self.sigma,
+                                  pplan=plan)
+            fn = lambda x, dp=mat: dp.spmv(x)
+        else:  # pragma: no cover — parse_kind is exhaustive
             raise ValueError(kind)
         self._cache[kind] = (fn, mat)
         return fn
+
+    @staticmethod
+    def _dist_shards() -> int:
+        import jax
+        return jax.device_count()
 
     def stored(self, kind: str):
         """The underlying format object (for memory stats)."""
@@ -176,16 +301,21 @@ class OperatorSet:
     def plan_pair(self, kind: str):
         """(mat, plan) for a 'plan_<codec>' kind — the inputs the
         stored-row-order solvers (cg.jacobi_pcg_stored) consume."""
-        if not kind.startswith("plan_"):
-            raise ValueError(f"{kind!r} is not a plan_ kind")
+        if parse_kind(kind).family != "plan":
+            raise ValueError(
+                f"{kind!r} is not a plan_ kind (valid: plan_<codec> with "
+                f"<codec>: fp16 | bf16 | e8m<D>)")
         self.matvec(kind)
         mat = self._cache[kind][1]
         return mat, kplan.get_plan(mat)
 
     def dist_plan(self, kind: str):
-        """The :class:`~repro.distributed.plan.DistSpMVPlan` behind a
-        'dist_<codec>' kind — what ``cg.jacobi_pcg_dist`` consumes."""
-        if not kind.startswith("dist_"):
-            raise ValueError(f"{kind!r} is not a dist_ kind")
+        """The :class:`~repro.distributed.plan.DistSpMVPlan` behind any
+        distributed kind (``dist_<codec>`` / ``dist_auto:<b>`` /
+        ``dist_mixed:<b>``) — what ``cg.jacobi_pcg_dist`` consumes."""
+        if not parse_kind(kind).distributed:
+            raise ValueError(
+                f"{kind!r} is not a distributed kind (valid: dist_<codec> "
+                f"| dist_auto:<budget> | dist_mixed:<budget>)")
         self.matvec(kind)
         return self._cache[kind][1]

@@ -1,0 +1,395 @@
+"""CompositePlan: the shared block-composition engine (DESIGN.md §9).
+
+Covers: composite-vs-dense-oracle equivalence (members, terms, fp32/fp64
+SELL blocks, spmm), SpMVPlan as the single-member case, unified memory
+accounting, retile plumbing, the consolidated kind-string parser, the
+WarmupSpec path, and — multi-device gated, run by ``make verify-composite``
+— the dist_mixed operator plus ``adaptive_pcg_dist`` iteration parity
+against single-device ``adaptive_pcg`` (the acceptance criterion).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import codecs as cd
+from repro.core import packsell, sell, testmats
+from repro.kernels import composite as kc
+from repro.kernels import plan as kplan
+from repro.precision import PrecisionClass, PrecisionPlan
+from repro.solvers import cg
+from repro.solvers import operators as op
+from repro.solvers.operators import parse_kind
+
+NDEV = jax.device_count()
+RNG = np.random.default_rng(21)
+
+need4 = pytest.mark.skipif(NDEV < 4, reason="needs >=4 devices "
+                           "(XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=4)")
+
+
+def _x(m, seed=0):
+    return np.random.default_rng(seed).standard_normal(m).astype(np.float32)
+
+
+def _quantized_dense(a, classes):
+    """Dense oracle: each class's rows quantized at its codec."""
+    dense = a.toarray().astype(np.float64)
+    out = np.zeros_like(dense)
+    for codec, D, rows in classes:
+        rows = np.arange(a.shape[0]) if rows is None else np.asarray(rows)
+        if codec in ("fp32", "fp64"):
+            out[rows] = dense[rows].astype(
+                np.float32 if codec == "fp32" else np.float64)
+        else:
+            out[rows] = cd.quantize_np(
+                dense[rows].astype(np.float32), cd.make_codec(codec), D)
+    return out
+
+
+def _random_classes(n, rng, codec_pool):
+    """Random row partition into 1..4 classes (empty classes allowed)."""
+    k = int(rng.integers(1, 5))
+    assign = rng.integers(0, k, size=n)
+    classes = []
+    for c in range(k):
+        rows = np.nonzero(assign == c)[0]
+        codec, D = codec_pool[int(rng.integers(0, len(codec_pool)))]
+        if len(rows):
+            classes.append((codec, D, rows))
+    # make sure every row is covered even if a class came up empty
+    covered = np.concatenate([c[2] for c in classes])
+    missing = np.setdiff1d(np.arange(n), covered)
+    if len(missing):
+        classes.append(("fp32", 0, missing))
+    return classes
+
+
+CODEC_POOL = [("e8m", 8), ("e8m", 12), ("fp16", 15), ("bf16", 15),
+              ("fp32", 0)]
+
+
+# ---------------------------------------------------------------------------
+# composite vs dense oracle (single device)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_composite_matches_quantized_dense_oracle(seed):
+    rng = np.random.default_rng(seed)
+    a = testmats.powerlaw(300, mean_deg=5, seed=seed)
+    classes = _random_classes(300, rng, CODEC_POOL)
+    cp = kc.CompositePlan.from_classes(a, classes, C=8, sigma=32)
+    x = _x(300, seed=seed + 1)
+    y = np.asarray(cp.spmv(jnp.asarray(x)), np.float64)
+    want = _quantized_dense(a, classes) @ x.astype(np.float64)
+    np.testing.assert_allclose(y, want, rtol=0,
+                               atol=2e-5 * max(np.abs(want).max(), 1))
+
+
+def test_composite_spmm_matches_stacked_spmv():
+    a = testmats.random_banded(200, 12, 4, seed=3)
+    classes = [("e8m", 8, np.arange(0, 120)), ("fp32", 0, np.arange(120,
+                                                                    200))]
+    cp = kc.CompositePlan.from_classes(a, classes, C=8, sigma=32)
+    X = RNG.standard_normal((200, 3)).astype(np.float32)
+    Y = np.asarray(cp.spmm(jnp.asarray(X)))
+    for j in range(3):
+        np.testing.assert_allclose(
+            Y[:, j], np.asarray(cp.spmv(jnp.asarray(X[:, j]))),
+            rtol=1e-6, atol=1e-6)
+
+
+def test_composite_two_terms_sum():
+    """Terms ADD (the distributed local/remote composition): splitting a
+    matrix column-wise into two members on separate terms reproduces the
+    full product."""
+    a = testmats.random_banded(96, 8, 3, seed=4).tocsr()
+    lo = a.copy()
+    lo[:, 48:] = 0
+    lo.eliminate_zeros()
+    hi = a.copy()
+    hi[:, :48] = 0
+    hi.eliminate_zeros()
+    m0 = kc.member_from_csr(lo.tocsr(), "fp32", 0, C=8, sigma=16, term=0)
+    m1 = kc.member_from_csr(hi.tocsr(), "fp32", 0, C=8, sigma=16, term=1)
+    cp = kc.CompositePlan([m0, m1], n=96, m=96)
+    x = _x(96, seed=5)
+    y = np.asarray(cp.spmv(jnp.asarray(x)), np.float64)
+    want = (a.toarray().astype(np.float32).astype(np.float64)
+            @ x.astype(np.float64))
+    np.testing.assert_allclose(y, want, rtol=1e-5, atol=1e-5)
+
+
+def test_single_member_composite_matches_plan_engine():
+    """SpMVPlan is the single-member case of the composition engine."""
+    a = testmats.scattered(256, nnz_per_row=6, spd=True, seed=6)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=8, codec="e8m")
+    plan = kplan.get_plan(mat)
+    cp = plan.as_composite(mat)
+    assert len(cp.members) == 1 and cp.n_terms == 1
+    x = _x(256, seed=7)
+    np.testing.assert_array_equal(
+        np.asarray(cp.spmv(jnp.asarray(x))),
+        np.asarray(plan.spmv(mat, jnp.asarray(x))))
+    s = sell.from_csr(a, C=8, sigma=32, value_dtype="float32")
+    cps = kc.CompositePlan.single(s)
+    np.testing.assert_allclose(
+        np.asarray(cps.spmv(jnp.asarray(x))),
+        np.asarray(sell.sell_spmv_jnp(s, jnp.asarray(x))),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_composite_rejects_overlap_and_uncovered():
+    a = testmats.random_banded(64, 4, 3, seed=1)
+    with pytest.raises(ValueError, match="cover"):
+        kc.CompositePlan.from_classes(
+            a, [("e8m", 8, np.arange(10))], C=8, sigma=16)
+    with pytest.raises(ValueError, match="overlap"):
+        kc.CompositePlan.from_classes(
+            a, [("e8m", 8, np.arange(40)),
+                ("fp32", 0, np.arange(30, 64))], C=8, sigma=16)
+
+
+def test_composite_memory_stats_and_describe():
+    a = testmats.powerlaw(200, mean_deg=4, seed=8)
+    classes = [("e8m", 8, np.arange(0, 100)), ("fp32", 0,
+                                               np.arange(100, 200))]
+    cp = kc.CompositePlan.from_classes(a, classes, C=8, sigma=32)
+    st = cp.memory_stats()
+    assert st["composite_bytes"] == sum(m["bytes"] for m in st["members"])
+    assert st["nnz"] == sum(m["nnz"] for m in st["members"]) == a.nnz
+    d = cp.describe()
+    assert d["terms"] == 1 and len(d["members"]) == 2
+    assert d["members"][0]["fmt"] == "packsell"
+    assert d["members"][1]["fmt"] == "sell"
+
+
+def test_composite_retile_plumbing():
+    a = testmats.random_banded(128, 8, 3, seed=9)
+    cp = kc.CompositePlan.from_classes(a, [("fp16", 15, None)], C=8,
+                                       sigma=32)
+    x = jnp.asarray(_x(128, seed=10))
+    y0 = np.asarray(cp.spmv(x))
+    cp.retile(0, [(4, 16)] * len(cp.members[0].plan.tiles))
+    assert cp.members[0].plan.tiles[0] == (4, 16)
+    np.testing.assert_array_equal(np.asarray(cp.spmv(x)), y0)
+    with pytest.raises(ValueError, match="SELL"):
+        kc.CompositePlan.from_classes(
+            a, [("fp32", 0, None)], C=8, sigma=32).retile(0, [])
+
+
+# ---------------------------------------------------------------------------
+# kind-string parsing (satellite: one parser, informative errors)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,family,codec,D,budget", [
+    ("fp64", "dense", "fp64", None, None),
+    ("csr64", "csr64", None, None, None),
+    ("packsell_e8m8", "packsell", "e8m", 8, None),
+    ("plan_fp16", "plan", "fp16", 15, None),
+    ("dist_bf16", "dist", "bf16", 15, None),
+    ("auto:1e-3", "auto", None, None, 1e-3),
+    ("mixed:0.01", "mixed", None, None, 0.01),
+    ("dist_auto:1e-4", "dist_auto", None, None, 1e-4),
+    ("dist_mixed:1e-3", "dist_mixed", None, None, 1e-3),
+])
+def test_parse_kind_valid(kind, family, codec, D, budget):
+    spec = parse_kind(kind)
+    assert spec.family == family
+    assert spec.codec == codec
+    assert spec.D == D
+    assert spec.budget == budget
+    assert spec.distributed == family.startswith("dist")
+
+
+@pytest.mark.parametrize("bad", [
+    "frobnicate", "plan_", "plan_e8mx", "plan_e8m", "packsell_fp64",
+    "dist_fp32", "auto:", "auto:banana", "mixed:-1", "mixed:0",
+    "dist_mixed:", "plan_fp16_extra", 42,
+])
+def test_parse_kind_malformed_lists_valid_kinds(bad):
+    with pytest.raises(ValueError, match="valid kinds"):
+        parse_kind(bad)
+
+
+def test_operator_set_rejects_malformed_kinds():
+    a = testmats.random_banded(32, 3, 2, seed=0)
+    s, _ = op.sym_scale(a)
+    ops = op.OperatorSet(s, C=8, sigma=16)
+    with pytest.raises(ValueError, match="valid kinds"):
+        ops.matvec("plan_e9m8")
+    with pytest.raises(ValueError, match="plan_"):
+        ops.plan_pair("dist_fp16")
+    with pytest.raises(ValueError, match="dist"):
+        ops.dist_plan("plan_fp16")
+
+
+# ---------------------------------------------------------------------------
+# dist composite (device-free reference replay)
+# ---------------------------------------------------------------------------
+
+def test_dist_mixed_reference_matches_oracle():
+    from repro.distributed import build_composite_operands, reference_spmv
+
+    a = testmats.powerlaw(150, mean_deg=5, seed=11)
+    classes = [("e8m", 8, np.arange(0, 70)), ("fp32", 0,
+                                              np.arange(70, 150))]
+    ops = build_composite_operands(a, 3, classes=classes, C=8, sigma=16)
+    assert len(ops.members) in (2, 4)       # per side, per class
+    x = _x(150, seed=12)
+    y = reference_spmv(ops, x)
+    want = _quantized_dense(a, classes) @ x.astype(np.float64)
+    np.testing.assert_allclose(y, want, rtol=0,
+                               atol=2e-5 * max(np.abs(want).max(), 1))
+
+
+def test_per_shard_selection_coalesces_to_feasible_fleet_codec():
+    """dist_auto coalescing: a shard's pick can be range-infeasible on
+    another shard (fp16 overflow) — the fleet pick must be certified on
+    EVERY shard, and probe_error must not report a perfect probe for an
+    overflowing codec (nan-poisoning regression)."""
+    from repro.precision import analyze as an
+    from repro.precision.store import select_codec_per_shard
+
+    n = 64
+    rng = np.random.default_rng(0)
+    a = sp.random(n, n, density=0.2, random_state=rng,
+                  data_rvs=lambda k: rng.standard_normal(k)).tocsr()
+    a = a.tolil()
+    a[:n // 2, :] = a[:n // 2, :] * 1e5     # fp16 max is 65504: overflows
+    a = a.tocsr()
+    assert an.probe_error(a, "fp16", 15) == float("inf")
+    plans, fleet = select_codec_per_shard(
+        a, 2, 1e-2, candidates=(("fp16", 15), ("bf16", 15)))
+    picks = {p.primary.codec for p in plans if p is not None}
+    assert "fp16" in picks                  # the well-ranged shard's pick
+    assert fleet.codec == "bf16"            # feasible on every shard
+
+
+def test_per_shard_selection_records_shard_fingerprints(tmp_path):
+    """The store keys of per-shard selection are the shard fingerprints —
+    a repartition-stable restart hits the same entries."""
+    from repro.precision import PrecisionStore
+    from repro.precision.store import (select_codec_per_shard,
+                                       shard_fingerprints)
+
+    a = testmats.random_banded(96, 6, 3, seed=18)
+    store = PrecisionStore(tmp_path / "store.json")
+    plans, fleet = select_codec_per_shard(a, 3, 1e-2, store=store,
+                                          n_probes=2)
+    fps = shard_fingerprints(a, 3)
+    assert all(fp in store for fp in fps)
+    assert fleet.codec is not None
+    # second run is a pure store hit: identical plans come back
+    plans2, fleet2 = select_codec_per_shard(a, 3, 1e-2, store=store,
+                                            n_probes=2)
+    assert [p.primary.label for p in plans2] == \
+        [p.primary.label for p in plans]
+    assert (fleet2.codec, fleet2.D) == (fleet.codec, fleet.D)
+
+
+def test_dist_classes_must_partition_rows():
+    from repro.distributed import build_composite_operands
+
+    a = testmats.random_banded(40, 4, 2, seed=13)
+    with pytest.raises(ValueError, match="partition"):
+        build_composite_operands(a, 2, classes=[("e8m", 8,
+                                                 np.arange(10))],
+                                 C=8, sigma=16)
+
+
+# ---------------------------------------------------------------------------
+# WarmupSpec (satellite: consolidated warmup surface)
+# ---------------------------------------------------------------------------
+
+def test_warmup_spec_composites_and_backcompat():
+    from repro import configs
+    from repro.models import transformer as tfm
+    from repro.serving import DecodeEngine, ServeConfig, WarmupSpec
+
+    cfg = configs.reduce(configs.get("qwen2-0.5b"))
+    params, _ = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = DecodeEngine(cfg, params, ServeConfig(slots=1, max_len=32))
+    a = testmats.random_banded(64, 4, 3, seed=14)
+    cp = kc.CompositePlan.from_classes(a, [("fp16", 15, None)], C=8,
+                                       sigma=16)
+    eng.warmup(WarmupSpec(composites=(cp,), nb=2))
+    assert True in cp._fns and False in cp._fns   # spmv + spmm traced
+    eng.warmup()                                  # back-compat: bare call
+    with pytest.raises(ValueError, match="not both"):
+        eng.warmup(WarmupSpec(), composites=(cp,))
+
+
+# ---------------------------------------------------------------------------
+# dist_mixed × adaptive_pcg_dist (the acceptance criterion; mesh-gated)
+# ---------------------------------------------------------------------------
+
+@need4
+def test_dist_mixed_operator_matches_mixed_on_4_devices():
+    a = testmats.powerlaw(240, mean_deg=5, seed=15)
+    a = (a + a.T + sp.eye(240)).tocsr()
+    s, _ = op.sym_scale(a)
+    ops = op.OperatorSet(s, C=8, sigma=16)
+    x = jnp.asarray(_x(240, seed=16))
+    y_mixed = np.asarray(ops.matvec("mixed:1e-3")(x))
+    y_dist = np.asarray(ops.matvec("dist_mixed:1e-3")(x))
+    np.testing.assert_allclose(y_dist, y_mixed, rtol=2e-5, atol=2e-5)
+    dp = ops.dist_plan("dist_mixed:1e-3")
+    assert dp.n_shards == min(NDEV, 4) or dp.n_shards == NDEV
+    st = dp.memory_stats()
+    assert st["composite_bytes"] == sum(m["bytes"] for m in st["members"])
+
+
+@need4
+def test_adaptive_pcg_dist_matches_single_device():
+    """dist_mixed budget → adaptive_pcg_dist on 4 devices: ≤1e-8 true
+    relative residual, iteration counts identical to single-device
+    adaptive_pcg."""
+    a = testmats.hpcg(8, 8, 8)
+    s, _ = op.sym_scale(a)
+    ops = op.OperatorSet(s, C=32, sigma=64)
+    budget = 1e-3
+    b = jnp.asarray(RNG.standard_normal(s.shape[0]))
+    d = s.diagonal()
+
+    mvs, labels, sub32, hi = ops.adaptive_tiers(budget)
+    dinv = jnp.where(d == 0, 1.0, 1.0 / d)
+    x1, i1 = cg.adaptive_pcg(mvs, b, M=lambda r: r * dinv, matvec_hi=hi,
+                             tol=1e-8, maxiter=60, m_in=16,
+                             dtype=jnp.float64)
+
+    # the dist_mixed operator kind is live on the same budget/matrix
+    assert ops.matvec(f"dist_mixed:{budget}") is not None
+    ladder = ops.dist_adaptive_tiers(budget, n_shards=4)
+    assert ladder.labels == labels
+    xd, idd = cg.adaptive_pcg_dist(ladder, d, b, tol=1e-8, maxiter=60,
+                                   m_in=16, dtype=jnp.float64)
+
+    # ≤ 1e-8 TRUE relative residual
+    r = np.asarray(s @ np.asarray(xd, np.float64)) - np.asarray(
+        b, np.float64)
+    true_rel = np.linalg.norm(r) / np.linalg.norm(np.asarray(b))
+    assert true_rel <= 1e-8
+    # iteration counts and promotion schedule identical
+    assert int(idd.iters) == int(i1.iters)
+    k = int(i1.iters)
+    np.testing.assert_array_equal(np.asarray(idd.tier_history[:k]),
+                                  np.asarray(i1.tier_history[:k]))
+    # the solve actually ran sub-32-bit inner matvecs
+    assert int(np.asarray(idd.tier_matvecs)[np.asarray(ladder.sub32)]
+               .sum()) > 0
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(x1),
+                               rtol=1e-4, atol=1e-8)
+
+
+@need4
+def test_dist_auto_selects_and_runs():
+    a = testmats.hpcg(6, 6, 6)
+    s, _ = op.sym_scale(a)
+    ops = op.OperatorSet(s, C=8, sigma=16)
+    x = jnp.asarray(_x(s.shape[0], seed=17))
+    y = np.asarray(ops.matvec("dist_auto:1e-3")(x), np.float64)
+    want = np.asarray(s.astype(np.float64) @ np.asarray(x, np.float64))
+    assert (np.max(np.abs(y - want)) / np.max(np.abs(want))) < 1e-3

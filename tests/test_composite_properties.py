@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) for the block-composition engine:
+ANY composite — random member count, codecs, delta widths, shard counts,
+empty members/shards — must match the dense per-class-quantized oracle.
+Single-device composites run their real jitted dispatch; distributed
+composites use the host reference replay of the stacked operands (the
+real shard_map dispatch is pinned to the replay in tests/test_composite.py
+and tests/test_distributed.py). The dist_mixed ↔ single-device
+``adaptive_pcg`` iteration-parity property is deterministic and mesh-gated:
+``test_composite.py::test_adaptive_pcg_dist_matches_single_device``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import codecs as cd
+from repro.distributed import build_composite_operands, reference_spmv
+from repro.kernels import composite as kc
+
+CODEC_POOL = [("e8m", 4), ("e8m", 8), ("e8m", 12), ("fp16", 15),
+              ("bf16", 15), ("fp32", 0)]
+
+
+@st.composite
+def composite_cases(draw, max_n=64):
+    """(csr matrix, classes): random size/density and a random row
+    partition into 1..4 classes — classes may own zero rows of some shard
+    (or even be dropped entirely when they draw no rows)."""
+    n = draw(st.integers(1, max_n))
+    density = draw(st.floats(0.03, 0.4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    a = sp.random(n, n, density=density, random_state=rng,
+                  data_rvs=lambda k: rng.standard_normal(k)).tocsr()
+    a.sort_indices()
+    k = draw(st.integers(1, 4))
+    assign = np.asarray(draw(st.lists(st.integers(0, k - 1), min_size=n,
+                                      max_size=n)))
+    classes = []
+    for c in range(k):
+        rows = np.nonzero(assign == c)[0]
+        if len(rows) == 0:
+            continue                      # empty member: dropped class
+        codec, D = draw(st.sampled_from(CODEC_POOL))
+        classes.append((codec, D, rows))
+    return a, classes
+
+
+def _oracle(a, classes):
+    dense = a.toarray().astype(np.float64)
+    out = np.zeros_like(dense)
+    for codec, D, rows in classes:
+        rows = np.asarray(rows)
+        if codec == "fp32":
+            out[rows] = dense[rows].astype(np.float32)
+        else:
+            out[rows] = cd.quantize_np(
+                dense[rows].astype(np.float32), cd.make_codec(codec), D)
+    return out
+
+
+@given(composite_cases())
+@settings(max_examples=25, deadline=None)
+def test_composite_matches_dense_oracle(case):
+    a, classes = case
+    cp = kc.CompositePlan.from_classes(a, classes, C=4, sigma=8)
+    x = np.random.default_rng(1).standard_normal(a.shape[0]) \
+        .astype(np.float32)
+    y = np.asarray(cp.spmv(jnp.asarray(x)), np.float64)
+    want = _oracle(a, classes) @ x.astype(np.float64)
+    np.testing.assert_allclose(y, want, rtol=0,
+                               atol=3e-5 * max(np.abs(want).max(), 1.0))
+
+
+@given(composite_cases(max_n=48), st.integers(1, 7))
+@settings(max_examples=20, deadline=None)
+def test_dist_composite_matches_dense_oracle(case, n_shards):
+    """Distributed × mixed members over random shard counts — including
+    empty shards (n < P) and shards holding zero rows of some class —
+    replayed through the stacked operands."""
+    a, classes = case
+    ops = build_composite_operands(a, n_shards, classes=classes, C=4,
+                                   sigma=8)
+    x = np.random.default_rng(2).standard_normal(a.shape[0]) \
+        .astype(np.float32)
+    y = np.asarray(reference_spmv(ops, x), np.float64)
+    want = _oracle(a, classes) @ x.astype(np.float64)
+    np.testing.assert_allclose(y, want, rtol=0,
+                               atol=3e-5 * max(np.abs(want).max(), 1.0))
+
+
+@given(composite_cases(max_n=40), st.integers(2, 5))
+@settings(max_examples=10, deadline=None)
+def test_dist_composite_spmm_matches_spmv(case, n_shards):
+    a, classes = case
+    ops = build_composite_operands(a, n_shards, classes=classes, C=4,
+                                   sigma=8)
+    X = np.random.default_rng(3).standard_normal((a.shape[0], 2)) \
+        .astype(np.float32)
+    Y = reference_spmv(ops, X, multi_rhs=True)
+    for j in range(2):
+        np.testing.assert_allclose(Y[:, j], reference_spmv(ops, X[:, j]),
+                                   rtol=1e-6, atol=1e-6)
