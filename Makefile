@@ -1,8 +1,9 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test verify verify-dist verify-precision verify-composite bench \
-	bench-spmv bench-dist bench-precision bench-composite
+.PHONY: test verify verify-dist verify-precision verify-composite \
+	verify-fused bench bench-spmv bench-dist bench-precision \
+	bench-composite
 
 test:
 	python -m pytest -x -q
@@ -25,6 +26,13 @@ verify-dist:
 verify-precision:
 	python -m pytest -x -q tests/test_precision.py tests/test_codec_edges.py
 	python examples/mixed_precision_solver.py --nx 6
+
+# fused checkpoint decode (DESIGN.md §10): decode-path equivalence
+# properties, Pallas interpret parity for the checkpoint kernels (the
+# band/full variants benchmarks never exercise), the steady-state
+# trace-count regression guard, and the fused solver step
+verify-fused:
+	python -m pytest -x -q tests/test_fused.py
 
 # block-composition engine: composite/kind-parser/warmup tests plus the
 # mesh-gated dist_mixed × adaptive_pcg_dist acceptance tests under 4

@@ -117,9 +117,17 @@ def bench_dispatch(scale: str) -> None:
                                   warmup=2, repeats=5)
         t_seed = common.time_fn(lambda x: _seed_percall_spmv(mat, x), x,
                                 warmup=1, repeats=3)
+        st = plan.decode_cache_stats()
+        fmt = mat.memory_stats()
         common.emit("dispatch", name,
                     t_plan_cached_s=t_cached, t_seed_percall_s=t_seed,
                     speedup=t_seed / t_cached, variant=plan.variant,
+                    decode_cache=st["cache_mode"],
+                    decode_cache_bytes=st["decode_cache_bytes"],
+                    full_cursor_bytes=st["full_cursor_bytes"],
+                    decode_cache_shrink=round(st["shrink_vs_full"], 2),
+                    format_bytes_per_nnz=round(
+                        fmt["packsell_bytes"] / max(mat.nnz, 1), 3),
                     cache=str(kplan.cache_stats()["hits"]) + "h")
 
 

@@ -5,10 +5,24 @@ CSR-fp16 (cuCSR analogue) vs COO-fp16, per structural matrix class.
 Reports effective GFLOPS (2·nnz / t, padding excluded — paper §5.1) and
 the PackSELL speedups of Fig. 8.
 
-Also benchmarks the execution-engine changes per matrix class — the
-scan-parallel cumsum decode vs the seed ``fori_loop`` word walk, and
-cold (plan build + trace) vs plan-cached dispatch — and records them in
-``BENCH_spmv.json`` at the repo root so later PRs have a perf trajectory.
+Also benchmarks the execution-engine trajectory per matrix class and
+records it in ``BENCH_spmv.json`` at the repo root:
+
+* the seed ``fori_loop`` word-walk decode (PR-0 baseline),
+* the PR-1 cursor path, reproduced faithfully (per-bucket full cursor
+  cache + fill-mode gathers + per-bucket loop + concat + inverse-perm
+  gather) — 4 extra bytes streamed per stored word,
+* the fused ragged checkpoint path (this PR, DESIGN.md §10): one
+  word-stream operand, one int32 checkpoint per ``wr`` words, build-time
+  prefix re-basing, unrolled accumulation.
+
+The fused-vs-PR-1 comparison is measured INTERLEAVED
+(:func:`benchmarks.common.time_fns`) so container noise cancels out of
+the ratio, and both paths' outputs are checked equal (max |Δ| reported —
+the accumulation order differs, the arithmetic does not). Decode-cache
+device memory (checkpoints vs the full cursor cache) and effective
+hot-stream bandwidth land next to the timings so the footprint win is
+part of the trajectory.
 """
 from __future__ import annotations
 
@@ -20,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import codecs as cd
 from repro.core import packsell as pk
 from repro.core import sell as sl
 from repro.core import sparse as sps
@@ -34,10 +49,28 @@ _JSON_PATH = os.environ.get(
                  "BENCH_spmv.json"))
 
 
+def _pr1_cursor_spmv(packs, colss, x, inv, mlim, codec, D):
+    """The PR-1 hot path, reproduced for the trajectory comparison: one
+    full int32 cursor per stored word streamed next to the packs,
+    minimum-clamp + default (fill-mode) gathers, per-bucket unpack/gather/
+    reduce with a concat epilogue, then the inverse-permutation gather."""
+    xc = x.astype(jnp.float32)
+    parts = []
+    for pack, cols in zip(packs, colss):
+        S, w, C = pack.shape
+        v, _ = cd.unpack_words_jnp(pack, codec, D)
+        xv = jnp.take(xc, jnp.minimum(cols, mlim).reshape(-1),
+                      axis=0).reshape(S, w, C)
+        parts.append(jnp.sum(v.astype(jnp.float32) * xv, axis=1).reshape(-1))
+    t_cat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return jnp.take(t_cat, inv, axis=0)
+
+
 def _bench_engine(name: str, a, x: jnp.ndarray) -> dict:
-    """Per-matrix engine numbers: the seed fori_loop spmv vs the engine's
-    cumsum-decode dispatch, and dispatch cold-vs-cached."""
+    """Per-matrix engine numbers: seed loop decode, PR-1 cursor path and
+    the fused checkpoint path, plus decode-cache memory accounting."""
     mat = pk.from_csr(a, C=32, sigma=256, D=15, codec="fp16")
+    codec = mat.codec
 
     # seed decode path: the sequential fori_loop word walk with per-bucket
     # σ-scatter, jitted with the matrix as an *argument* (not a closure
@@ -46,22 +79,67 @@ def _bench_engine(name: str, a, x: jnp.ndarray) -> dict:
                                                          decode="loop"))
     t_loop = common.time_fn(f_loop, mat, x)
 
-    # engine scan path: cumsum column decode — run once at plan build (the
-    # plan's cursor cache) — then value-unpack + gather + reduce per call,
-    # with the fused inverse-permutation epilogue. Cold = plan build + first
-    # traced call; cached = steady-state single-dispatch calls.
+    # fused checkpoint path: cold = plan build + first traced call;
+    # cached = steady-state single-dispatch calls.
     kplan.clear_cache()
     t0 = time.perf_counter()
-    plan = kplan.get_plan(mat)
+    plan = kplan.get_plan(mat, decode_cache="checkpoint")
     jax.block_until_ready(plan.spmv(mat, x))
     t_cold = time.perf_counter() - t0
-    t_scan = common.time_fn(lambda x: plan.spmv(mat, x), x)
+
+    # PR-1 replica operands: the full cursor cache of the same plan engine
+    plan_cur = kplan.build_plan(mat, force="jnp", decode_cache="full")
+    mlim = np.int32(max(mat.m - 1, 0))
+    pr1 = jax.jit(lambda packs, cols, x, inv:
+                  _pr1_cursor_spmv(packs, cols, x, inv, mlim, codec, 15))
+
+    y_fused = np.asarray(plan.spmv(mat, x))
+    y_pr1 = np.asarray(pr1(mat.packs, plan_cur.cols, x, plan_cur.inv_cat))
+    scale = max(float(np.max(np.abs(y_pr1))), 1e-30)
+    max_rel_diff = float(np.max(np.abs(y_fused - y_pr1))) / scale
+
+    ts = common.time_fns(
+        {"fused": lambda x: plan.spmv(mat, x),
+         "pr1": lambda x: pr1(mat.packs, plan_cur.cols, x,
+                              plan_cur.inv_cat)},
+        {"fused": (x,), "pr1": (x,)},
+        rounds=25, samples=True)
+    t_fused = float(np.median(ts["fused"]))
+    t_pr1 = float(np.median(ts["pr1"]))
+    speedup = common.paired_speedup(ts, "pr1", "fused")
+
+    st = plan.decode_cache_stats()
+    lay = plan.fused_layout
+    nnz = max(mat.nnz, 1)
+    # steady-state hot-stream traffic: the word stream (+ decode cache)
+    # each matvec reads, x read once, y written once
+    fused_traffic = st["fused_stream_bytes"] + st["decode_cache_bytes"] \
+        + 4 * (mat.m + mat.n)
+    pr1_traffic = 4 * plan.total_words + st["full_cursor_bytes"] \
+        + 4 * (mat.m + mat.n)
 
     rec = dict(
-        decode_loop_s=t_loop, decode_scan_s=t_scan,
-        decode_speedup=t_loop / t_scan,
-        dispatch_cold_s=t_cold, dispatch_cached_s=t_scan,
+        decode_loop_s=t_loop,
+        dispatch_cold_s=t_cold,
+        dispatch_cached_s=t_fused,
+        pr1_cursor_s=t_pr1,
+        fused_speedup_vs_pr1=speedup,
+        fused_speedup_vs_seed_loop=t_loop / t_fused,
+        max_rel_diff_vs_pr1=max_rel_diff,
         plan_variant=plan.variant,
+        decode_cache_mode=st["cache_mode"],
+        fused_encoding=None if lay is None else lay.encoding,
+        ckpt_width=None if lay is None else lay.wr,
+        decode_cache_bytes=st["decode_cache_bytes"],
+        pr1_cursor_cache_bytes=st["full_cursor_bytes"],
+        decode_cache_shrink=st["shrink_vs_full"],
+        fused_stream_bytes=st["fused_stream_bytes"],
+        stream_bytes_per_nnz=(st["fused_stream_bytes"]
+                              + st["decode_cache_bytes"]) / nnz,
+        pr1_stream_bytes_per_nnz=(4 * plan.total_words
+                                  + st["full_cursor_bytes"]) / nnz,
+        fused_bandwidth_gbs=fused_traffic / t_fused / 1e9,
+        pr1_bandwidth_gbs=pr1_traffic / t_pr1 / 1e9,
     )
     common.emit("spmv_engine", name, **rec)
     return rec
@@ -120,8 +198,11 @@ def run(scale: str | None = None) -> None:
     payload = dict(
         scale=scale, backend=jax.default_backend(),
         note=("cold = plan build + first traced dispatch; cached = "
-              "steady-state single-dispatch calls; decode timings are "
-              "jitted loop vs cumsum-scan column decode"),
+              "steady-state fused-checkpoint single-dispatch calls; "
+              "pr1_cursor_s = the PR-1 full-cursor-cache path replayed "
+              "and timed interleaved with the fused path (ratios are "
+              "noise-robust); decode_cache_* price the per-matvec decode "
+              "stream (checkpoints vs one int32 cursor per word)"),
         cases=engine_rows,
     )
     with open(_JSON_PATH, "w") as f:

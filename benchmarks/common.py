@@ -33,6 +33,38 @@ def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:
     return float(np.median(ts))
 
 
+def time_fns(fns: dict, args: dict, *, warmup: int = 2,
+             rounds: int = 9, samples: bool = False) -> dict:
+    """Interleaved timings: one call of every fn per round (order rotated
+    per round), so contended / throttled containers perturb all candidates
+    alike. Returns per-fn medians; ``samples=True`` returns the raw
+    per-round lists instead, for PAIRED statistics — e.g.
+    :func:`paired_speedup`, the comparison instrument behind
+    fused-vs-cursor in BENCH_spmv.json."""
+    keys = list(fns)
+    ts = {k: [] for k in keys}
+    for k in keys:
+        for _ in range(warmup):
+            jax.block_until_ready(fns[k](*args[k]))
+    for r in range(rounds):
+        order = keys[r % len(keys):] + keys[:r % len(keys)]
+        for k in order:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[k](*args[k]))
+            ts[k].append(time.perf_counter() - t0)
+    if samples:
+        return ts
+    return {k: float(np.median(v)) for k, v in ts.items()}
+
+
+def paired_speedup(ts: dict, base: str, cand: str) -> float:
+    """Median of per-round ``t_base / t_cand`` ratios from
+    :func:`time_fns(..., samples=True)`. Pairing cancels the machine's
+    between-round throughput drift that poisons unpaired medians on a
+    shared container."""
+    return float(np.median(np.asarray(ts[base]) / np.asarray(ts[cand])))
+
+
 def emit(bench: str, case: str, **fields):
     row = {"bench": bench, "case": case, **fields}
     _ROWS.append(row)

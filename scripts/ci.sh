@@ -29,6 +29,15 @@ if [[ "${1:-}" != "fast" ]]; then
     python -m pytest -x -q tests/test_composite.py \
     tests/test_composite_properties.py
 
+  echo "== fused: checkpoint decode equivalence + trace-count guard =="
+  # the fused ragged checkpoint path (DESIGN.md §10): every decode-cache
+  # mode must match the numpy oracle bit-for-bit on integer data, the
+  # checkpoint-seeded Pallas kernels must match the legacy carry kernels
+  # in interpret mode (band/full variants otherwise never run in CI), a
+  # steady-state matvec must stay ONE jitted dispatch across 10 calls,
+  # and the fused solver step must not change iteration counts
+  python -m pytest -x -q tests/test_fused.py
+
   echo "== precision: subsystem tests + adaptive_pcg smoke =="
   # the example's adaptive section must converge to 1e-8 with a
   # low-precision (sub-32-bit) operator/preconditioner; the store

@@ -152,7 +152,7 @@ def _bucket_spmv_scan(pack, d0, xc, codec, D, mlim, compute_dtype):
         v, d = cd.unpack_words_jnp(pc, codec, D)
         cols = carry[:, None, :] + jnp.cumsum(d.astype(jnp.int32), axis=1)
         xv = jnp.take(xc, jnp.minimum(cols, mlim).reshape(-1),
-                      axis=0).reshape(cols.shape)
+                      axis=0, mode="clip").reshape(cols.shape)
         t = t + jnp.sum(v.astype(compute_dtype) * xv, axis=1)
         carry = cols[:, -1, :]
     return t
@@ -170,7 +170,7 @@ def _bucket_spmv_loop(pack, d0, xc, codec, D, mlim, compute_dtype):
         c, t = carry
         v, d = cd.unpack_words_jnp(pack[:, j, :], codec, D)
         c = c + d.astype(jnp.int32)
-        xv = jnp.take(xc, jnp.minimum(c, mlim), axis=0)
+        xv = jnp.take(xc, jnp.minimum(c, mlim), axis=0, mode="clip")
         t = t + v.astype(compute_dtype) * xv
         return c, t
 
@@ -189,7 +189,7 @@ def _bucket_spmm_scan(pack, d0, xc, codec, D, mlim, compute_dtype):
         v, d = cd.unpack_words_jnp(pc, codec, D)
         cols = carry[:, None, :] + jnp.cumsum(d.astype(jnp.int32), axis=1)
         xv = jnp.take(xc, jnp.minimum(cols, mlim).reshape(-1),
-                      axis=0).reshape(cols.shape + (nb,))
+                      axis=0, mode="clip").reshape(cols.shape + (nb,))
         t = t + jnp.sum(v.astype(compute_dtype)[..., None] * xv, axis=1)
         carry = cols[:, -1, :]
     return t
@@ -206,7 +206,7 @@ def _bucket_spmm_loop(pack, d0, xc, codec, D, mlim, compute_dtype):
         v, d = cd.unpack_words_jnp(pack[:, j, :], codec, D)
         c = c + d.astype(jnp.int32)
         xv = jnp.take(xc, jnp.minimum(c, mlim).reshape(-1),
-                      axis=0).reshape(S, C, nb)
+                      axis=0, mode="clip").reshape(S, C, nb)
         t = t + v.astype(compute_dtype)[..., None] * xv
         return c, t
 

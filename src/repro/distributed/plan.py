@@ -101,9 +101,18 @@ class DistMember:
             x_index=self.x_index, term=self.term, label=self.label)
 
     def host_arrays(self) -> dict:
-        """Stacked [P, ...] device operands for the shard_map body."""
+        """Stacked [P, ...] device operands for the shard_map body.
+
+        With the fused checkpoint stream (the default decode cache) the
+        member ships ONLY ``{k}_fwords``/``{k}_fckpt`` — the packs/d0s are
+        not read by the fused execution body, so stacking them would
+        double the fleet's device footprint for nothing."""
         k = self.key
         if self.fmt == "packsell":
+            if self.plans[0].fused is not None:
+                w3, ck = zip(*(p.fused for p in self.plans))
+                return {f"{k}_fwords": np.stack([np.asarray(w) for w in w3]),
+                        f"{k}_fckpt": np.stack([np.asarray(c) for c in ck])}
             out = {f"{k}_pack": np.stack([np.asarray(m.packs[0])
                                           for m in self.mats]),
                    f"{k}_d0": np.stack([np.asarray(m.d0s[0])
@@ -154,7 +163,19 @@ def _build_dist_member(idx: int, blocks, rows_local, codec: str, D: int, *,
         w = max(int(m.packs[0].shape[1]) for m in raw)
         mats = [pk.pad_uniform(m, n_slices=S, width=w, device=False)
                 for m in raw]
-        plans = [kplan.build_plan(m, force="jnp") for m in mats]
+        # fused_trim=False: the fused layout must be shape-derived so all
+        # shards share one static layout (shapes are pad_uniform'd equal)
+        plans = [kplan.build_plan(m, force="jnp", fused_trim=False)
+                 for m in mats]
+        # ... but the ENCODING is still data-dependent (column-span
+        # overflow falls back per shard), so any mismatch demotes the
+        # whole member to the full cursor cache
+        lays = {(None if p.fused_layout is None else
+                 (p.fused_layout.wr, p.fused_layout.encoding))
+                for p in plans}
+        if len(lays) > 1:
+            plans = [kplan.build_plan(m, force="jnp", decode_cache="full")
+                     for m in mats]
     return DistMember(key=f"m{idx}", fmt="sell" if plans is None
                       else "packsell", codec=codec, D=D, term=term,
                       x_index=x_index, label=label, mats=mats, plans=plans,
@@ -217,9 +238,16 @@ class DistOperands:
         accounting fields are 0 / shard-0 statics."""
         t = dm.mats[0]
         if dm.fmt == "packsell":
-            d0 = ops[f"{dm.key}_d0"]
+            if f"{dm.key}_fwords" in ops:
+                # fused checkpoint stream: the execution body never reads
+                # the packs, so the view carries placeholder leaves
+                d0 = jnp.zeros((1,), jnp.int32)
+            else:
+                d0 = ops[f"{dm.key}_d0"]
+            pack = ops.get(f"{dm.key}_pack",
+                           jnp.zeros((1, 1, 1), jnp.uint32))
             return pk.PackSELLMatrix(
-                packs=(ops[f"{dm.key}_pack"],), d0s=(d0,), outrows=(d0,),
+                packs=(pack,), d0s=(d0,), outrows=(d0,),
                 maxcols=(jnp.zeros_like(d0),),
                 perm=jnp.zeros((1,), jnp.uint8),
                 n=t.n, m=t.m, C=self.C, sigma=self.sigma, D=dm.D,
@@ -237,8 +265,11 @@ class DistOperands:
         if dm.fmt != "packsell":
             return {}
         cols = ops.get(f"{dm.key}_cols")
+        fw = ops.get(f"{dm.key}_fwords")
         return {"cols": None if cols is None else (cols,),
-                "inv": None, "outrow": None}
+                "inv": None, "outrow": None,
+                "fused": None if fw is None
+                else (fw, ops[f"{dm.key}_fckpt"])}
 
     def shard_body(self, ops: dict, x: jnp.ndarray, *,
                    axis_name: str | None, mode: str,

@@ -86,7 +86,7 @@ def sell_stored_spmv(mat: SELLMatrix, x: jnp.ndarray, *,
 
             def body_mm(j, t, val=val, col=col):
                 v = val[:, j, :].astype(cdt)
-                xv = jnp.take(xc, col[:, j, :], axis=0)
+                xv = jnp.take(xc, col[:, j, :], axis=0, mode="clip")
                 return t + v[..., None] * xv
 
             t = jax.lax.fori_loop(0, w, body_mm, t0)
@@ -96,7 +96,7 @@ def sell_stored_spmv(mat: SELLMatrix, x: jnp.ndarray, *,
 
             def body(j, t, val=val, col=col):
                 v = val[:, j, :].astype(cdt)
-                xv = jnp.take(xc, col[:, j, :], axis=0)
+                xv = jnp.take(xc, col[:, j, :], axis=0, mode="clip")
                 return t + v * xv
 
             t = jax.lax.fori_loop(0, w, body, t0)
@@ -152,11 +152,13 @@ class CompositeMember:
                 else np.zeros((0,), np.int32))
 
     def device_operands(self) -> dict:
-        """The member's plan-held device buffers. ``inv``/``outrow`` are
-        None: the composite's term gather replaces the per-block epilogue."""
+        """The member's plan-held device buffers (the fused checkpoint
+        stream, or the legacy cursor cache). ``inv``/``outrow`` are None:
+        the composite's term gather replaces the per-block epilogue."""
         if self.plan is None:
             return {}
-        return {"cols": self.plan.cols, "inv": None, "outrow": None}
+        return {"cols": self.plan.cols, "inv": None, "outrow": None,
+                "fused": self.plan.fused, "kckpt": self.plan.kckpts}
 
     def execute(self, mat, dev: dict, x: jnp.ndarray, *,
                 multi_rhs: bool = False) -> jnp.ndarray:
@@ -309,6 +311,8 @@ class CompositePlan:
         self._invs: Optional[tuple] = None
         self.nnz = sum(int(mem.mat.nnz) for mem in self.members)
         self._fns: dict = {}
+        self._cat: Optional[tuple] = None
+        self._cat_built = False
 
     @property
     def invs(self) -> tuple:
@@ -324,8 +328,64 @@ class CompositePlan:
     def member_devs(self) -> tuple:
         return tuple(mem.device_operands() for mem in self.members)
 
+    def fused_cat(self) -> Optional[tuple]:
+        """ONE concatenated word-stream operand for the whole composite
+        (lazy): every fused member's ``(words3d, ckpt)`` flattened into a
+        single ``(words_cat, ckpt_cat, slices)`` pair of device buffers
+        plus static slice metadata. The jitted dispatch streams one
+        operand for all member blocks; members that carry no fused stream
+        (SELL blocks, cursor/scan plans) keep their own operands. None
+        when no member is fused."""
+        if not self._cat_built:
+            self._cat_built = True
+            ws, cks, slices = [], [], []
+            w_off = c_off = 0
+            for mem in self.members:
+                fz = None if mem.plan is None else mem.plan.fused
+                if fz is None:
+                    slices.append(None)
+                    continue
+                w3, ck = fz
+                slices.append((w_off, tuple(w3.shape), c_off,
+                               tuple(ck.shape)))
+                ws.append(w3.reshape(-1))
+                cks.append(ck.reshape(-1))
+                w_off += int(np.prod(w3.shape))
+                c_off += int(np.prod(ck.shape))
+            # one fused member needs no concatenation — and the cat is a
+            # real device copy next to the (possibly shared) member plans'
+            # own streams, so only pay it when it actually merges operands
+            if len(ws) >= 2:
+                self._cat = (jnp.concatenate(ws), jnp.concatenate(cks),
+                             tuple(slices))
+        return self._cat
+
+    def _devs_with_cat(self, devs, cat):
+        """Rebuild per-member dev dicts from the concatenated word-stream
+        operand (static slices — XLA fuses them into the consumers). The
+        slice table is composite-static (``self._cat``); only the two
+        buffers flow as jit arguments."""
+        wcat, ckcat = cat
+        slices = self._cat[2]
+        out = []
+        for dev, sl in zip(devs, slices):
+            if sl is None:
+                out.append(dev)
+                continue
+            w_off, wsh, c_off, csh = sl
+            nd = dict(dev)
+            nd["fused"] = (
+                jax.lax.slice(wcat, (w_off,),
+                              (w_off + int(np.prod(wsh)),)).reshape(wsh),
+                jax.lax.slice(ckcat, (c_off,),
+                              (c_off + int(np.prod(csh)),)).reshape(csh))
+            out.append(nd)
+        return tuple(out)
+
     # -- execution body ----------------------------------------------------
-    def _execute(self, mats, devs, invs, xs, multi_rhs):
+    def _execute(self, mats, devs, invs, xs, multi_rhs, cat=None):
+        if cat is not None:
+            devs = self._devs_with_cat(devs, cat)
         parts = [[] for _ in range(self.n_terms)]
         for mem, mat, dev in zip(self.members, mats, devs):
             t = mem.execute(mat, dev, xs[mem.x_index], multi_rhs=multi_rhs)
@@ -337,7 +397,11 @@ class CompositePlan:
             if self.pad_slot:
                 pad = jnp.zeros((1,) + tuple(t_cat.shape[1:]), t_cat.dtype)
                 t_cat = jnp.concatenate([t_cat, pad])
-            yt = jnp.take(t_cat, inv, axis=0)
+            # each covered row has exactly one term slot (unique indices;
+            # with a pad slot the uncovered rows share it, so the hint is
+            # only safe without one)
+            yt = jnp.take(t_cat, inv, axis=0, mode="clip",
+                          unique_indices=not self.pad_slot)
             y = yt if y is None else y + yt
         return y
 
@@ -361,20 +425,39 @@ class CompositePlan:
     def _dispatch(self, multi_rhs: bool):
         fn = self._fns.get(multi_rhs)
         if fn is None:
-            fn = jax.jit(lambda mats, devs, invs, xs, mr=multi_rhs:
-                         self._execute(mats, devs, invs, xs, mr))
+            fn = jax.jit(lambda mats, devs, invs, xs, cat, mr=multi_rhs:
+                         self._execute(mats, devs, invs, xs, mr, cat=cat))
             self._fns[multi_rhs] = fn
         return fn
+
+    def _run_args(self):
+        """(mats, devs, invs, cat): with a concatenated word stream the
+        per-member dev dicts drop their fused arrays — the single cat
+        operand carries them all. Fused members ship their plan's
+        placeholder-leaf matrix view (the body reads only codec statics),
+        keeping the dispatch pytree small."""
+        devs = self.member_devs()
+        mats = tuple(mem.mat if mem.plan is None
+                     else mem.plan._exec_mat(mem.mat)
+                     for mem in self.members)
+        cat = self.fused_cat()
+        if cat is not None:
+            devs = tuple(
+                {**dev, "fused": None} if sl is not None else dev
+                for dev, sl in zip(devs, cat[2]))
+            cat = cat[:2]
+        return mats, devs, self.invs, cat
 
     def _run(self, x: jnp.ndarray, multi_rhs: bool) -> jnp.ndarray:
         if self.n_inputs != 1:
             raise ValueError(
                 "composite has members on input index > 0 (a distributed "
                 "halo composition); drive it via execute_with")
-        args = (self.member_mats(), self.member_devs(), self.invs, (x,))
+        mats, devs, invs, cat = self._run_args()
         if isinstance(x, jax.core.Tracer):
-            return self._execute(*args, multi_rhs)
-        return self._dispatch(multi_rhs)(*args)
+            return self._execute(mats, devs, invs, (x,), multi_rhs,
+                                 cat=cat)
+        return self._dispatch(multi_rhs)(mats, devs, invs, (x,), cat)
 
     def spmv(self, x: jnp.ndarray) -> jnp.ndarray:
         """y = A x — one jitted dispatch over every member block."""

@@ -38,14 +38,17 @@ def packsell_spmv(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
                   wb: int = 32, hw: int = _DEF_HW,
                   interpret: bool | None = None,
                   force: str | None = None,
+                  decode_cache: str | None = None,
                   permuted: bool = False) -> jnp.ndarray:
     """y = A @ x via the plan engine (single jitted dispatch).
 
     ``force`` in {None, 'full', 'band', 'jnp'} pins the kernel variant;
+    ``decode_cache`` in {None, 'checkpoint', 'full', '0'} pins the plan's
+    decode-cache layout (default: ``REPRO_PLAN_CURSOR_CACHE``);
     ``permuted=True`` returns y in stored-row order (no σ-scatter).
     """
     plan = _plan.get_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
-                          interpret=interpret)
+                          interpret=interpret, decode_cache=decode_cache)
     return plan.spmv(mat, x, permuted=permuted)
 
 
@@ -53,6 +56,7 @@ def packsell_spmm(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
                   wb: int = 32, hw: int = _DEF_HW,
                   interpret: bool | None = None,
                   force: str | None = None,
+                  decode_cache: str | None = None,
                   permuted: bool = False) -> jnp.ndarray:
     """Y = A @ X for X: [m, nb] via the multi-RHS kernel (one pass over the
     packed words for all nb right-hand sides)."""
@@ -60,7 +64,7 @@ def packsell_spmm(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
         raise ValueError(f"packsell_spmm expects x of shape [m, nb], got "
                          f"{x.shape}; use packsell_spmv for a single RHS")
     plan = _plan.get_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
-                          interpret=interpret)
+                          interpret=interpret, decode_cache=decode_cache)
     return plan.spmm(mat, x, permuted=permuted)
 
 

@@ -3,14 +3,25 @@
 Grid = (slice_blocks, width_blocks). Each kernel instance owns a
 ``[SB, WB, C]`` VMEM tile of packed words (C = slice size = 128 lanes by
 default, SB slices stack on the sublane dimension → word tiles are
-VREG-aligned). The column cursor ``c`` and the accumulator carry across the
-width dimension in VMEM scratch — the classic reduction-grid pattern — so
-arbitrarily wide slices stream through a bounded VMEM footprint.
+VREG-aligned).
+
+Two cursor regimes (DESIGN.md §10.2):
+
+* **legacy carry** (``ckpt=None``) — the column cursor ``c`` and the
+  accumulator carry across the width dimension in VMEM scratch (the classic
+  reduction-grid pattern): width blocks are a *sequential* carry chain.
+* **checkpoint-seeded** (``ckpt=int32[S, nw, C]`` from
+  ``plan.py::_build_block_checkpoints``) — each width block seeds its
+  cursor from the checkpoint ref instead of the previous block's scratch,
+  so width blocks have no data dependence on each other: the width grid
+  dimension becomes **parallel**, each block writes its own partial output
+  tile and the wrapper reduces over width blocks outside the kernel. No
+  cursor scratch, no carry chain.
 
 Unpacking is the paper's branch-free sequence on int32 VREGs (VPU); the MXU
 is deliberately unused (SpMV is memory-bound; see DESIGN.md §2).
 
-Two variants:
+Two x-delivery variants:
 
 * ``full-x``  — the dense input vector is resident in VMEM (fits for
   n ≲ 1–2M fp32 on a 16 MB VMEM part after tiling the pack stream).
@@ -38,6 +49,19 @@ def _unpack(words: jnp.ndarray, codec: cd.Codec, D: int):
     return cd.unpack_words_jnp(words, codec, D)
 
 
+def _pad_ckpt(ckpt: jnp.ndarray, s_pad: int) -> jnp.ndarray:
+    """Pad the slice axis of a width-block checkpoint (padded slices hold
+    PAD words only: any in-range cursor works, 0 is fine)."""
+    if s_pad:
+        ckpt = jnp.pad(ckpt, ((0, s_pad), (0, 0), (0, 0)))
+    return ckpt
+
+
+# ---------------------------------------------------------------------------
+# full-x variant
+# ---------------------------------------------------------------------------
+
+
 def _kernel_full(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
                  codec_name: str, D: int, nw: int, wb: int):
     codec = cd.make_codec(codec_name)
@@ -59,8 +83,8 @@ def _kernel_full(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
         c, acc = carry
         v, d = _unpack(pack[:, j, :], codec, D)
         c = c + d.astype(jnp.int32)
-        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1),
-                      axis=0).reshape(c.shape)
+        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1), axis=0,
+                      mode="clip").reshape(c.shape)
         return c, acc + v.astype(jnp.float32) * xv
 
     c, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
@@ -70,6 +94,96 @@ def _kernel_full(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
     @pl.when(wi == nw - 1)
     def _fin():
         y_ref[...] = acc
+
+
+def _kernel_full_ckpt(ckpt_ref, pack_ref, x_ref, y_ref, *,
+                      codec_name: str, D: int, wb: int):
+    """Checkpoint-seeded full-x kernel: no scratch, no carry — each
+    (si, wi) instance is independent and writes its own partial tile."""
+    codec = cd.make_codec(codec_name)
+    c = ckpt_ref[...].reshape(ckpt_ref.shape[0], ckpt_ref.shape[2])
+    pack = pack_ref[...]            # [SB, WB, C] uint32
+    x = x_ref[...]                  # [m_pad] f32
+    mlim = np.int32(x.shape[0] - 1)
+    acc = jnp.zeros(c.shape, jnp.float32)
+
+    def body(j, carry):
+        c, acc = carry
+        v, d = _unpack(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1), axis=0,
+                      mode="clip").reshape(c.shape)
+        return c, acc + v.astype(jnp.float32) * xv
+
+    _, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
+    y_ref[...] = acc[None]
+
+
+def packsell_spmv_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
+                         *, codec_name: str, D: int, sb: int = 8,
+                         wb: int = 32, interpret: bool = True,
+                         ckpt: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Run the full-x kernel over one width bucket. Returns y in stored-row
+    order, shape [S, C] float32. Caller applies the σ-permutation gather.
+
+    ``ckpt`` (int32 [S, nw, C], cursor before word ``wi*wb``) switches to
+    the checkpoint-seeded kernel: width blocks run grid-parallel and the
+    wrapper sums their partial tiles."""
+    S, w, C = pack.shape
+    s_pad = -S % sb
+    w_pad = -w % wb
+    if s_pad or w_pad:
+        pack = jnp.pad(pack, ((0, s_pad), (0, w_pad), (0, 0)))
+        d0 = jnp.pad(d0, (0, s_pad))
+    Sp, wp, _ = pack.shape
+    m_pad = -x.shape[0] % 128
+    xp = jnp.pad(x.astype(jnp.float32), (0, m_pad))
+    nw = wp // wb
+    grid = (Sp // sb, nw)
+
+    if ckpt is not None:
+        kernel = functools.partial(_kernel_full_ckpt, codec_name=codec_name,
+                                   D=D, wb=wb)
+        y = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((sb, 1, C), lambda si, wi: (si, wi, 0)),
+                pl.BlockSpec((sb, wb, C), lambda si, wi: (si, wi, 0)),
+                pl.BlockSpec((xp.shape[0],), lambda si, wi: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, sb, C), lambda si, wi: (wi, si, 0)),
+            out_shape=jax.ShapeDtypeStruct((nw, Sp, C), jnp.float32),
+            compiler_params=compat.compiler_params("parallel", "parallel"),
+            interpret=interpret,
+            name=f"packsell_spmv_ckpt_{codec_name}_D{D}",
+        )(_pad_ckpt(ckpt, s_pad), pack, xp)
+        return (y[0] if nw == 1 else jnp.sum(y, axis=0))[:S]
+
+    kernel = functools.partial(_kernel_full, codec_name=codec_name, D=D,
+                               nw=nw, wb=wb)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sb,), lambda si, wi: (si,)),
+            pl.BlockSpec((sb, wb, C), lambda si, wi: (si, wi, 0)),
+            pl.BlockSpec((xp.shape[0],), lambda si, wi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((sb, C), lambda si, wi: (si, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((sb, C), jnp.int32),
+                        pltpu.VMEM((sb, C), jnp.float32)],
+        compiler_params=compat.compiler_params("parallel", "arbitrary"),
+        interpret=interpret,
+        name=f"packsell_spmv_{codec_name}_D{D}",
+    )(d0, pack, xp)
+    return y[:S]
+
+
+# ---------------------------------------------------------------------------
+# band variant
+# ---------------------------------------------------------------------------
 
 
 def _kernel_band(win_ref, d0_ref, pack_ref, xlo_ref, xhi_ref, y_ref, c_ref,
@@ -103,7 +217,8 @@ def _kernel_band(win_ref, d0_ref, pack_ref, xlo_ref, xhi_ref, y_ref, c_ref,
         v, d = _unpack(pack[:, j, :], codec, D)
         c = c + d.astype(jnp.int32)
         local = jnp.clip(c - base, 0, lim)
-        xv = jnp.take(x, local.reshape(-1), axis=0).reshape(c.shape)
+        xv = jnp.take(x, local.reshape(-1), axis=0,
+                      mode="clip").reshape(c.shape)
         return c, acc + v.astype(jnp.float32) * xv
 
     c, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
@@ -115,11 +230,45 @@ def _kernel_band(win_ref, d0_ref, pack_ref, xlo_ref, xhi_ref, y_ref, c_ref,
         y_ref[...] = acc
 
 
-def packsell_spmv_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
-                         *, codec_name: str, D: int, sb: int = 8,
-                         wb: int = 32, interpret: bool = True) -> jnp.ndarray:
-    """Run the full-x kernel over one width bucket. Returns y in stored-row
-    order, shape [S, C] float32. Caller applies the σ-permutation scatter."""
+def _kernel_band_ckpt(win_ref, ckpt_ref, pack_ref, xlo_ref, xhi_ref, y_ref,
+                      *, codec_name: str, D: int, wb: int, hw: int):
+    """Checkpoint-seeded band kernel: width blocks grid-parallel, partial
+    tiles reduced by the wrapper."""
+    codec = cd.make_codec(codec_name)
+    si = pl.program_id(0)
+    c = ckpt_ref[...].reshape(ckpt_ref.shape[0], ckpt_ref.shape[2])
+    pack = pack_ref[...]
+    x = jnp.concatenate([xlo_ref[...].reshape(-1),
+                         xhi_ref[...].reshape(-1)])   # [2*hw] window
+    base = win_ref[si] * np.int32(hw)
+    lim = np.int32(2 * hw - 1)
+    acc = jnp.zeros(c.shape, jnp.float32)
+
+    def body(j, carry):
+        c, acc = carry
+        v, d = _unpack(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        local = jnp.clip(c - base, 0, lim)
+        xv = jnp.take(x, local.reshape(-1), axis=0,
+                      mode="clip").reshape(c.shape)
+        return c, acc + v.astype(jnp.float32) * xv
+
+    _, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
+    y_ref[...] = acc[None]
+
+
+def packsell_spmv_band_bucket(pack: jnp.ndarray, d0: jnp.ndarray,
+                              win: jnp.ndarray, x: jnp.ndarray, *,
+                              codec_name: str, D: int, hw: int, sb: int = 8,
+                              wb: int = 32, interpret: bool = True,
+                              ckpt: jnp.ndarray | None = None
+                              ) -> jnp.ndarray:
+    """Band-windowed variant: ``win[si]`` (scalar-prefetched, so the x DMA
+    can be issued ahead of the pack tiles) selects a 2×hw element window of
+    x for slice-block ``si``: elements [win*hw, win*hw + 2*hw). The wrapper
+    guarantees each slice-block's column span fits within hw, so coverage is
+    exact regardless of alignment. ``ckpt`` as in
+    :func:`packsell_spmv_bucket`."""
     S, w, C = pack.shape
     s_pad = -S % sb
     w_pad = -w % wb
@@ -127,30 +276,66 @@ def packsell_spmv_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
         pack = jnp.pad(pack, ((0, s_pad), (0, w_pad), (0, 0)))
         d0 = jnp.pad(d0, (0, s_pad))
     Sp, wp, _ = pack.shape
-    m_pad = -x.shape[0] % 128
-    xp = jnp.pad(x.astype(jnp.float32), (0, m_pad))
+    # pad x to a whole number of half-windows plus one slack half-window
+    x_pad = (-x.shape[0]) % hw + hw
+    xp = jnp.pad(x.astype(jnp.float32), (0, x_pad)).reshape(-1, hw)
     nw = wp // wb
     grid = (Sp // sb, nw)
 
-    kernel = functools.partial(_kernel_full, codec_name=codec_name, D=D,
-                               nw=nw, wb=wb)
-    y = pl.pallas_call(
-        kernel,
+    if ckpt is not None:
+        kernel = functools.partial(_kernel_band_ckpt, codec_name=codec_name,
+                                   D=D, wb=wb, hw=hw)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((sb, 1, C), lambda si, wi, win: (si, wi, 0)),
+                pl.BlockSpec((sb, wb, C), lambda si, wi, win: (si, wi, 0)),
+                pl.BlockSpec((1, hw), lambda si, wi, win: (win[si], 0)),
+                pl.BlockSpec((1, hw), lambda si, wi, win: (win[si] + 1, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, sb, C),
+                                   lambda si, wi, win: (wi, si, 0)),
+        )
+        y = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((nw, Sp, C), jnp.float32),
+            compiler_params=compat.compiler_params("parallel", "parallel"),
+            interpret=interpret,
+            name=f"packsell_spmv_band_ckpt_{codec_name}_D{D}",
+        )(win, _pad_ckpt(ckpt, s_pad), pack, xp, xp)
+        return (y[0] if nw == 1 else jnp.sum(y, axis=0))[:S]
+
+    kernel = functools.partial(_kernel_band, codec_name=codec_name, D=D,
+                               nw=nw, wb=wb, hw=hw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((sb,), lambda si, wi: (si,)),
-            pl.BlockSpec((sb, wb, C), lambda si, wi: (si, wi, 0)),
-            pl.BlockSpec((xp.shape[0],), lambda si, wi: (0,)),
+            pl.BlockSpec((sb,), lambda si, wi, win: (si,)),
+            pl.BlockSpec((sb, wb, C), lambda si, wi, win: (si, wi, 0)),
+            pl.BlockSpec((1, hw), lambda si, wi, win: (win[si], 0)),
+            pl.BlockSpec((1, hw), lambda si, wi, win: (win[si] + 1, 0)),
         ],
-        out_specs=pl.BlockSpec((sb, C), lambda si, wi: (si, 0)),
-        out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
+        out_specs=pl.BlockSpec((sb, C), lambda si, wi, win: (si, 0)),
         scratch_shapes=[pltpu.VMEM((sb, C), jnp.int32),
                         pltpu.VMEM((sb, C), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
         compiler_params=compat.compiler_params("parallel", "arbitrary"),
         interpret=interpret,
-        name=f"packsell_spmv_{codec_name}_D{D}",
-    )(d0, pack, xp)
+        name=f"packsell_spmv_band_{codec_name}_D{D}",
+    )(win, d0, pack, xp, xp)
     return y[:S]
+
+
+# ---------------------------------------------------------------------------
+# multi-RHS variant
+# ---------------------------------------------------------------------------
 
 
 def _kernel_spmm(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
@@ -178,8 +363,8 @@ def _kernel_spmm(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
         c, acc = carry
         v, d = _unpack(pack[:, j, :], codec, D)
         c = c + d.astype(jnp.int32)
-        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1),
-                      axis=0).reshape(c.shape + (nb,))
+        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1), axis=0,
+                      mode="clip").reshape(c.shape + (nb,))
         return c, acc + v.astype(jnp.float32)[..., None] * xv
 
     c, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
@@ -191,15 +376,39 @@ def _kernel_spmm(d0_ref, pack_ref, x_ref, y_ref, c_ref, acc_ref, *,
         y_ref[...] = acc
 
 
+def _kernel_spmm_ckpt(ckpt_ref, pack_ref, x_ref, y_ref, *,
+                      codec_name: str, D: int, wb: int):
+    codec = cd.make_codec(codec_name)
+    c = ckpt_ref[...].reshape(ckpt_ref.shape[0], ckpt_ref.shape[2])
+    pack = pack_ref[...]            # [SB, WB, C] uint32
+    x = x_ref[...]                  # [m_pad, nb] f32
+    mlim = np.int32(x.shape[0] - 1)
+    nb = x.shape[1]
+    acc = jnp.zeros(c.shape + (nb,), jnp.float32)
+
+    def body(j, carry):
+        c, acc = carry
+        v, d = _unpack(pack[:, j, :], codec, D)
+        c = c + d.astype(jnp.int32)
+        xv = jnp.take(x, jnp.minimum(c, mlim).reshape(-1), axis=0,
+                      mode="clip").reshape(c.shape + (nb,))
+        return c, acc + v.astype(jnp.float32)[..., None] * xv
+
+    _, acc = jax.lax.fori_loop(0, wb, body, (c, acc))
+    y_ref[...] = acc[None]
+
+
 def packsell_spmm_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
                          *, codec_name: str, D: int, sb: int = 8,
-                         wb: int = 32, interpret: bool = True) -> jnp.ndarray:
+                         wb: int = 32, interpret: bool = True,
+                         ckpt: jnp.ndarray | None = None) -> jnp.ndarray:
     """Run the multi-RHS full-x kernel over one width bucket.
 
     ``x``: [m, nb]. Returns Y in stored-row order, shape [S, C, nb] float32;
-    the caller applies the σ-permutation scatter once (plan.py epilogue).
+    the caller applies the σ-permutation gather once (plan.py epilogue).
     ``nb`` is padded to a sublane multiple internally; real-TPU deployments
     want nb a multiple of the 128-lane VREG width for full effect.
+    ``ckpt`` as in :func:`packsell_spmv_bucket`.
     """
     S, w, C = pack.shape
     nb = x.shape[1]
@@ -215,6 +424,27 @@ def packsell_spmm_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
     nbp = xp.shape[1]
     nw = wp // wb
     grid = (Sp // sb, nw)
+
+    if ckpt is not None:
+        kernel = functools.partial(_kernel_spmm_ckpt, codec_name=codec_name,
+                                   D=D, wb=wb)
+        y = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((sb, 1, C), lambda si, wi: (si, wi, 0)),
+                pl.BlockSpec((sb, wb, C), lambda si, wi: (si, wi, 0)),
+                pl.BlockSpec((xp.shape[0], nbp), lambda si, wi: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, sb, C, nbp),
+                                   lambda si, wi: (wi, si, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((nw, Sp, C, nbp), jnp.float32),
+            compiler_params=compat.compiler_params("parallel", "parallel"),
+            interpret=interpret,
+            name=f"packsell_spmm_ckpt_{codec_name}_D{D}",
+        )(_pad_ckpt(ckpt, s_pad), pack, xp)
+        ys = y[0] if nw == 1 else jnp.sum(y, axis=0)
+        return ys[:S, :, :nb]
 
     kernel = functools.partial(_kernel_spmm, codec_name=codec_name, D=D,
                                nw=nw, wb=wb)
@@ -235,52 +465,3 @@ def packsell_spmm_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
         name=f"packsell_spmm_{codec_name}_D{D}",
     )(d0, pack, xp)
     return y[:S, :, :nb]
-
-
-def packsell_spmv_band_bucket(pack: jnp.ndarray, d0: jnp.ndarray,
-                              win: jnp.ndarray, x: jnp.ndarray, *,
-                              codec_name: str, D: int, hw: int, sb: int = 8,
-                              wb: int = 32,
-                              interpret: bool = True) -> jnp.ndarray:
-    """Band-windowed variant: ``win[si]`` (scalar-prefetched, so the x DMA
-    can be issued ahead of the pack tiles) selects a 2×hw element window of
-    x for slice-block ``si``: elements [win*hw, win*hw + 2*hw). The wrapper
-    guarantees each slice-block's column span fits within hw, so coverage is
-    exact regardless of alignment."""
-    S, w, C = pack.shape
-    s_pad = -S % sb
-    w_pad = -w % wb
-    if s_pad or w_pad:
-        pack = jnp.pad(pack, ((0, s_pad), (0, w_pad), (0, 0)))
-        d0 = jnp.pad(d0, (0, s_pad))
-    Sp, wp, _ = pack.shape
-    # pad x to a whole number of half-windows plus one slack half-window
-    x_pad = (-x.shape[0]) % hw + hw
-    xp = jnp.pad(x.astype(jnp.float32), (0, x_pad)).reshape(-1, hw)
-    nw = wp // wb
-    grid = (Sp // sb, nw)
-
-    kernel = functools.partial(_kernel_band, codec_name=codec_name, D=D,
-                               nw=nw, wb=wb, hw=hw)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((sb,), lambda si, wi, win: (si,)),
-            pl.BlockSpec((sb, wb, C), lambda si, wi, win: (si, wi, 0)),
-            pl.BlockSpec((1, hw), lambda si, wi, win: (win[si], 0)),
-            pl.BlockSpec((1, hw), lambda si, wi, win: (win[si] + 1, 0)),
-        ],
-        out_specs=pl.BlockSpec((sb, C), lambda si, wi, win: (si, 0)),
-        scratch_shapes=[pltpu.VMEM((sb, C), jnp.int32),
-                        pltpu.VMEM((sb, C), jnp.float32)],
-    )
-    y = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((Sp, C), jnp.float32),
-        compiler_params=compat.compiler_params("parallel", "arbitrary"),
-        interpret=interpret,
-        name=f"packsell_spmv_band_{codec_name}_D{D}",
-    )(win, d0, pack, xp, xp)
-    return y[:S]

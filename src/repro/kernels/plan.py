@@ -1,4 +1,5 @@
-"""SpMVPlan execution engine: cached plans, single-dispatch SpMV (DESIGN.md §2.4).
+"""SpMVPlan execution engine: cached plans, single-dispatch SpMV (DESIGN.md
+§2.4, §10).
 
 The paper's speedups live or die on SpMV being launch- and memory-lean; the
 per-call path used to re-run host-side band planning, re-trace the kernels,
@@ -8,28 +9,43 @@ module moves every host-side decision out of the hot path:
 * :func:`get_plan` builds a :class:`SpMVPlan` once per matrix — band-window
   feasibility, per-bucket tile parameters ``(sb, wb)``, half-window ``hw``,
   and kernel-variant selection — and caches it keyed on
-  ``(id(mat), sb, wb, hw, policy, interpret)``. Repeated matvecs (CG/GMRES
-  inner loops, serving ticks) hit the cache and the plan's jitted dispatch
-  function: zero host planning, zero re-tracing.
-* The epilogue is fused: stored-row bucket outputs are concatenated and ONE
-  σ-permutation step produces y — instead of one full-length scatter per
-  bucket. For concrete plans even that is a *gather* by the plan-precomputed
-  inverse permutation (XLA CPU scatters are serial; the gather is ~100×
-  cheaper). ``permuted=True`` skips it entirely, returning stored-row order
-  for solvers that permute their other operands once at setup
-  (:func:`SpMVPlan.to_stored` / :func:`SpMVPlan.from_stored` round-trip the
-  σ-permutation; see ``solvers/cg.py::jacobi_pcg_stored``).
-* For the ``'jnp'`` variant the plan also carries a **cursor cache**: the
-  column indices (prefix sums of the word deltas, clamped) are decoded once
-  at build time, so each dispatch is value-unpack + gather + reduce with no
-  runtime cumsum and no sequential word walk. Costs one extra int32 per
-  stored word (≈ pack-sized); disable with ``REPRO_PLAN_CURSOR_CACHE=0``.
+  ``(mat token, sb, wb, hw, policy, interpret, decode-cache mode)``.
+  Repeated matvecs (CG/GMRES inner loops, serving ticks) hit the cache and
+  the plan's jitted dispatch function: zero host planning, zero re-tracing.
+* The epilogue is fused: stored-row outputs get ONE σ-permutation step —
+  for concrete plans a *gather* by the plan-precomputed inverse permutation
+  (XLA CPU scatters are serial; the gather is ~100× cheaper).
+  ``permuted=True`` skips it entirely (see ``cg.jacobi_pcg_stored``).
+* For the ``'jnp'`` variant the plan's decode cache comes in three modes
+  (``REPRO_PLAN_CURSOR_CACHE`` = ``checkpoint`` | ``full`` | ``0``):
+
+  - ``checkpoint`` (default, DESIGN.md §10) — the **fused ragged stream**:
+    all width buckets are repacked once at build time into one
+    ``uint32[R, wr]`` word-stream operand (each row = one ``wr``-word run
+    of a single stored row) plus ONE int32 **cursor checkpoint per row**
+    — the column cursor before the row's first word. Each dispatch is one
+    unpack → in-register prefix-sum from the checkpoint → one clip-mode
+    gather → one segmented reduction over the per-segment ``(S, C, runs)``
+    metadata. No per-word cursor stream (the paper's β is restored: the
+    stream is the packed words themselves + 4/wr bytes of checkpoint per
+    word), no per-bucket Python loop, no ``concatenate`` epilogue over
+    bucket intermediates.
+  - ``full`` — the PR-1 cursor cache: column indices decoded at build time,
+    one extra int32 per stored word (≈ pack-sized) streamed per matvec.
+  - ``0`` — no cache; runtime scan decode (``core.packsell``).
+
+* For the Pallas variants ``checkpoint`` mode builds per-bucket **width
+  -block checkpoints** ``int32[S, nw, C]`` (cursor at the start of each
+  ``wb``-word grid block): the kernels seed the cursor from the checkpoint
+  ref instead of carrying it across width blocks in VMEM scratch, making
+  the width dimension of the grid parallel instead of a sequential carry
+  chain (``packsell_spmv.py``).
 * Variant selection is explicit and logged (:attr:`SpMVPlan.policy`):
 
   - ``'band'``  — band-windowed Pallas kernel (bounded VMEM; RCM/banded
     regime),
   - ``'full'``  — full-x-in-VMEM Pallas kernel,
-  - ``'jnp'``   — scan-parallel cumsum decode in plain XLA (the fast path on
+  - ``'jnp'``   — the fused-stream / scan-decode XLA path (the fast path on
     non-TPU backends, where the Pallas kernels only run in interpret mode).
 
   The automatic choice can be overridden per call (``force=``) or globally
@@ -55,9 +71,13 @@ from . import packsell_spmv as _pk
 _DEF_HW = 4096              # default half-window (elements, multiple of 128)
 _FULL_X_LIMIT = int(os.environ.get("REPRO_FULL_X_LIMIT", 2_000_000))
 _BAND_MIN_M = int(os.environ.get("REPRO_BAND_MIN_M", 65_536))
-_CURSOR_CACHE = os.environ.get("REPRO_PLAN_CURSOR_CACHE", "1") != "0"
 
 _POLICIES = ("auto", "full", "band", "jnp")
+_CACHE_MODES = ("checkpoint", "full", "0")
+
+#: candidate checkpoint row widths (words between checkpoints), largest
+#: first. Power-of-two so pow2 bucket widths >= wr need no run padding.
+_CKPT_WIDTHS = (128, 64, 32, 16, 8)
 
 
 def _env_policy() -> str:
@@ -65,6 +85,18 @@ def _env_policy() -> str:
     if pol not in _POLICIES:
         raise ValueError(f"REPRO_SPMV_POLICY={pol!r} not in {_POLICIES}")
     return pol
+
+
+def _env_cache_mode() -> str:
+    raw = os.environ.get("REPRO_PLAN_CURSOR_CACHE", "checkpoint").lower()
+    if raw in ("1", "checkpoint"):
+        return "checkpoint"          # "1" kept for PR-1 compatibility
+    if raw == "full":
+        return "full"
+    if raw in ("0", "off", "none"):
+        return "0"
+    raise ValueError(
+        f"REPRO_PLAN_CURSOR_CACHE={raw!r} not in {_CACHE_MODES}")
 
 
 def _interpret_default() -> bool:
@@ -119,16 +151,36 @@ def band_plan(mat: PackSELLMatrix, sb: int, hw: int):
 
 
 # ---------------------------------------------------------------------------
-# Cursor-cached decode (jnp variant, concrete plans)
+# Host-side delta prefix sums (checkpoint + cursor-cache builders)
+# ---------------------------------------------------------------------------
+
+
+def _bucket_cursor_prefix(pack, d0, codec, D):
+    """Exact int64 cursor BEFORE each word of one bucket: ``cum0[s, j, c]``
+    = column cursor of stored row (s, c) before consuming word j
+    (``cum0[:, 0, :]`` = d0). Shape [S, w+1, C]; entry ``w`` is the final
+    cursor."""
+    words = np.asarray(pack)
+    S, w, C = words.shape
+    _, d, _ = cd.unpack_words_np(words.reshape(-1), codec, D)
+    cum = np.cumsum(d.reshape(S, w, C).astype(np.int64), axis=1)
+    zero = np.zeros((S, 1, C), np.int64)
+    return np.asarray(d0)[:, None, None].astype(np.int64) + \
+        np.concatenate([zero, cum], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Cursor-cached decode (jnp variant, mode='full' — the PR-1 layout)
 # ---------------------------------------------------------------------------
 
 
 def _cursor_spmv(pack, cols, xc, codec, D):
-    """One bucket via the plan's cursor cache: value unpack + one gather +
-    one reduction — no runtime cumsum, no sequential word walk."""
+    """One bucket via the full cursor cache: value unpack + one gather +
+    one reduction — no runtime cumsum, but one int32 streamed per word."""
     S, w, C = pack.shape
     v, _ = cd.unpack_words_jnp(pack, codec, D)
-    xv = jnp.take(xc, cols.reshape(-1), axis=0).reshape(S, w, C)
+    xv = jnp.take(xc, cols.reshape(-1), axis=0,
+                  mode="clip").reshape(S, w, C)
     return jnp.sum(v.astype(jnp.float32) * xv, axis=1)
 
 
@@ -143,7 +195,8 @@ def _cursor_spmm(pack, cols, xc, codec, D):
     for j0 in range(0, w, chunk):
         vc = v[:, j0:j0 + chunk, :].astype(jnp.float32)
         cc = cols[:, j0:j0 + chunk, :]
-        xv = jnp.take(xc, cc.reshape(-1), axis=0).reshape(cc.shape + (nb,))
+        xv = jnp.take(xc, cc.reshape(-1), axis=0,
+                      mode="clip").reshape(cc.shape + (nb,))
         acc = acc + jnp.sum(vc[..., None] * xv, axis=1)
     return acc
 
@@ -152,17 +205,418 @@ def _build_cursor_cache(mat: PackSELLMatrix):
     """Decode every bucket's column cursors once (host-side numpy): the
     prefix-sum of word deltas, clamped to [0, m-1] exactly as the runtime
     decode would."""
-    codec = mat.codec
     mlim = max(mat.m - 1, 0)
     cols = []
     for pack, d0 in zip(mat.packs, mat.d0s):
+        cum0 = _bucket_cursor_prefix(pack, d0, mat.codec, mat.D)
+        cols.append(jnp.asarray(
+            np.minimum(cum0[:, 1:, :], mlim).astype(np.int32)))
+    return tuple(cols)
+
+
+# ---------------------------------------------------------------------------
+# Fused ragged stream + compact cursor checkpoints (mode='checkpoint')
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSegment:
+    """One width bucket's span inside the fused stream, laid out
+    LEVEL-major over run-count-sorted slices.
+
+    The plan re-orders the bucket's slices by per-slice *content* width
+    (descending run count, stable) and trims every all-padding trailing
+    run, so level k = run k of the first ``levels[k]`` sorted slices — a
+    shrinking contiguous prefix. The segment's reduction is an unrolled
+    chain of zero-padded aligned adds (no reshape, no reduce HLO, no
+    scatter), and — because bucket padding concentrates in trailing runs
+    of the narrower slices — the stream often ends up SMALLER than the
+    bucketed packs. The slice re-order is baked into the plan's
+    ``outrow_cat``/inverse permutation, so outputs land exactly where the
+    epilogue expects them."""
+
+    g0: int
+    S: int
+    C: int
+    levels: tuple            # level k covers sorted slices [0, levels[k])
+
+    @property
+    def groups(self) -> int:
+        return int(sum(self.levels))
+
+    @property
+    def stored(self) -> int:
+        return self.S * self.C
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedLayout:
+    """Static shape of the fused ragged word stream (device arrays:
+    ``words uint32[groups, wr, C]`` + ``ckpt int32[groups, C]``).
+
+    The lane axis C stays minor — the same VREG-friendly orientation as
+    the bucketed packs, so every elementwise op and the run-axis
+    accumulation vectorize across lanes; a group is a pure reshape of
+    ``pack[s, k*wr:(k+1)*wr, :]``, so building the stream is a width-pad
+    + reshape, never a transpose.
+
+    ``encoding`` names how each 32-bit stream word carries its
+    (value, run-local column offset) pair — the offsets are the word
+    deltas **prefix-summed at build time and re-based to the group's
+    checkpoint**, so the runtime decode is one add per word, no scan:
+
+    * ``'f16'``     — fp16 payload in the top 16 bits, offset in the low
+      16 (requires every group's column span < 2^16).
+    * ``'top16'``   — top-16-of-fp32 payload (bf16; E8MY with V <= 16),
+      offset in the low 16.
+    * ``'fixed16'`` — fixed-point payload in the top 16 bits with the
+      static dequant ``scale``, offset in the low 16.
+    * ``'words'``   — canonical pack words with the delta field rewritten
+      to the re-based offset (any codec; offsets must fit the D-bit
+      field of flag=1 words).
+    """
+
+    wr: int                  # words per group per lane == ckpt granularity
+    groups: int
+    C: int
+    words_exact: int         # bucketed words before run padding
+    segments: tuple          # of FusedSegment, in bucket order
+    encoding: str = "words"
+    scale: float = 0.0       # fixed16 dequant scale
+
+    @property
+    def pad_words(self) -> int:
+        return self.groups * self.wr * self.C - self.words_exact
+
+    @property
+    def checkpoint_bytes(self) -> int:
+        return 4 * self.groups * self.C
+
+    @property
+    def stream_bytes(self) -> int:
+        return 4 * self.groups * self.wr * self.C
+
+
+#: cost-model constants for the checkpoint-width choice: a streamed word
+#: costs ~3 passes (decode + x-gather + fma), a level add re-reads +
+#: rewrites the [S_k, C] accumulator (~3 passes per element), and every
+#: level is one more XLA op on the dispatch path (~tens of µs ≈ 40k
+#: element-passes on the CPU backend). Fit against the small benchmark
+#: suite; only the argmin matters, not the absolute scale.
+_STREAM_PASSES = 3
+_LEVEL_ADD_PASSES = 3
+_LEVEL_OP_ELEMS = 40_000
+
+
+def _pick_ckpt_width(widths, total: int) -> int:
+    """Checkpoint width minimizing the modeled per-matvec cost, subject
+    to the decode cache shrinking >= ``min(_CKPT_WIDTHS)``× vs the full
+    cursor cache. ``widths`` is the list of (per-slice content widths, C)
+    pairs per bucket; after all-pad-run trimming the stream holds
+    ``ceil(width/wr)*wr`` words per slice. Small ``wr`` trims more
+    padding but deepens the level chains of wide buckets (accumulator
+    re-streaming + one op per level), so the model charges both; ties
+    prefer the larger width (fewer checkpoints)."""
+    floor = _CKPT_WIDTHS[-1]
+    best = None                      # (ineligible, cost, -wr)
+    for wr in _CKPT_WIDTHS:
+        streamed = groups = levels = slices = 0
+        for w, C in widths:
+            runs = -(-np.maximum(w, 1) // wr)
+            streamed += int(runs.sum()) * wr * C
+            groups += int(runs.sum())
+            levels += int(runs.max(initial=1)) - 1
+            slices += len(w)
+            last_C = C
+        cbytes = groups * (last_C if widths else 1)
+        shrink = total / cbytes if cbytes else float("inf")
+        cost = _STREAM_PASSES * streamed \
+            + _LEVEL_ADD_PASSES * (groups - slices) * (last_C if widths
+                                                       else 1) \
+            + _LEVEL_OP_ELEMS * levels
+        key = (shrink < floor, cost, -wr)
+        if best is None or key < best[0]:
+            best = (key, wr)
+    return best[1]
+
+
+def _split16_encoding(mat: PackSELLMatrix):
+    """The 16/16 split encoding for this matrix's codec, or None.
+
+    Valid when the word's value payload lives entirely in the top 16 bits
+    (fp16/bf16 embed at any D; E8MY and fixed-point once V = 31-D <= 16),
+    so the plan stream can carry (payload16 | offset16) and the decode is
+    two fixed shifts — no flag arithmetic, no variable shifts."""
+    name, D = mat.codec_name, mat.D
+    if name == "fp16":
+        return "f16", 0.0
+    if name == "bf16":
+        return "top16", 0.0
+    if name == "e8m" and cd.vbits_for(D) <= 16:
+        return "top16", 0.0
+    if name.startswith("fixed") and cd.vbits_for(D) <= 16:
+        frac = int(name[len("fixed"):])
+        return "fixed16", float(2.0 ** -(frac + D - 15))
+    return None
+
+
+def _build_fused_stream(mat: PackSELLMatrix, *, trim: bool = True):
+    """Repack the bucketed words into the fused ragged-group layout, once,
+    host-side (DESIGN.md §10.1). Returns ``((words3d, ckpt), layout,
+    orders)`` — ``orders`` is the per-bucket slice permutation the caller
+    must bake into ``outrow_cat`` — or ``(None, None, None)`` when no
+    encoding fits (a group's column span overflows every offset field —
+    the caller falls back to the full cursor cache).
+
+    Each bucket's slices are sorted by content width (descending run
+    count, stable), their word runs padded to a multiple of ``wr`` with
+    ``PAD_WORD`` (flag=0, delta=0: contributes nothing) and carved into
+    ``wr``-word groups laid out LEVEL-major: level k = run k of the
+    sorted slices that still have one — all-padding trailing runs are
+    trimmed away, which is where SELL bucket padding lives, so the
+    stream is usually *smaller* than the bucketed packs. ``ckpt[g, c]``
+    is the exact column cursor of stored row (slice-of(g), c) before the
+    group's first word, and every word's delta is replaced by its
+    **build-time prefix sum re-based to that checkpoint**, so the
+    runtime column decode is ONE add per word — no scan, no carry, no
+    per-word cursor stream.
+
+    ``trim=False`` keeps the identity slice order and the full
+    shape-derived run count per slice (every level = all S slices): the
+    layout then depends only on the bucket SHAPES, which SPMD consumers
+    (the distributed stacker) need uniform across shards.
+    """
+    C, D = mat.C, mat.D
+    dmask = np.uint32(cd.delta_mask(D))
+    total = sum(int(np.prod(p.shape)) for p in mat.packs)
+    used_w = []
+    for pack in mat.packs:
         words = np.asarray(pack)
         S, w, C = words.shape
-        _, d, _ = cd.unpack_words_np(words.reshape(-1), codec, mat.D)
-        c = np.asarray(d0)[:, None, None].astype(np.int64) + \
-            np.cumsum(d.reshape(S, w, C).astype(np.int64), axis=1)
-        cols.append(jnp.asarray(np.minimum(c, mlim).astype(np.int32)))
-    return tuple(cols)
+        if trim:
+            nz = (words != pk.PAD_WORD).any(axis=2)        # [S, w]
+            used = np.where(nz.any(axis=1),
+                            w - np.argmax(nz[:, ::-1], axis=1), 1)
+        else:
+            used = np.full(S, w, np.int64)
+        used_w.append((used.astype(np.int64), C))
+    wr = _pick_ckpt_width(used_w, total)
+
+    per_bucket, segs, orders = [], [], []
+    g0 = 0
+    locals_max = 0
+    flag1_max = 0
+    for (used, _), pack, d0 in zip(used_w, mat.packs, mat.d0s):
+        words = np.asarray(pack)
+        S, w, C = words.shape
+        runs_s = -(-np.maximum(used, 1) // wr)             # >= 1 per slice
+        order = np.argsort(-runs_s, kind="stable").astype(np.int64)
+        runs_sorted = runs_s[order]
+        maxr = int(runs_sorted[0]) if S else 1
+        levels = tuple(int((runs_sorted > k).sum()) for k in range(maxr))
+        wpad = maxr * wr
+        cum0 = _bucket_cursor_prefix(pack, d0, mat.codec, D)[order]
+        wp = np.full((S, wpad, C), pk.PAD_WORD, np.uint32)
+        wk = min(w, wpad)           # trimming can shrink below w
+        wp[:, :wk, :] = words[order][:, :wk, :]
+        ck = cum0[:, ::wr, :][:, :maxr, :]                 # [S, maxr, C]
+        # inclusive cursor per word, padding words frozen at the last real
+        # cursor, re-based to the group checkpoint
+        cum = np.concatenate(
+            [cum0[:, 1:, :],
+             np.broadcast_to(cum0[:, -1:, :],
+                             (S, max(wpad - w, 0), C))], axis=1)[:, :wpad]
+        local = (cum.reshape(S, maxr, wr, C)
+                 - ck[:, :, None, :]).reshape(S, wpad, C)
+        flag = wp & np.uint32(1)
+        # only the KEPT groups constrain the encoding
+        keep = np.zeros((S, maxr), bool)
+        for k, Sk in enumerate(levels):
+            keep[:Sk, k] = True
+        keepw = np.repeat(keep, wr, axis=1)[:, :, None]
+        lk = np.where(keepw, local, 0)
+        locals_max = max(locals_max, int(lk.max(initial=0)))
+        f1 = lk[(flag == 1) & keepw]
+        flag1_max = max(flag1_max, int(f1.max(initial=0)))
+        per_bucket.append((wp, flag, local, ck, S, maxr, levels))
+        segs.append(FusedSegment(g0=g0, S=S, C=C, levels=levels))
+        orders.append(order)
+        g0 += int(sum(levels))
+
+    split = _split16_encoding(mat)
+    if split is not None and locals_max < (1 << 16):
+        encoding, scale = split
+    elif flag1_max < (1 << D) and locals_max < (1 << 31):
+        encoding, scale = "words", 0.0
+    else:
+        return None, None, None     # span overflow: no compact encoding
+
+    blk_w, blk_c = [], []
+    for wp, flag, local, ck, S, maxr, levels in per_bucket:
+        lu = np.minimum(local, (1 << 16) - 1 if encoding != "words"
+                        else (1 << 31) - 1).astype(np.uint32)
+        if encoding == "words":
+            payload = wp & ~dmask
+            w1 = payload | (lu << np.uint32(1)) | np.uint32(1)
+            w0 = lu << np.uint32(1)
+            nw = np.where(flag == 1, w1, w0)
+        else:
+            # value payload is top-16-aligned: keep it, splice the offset
+            payload16 = np.where(flag == 1, wp & ~dmask, np.uint32(0))
+            nw = (payload16 & np.uint32(0xFFFF0000)) | lu
+        C_b = nw.shape[-1]
+        nw4 = nw.reshape(S, maxr, wr, C_b)
+        ck3 = ck
+        for k, Sk in enumerate(levels):
+            blk_w.append(nw4[:Sk, k])
+            blk_c.append(ck3[:Sk, k])
+    words3d = (np.concatenate(blk_w) if blk_w
+               else np.zeros((0, wr, C), np.uint32))
+    ckpt = (np.concatenate(blk_c) if blk_c
+            else np.zeros((0, C), np.int64))
+    layout = FusedLayout(
+        wr=wr, groups=g0, C=C, words_exact=total,
+        segments=tuple(segs), encoding=encoding, scale=scale)
+    return ((jnp.asarray(words3d), jnp.asarray(ckpt.astype(np.int32))),
+            layout, orders)
+
+
+def _fused_decode(w, codec, D, layout: FusedLayout):
+    """(value f32, run-local column offset i32) for a stream slice."""
+    enc = layout.encoding
+    if enc == "f16":
+        v16 = (w >> np.uint32(16)).astype(jnp.uint16)
+        v = jax.lax.bitcast_convert_type(v16, jnp.float16)
+        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
+    elif enc == "top16":
+        v = jax.lax.bitcast_convert_type(w & np.uint32(0xFFFF0000),
+                                         jnp.float32)
+        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
+    elif enc == "fixed16":
+        v = (jax.lax.bitcast_convert_type(w, jnp.int32)
+             >> np.int32(16)).astype(jnp.float32) * np.float32(layout.scale)
+        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
+    else:                           # 'words'
+        v, local = cd.unpack_words_jnp(w, codec, D)
+        local = local.astype(jnp.int32)
+    return v.astype(jnp.float32), local
+
+
+def _fused_tail2(part, layout: FusedLayout):
+    """Segmented reduction over group partials: [groups, C(, nb)] →
+    [total_slices, C(, nb)] in sorted-slice-major stored order. The
+    level-major layout makes each segment's reduction an unrolled chain
+    of zero-padded aligned adds over shrinking slice prefixes (static
+    slices; no reshape, no reduce HLO, no scatter) — and when every
+    segment is single-level the partials ARE the result, copy-free."""
+    if not layout.segments or all(len(seg.levels) == 1
+                                  for seg in layout.segments):
+        return part
+    pad_tail = ((0, 0),) * (part.ndim - 1)
+    outs = []
+    for seg in layout.segments:
+        t = part[seg.g0:seg.g0 + seg.levels[0]]
+        off = seg.levels[0]
+        for Sk in seg.levels[1:]:
+            lk = part[seg.g0 + off:seg.g0 + off + Sk]
+            if Sk < seg.S:
+                lk = jnp.pad(lk, ((0, seg.S - Sk),) + pad_tail)
+            t = t + lk
+            off += Sk
+        outs.append(t)
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+
+def _fused_tail(part, layout: FusedLayout):
+    """[groups, C(, nb)] → flat [total_stored(, nb)] in ``outrow_cat``
+    order (the ``permuted=True`` contract). The flattening reshape is a
+    real XLA copy on CPU, so the un-permuted epilogue avoids this path
+    and gathers 2-D (:func:`_fused_unpermute2`)."""
+    tail = tuple(part.shape[2:])
+    if not layout.segments:
+        return jnp.zeros((0,) + tail, part.dtype)
+    return _fused_tail2(part, layout).reshape((-1,) + tail)
+
+
+def _fused_unpermute2(t2, inv2):
+    """y[r] = t2[slice(r), lane(r)] — the σ-unpermutation applied
+    directly to the 2-D slice-major tail, skipping the flatten copy AND
+    the separate 1-D gather (one gather, unique in-bounds indices)."""
+    return t2.at[inv2[:, 0], inv2[:, 1]].get(mode="clip",
+                                             unique_indices=True)
+
+
+def _fused_part_spmv(words3d, ckpt, xc, codec, D, layout: FusedLayout):
+    """The fused single-pass SpMV body (group partials [G, C]): one
+    decode over the whole stream, one checkpoint add, one clip-mode
+    gather, an unrolled accumulate over the group-width axis (an explicit
+    add chain — XLA fuses it into one pass where its reduce HLO would
+    not)."""
+    G, wr, C = words3d.shape
+    v, local = _fused_decode(words3d, codec, D, layout)
+    cols = ckpt[:, None, :] + local
+    xv = jnp.take(xc, cols.reshape(-1), axis=0,
+                  mode="clip").reshape(G, wr, C)
+    p = v * xv
+    acc = p[:, 0, :]
+    for j in range(1, wr):
+        acc = acc + p[:, j, :]
+    return acc
+
+
+def _fused_part_spmm(words3d, ckpt, xc, codec, D, layout: FusedLayout):
+    """Multi-RHS fused pass (group partials [G, C, nb]): per word
+    position, decode + gather + FMA on [G, C, nb] slices (bounds the
+    gather intermediate the way the cursor path's width chunking did,
+    with the same unrolled accumulation)."""
+    G, wr, C = words3d.shape
+    nb = xc.shape[1]
+    acc = None
+    for j in range(wr):
+        v, local = _fused_decode(words3d[:, j, :], codec, D, layout)
+        cols = ckpt + local
+        xv = jnp.take(xc, cols.reshape(-1), axis=0,
+                      mode="clip").reshape(G, C, nb)
+        t = v[..., None] * xv
+        acc = t if acc is None else acc + t
+    if acc is None:
+        acc = jnp.zeros((G, C, nb), jnp.float32)
+    return acc
+
+
+def _build_block_checkpoints(mat: PackSELLMatrix, tiles):
+    """Per-bucket ``int32[S, nw, C]`` width-block checkpoints for the
+    Pallas kernels: the cursor before word ``wi * wb`` of each stored row.
+    Replaces the kernels' d0-seeded sequential VMEM cursor carry
+    (``packsell_spmv.py``); recomputed on :meth:`SpMVPlan.retile` because
+    the granularity is the width-block size ``wb``."""
+    out = []
+    for (sb, wb), pack, d0 in zip(tiles, mat.packs, mat.d0s):
+        words = np.asarray(pack)
+        S, w, C = words.shape
+        nw = -(-w // wb)
+        cum0 = _bucket_cursor_prefix(pack, d0, mat.codec, mat.D)
+        ck = cum0[:, ::wb, :][:, :nw, :]
+        out.append(jnp.asarray(ck.astype(np.int32)))
+    return tuple(out)
+
+
+def stored_permute(v, outrow_cat, n: int):
+    """Original-row-order → stored-row order (σ-padding slots become 0).
+    Operand-explicit so jitted callers (the fused solver step in
+    ``solvers/cg.py``) can pass the plan buffers as arguments instead of
+    closure constants."""
+    val = jnp.take(v, outrow_cat, axis=0, mode="clip")
+    mask = (outrow_cat < n).reshape((-1,) + (1,) * (v.ndim - 1))
+    return jnp.where(mask, val, 0).astype(v.dtype)
+
+
+def stored_unpermute(t, inv_cat):
+    """Stored-row order → original-row order: the σ-permutation applied
+    as a gather by the precomputed inverse map (equals the scatter
+    bit-for-bit: each original row has exactly one stored slot, so the
+    indices are unique and in-bounds)."""
+    return jnp.take(t, inv_cat, axis=0, mode="clip", unique_indices=True)
 
 
 def _build_inverse_perm(mat: PackSELLMatrix, outrow_cat: jnp.ndarray):
@@ -184,9 +638,9 @@ def _build_inverse_perm(mat: PackSELLMatrix, outrow_cat: jnp.ndarray):
 class SpMVPlan:
     """Everything host-side the hot path would otherwise recompute.
 
-    Static decisions (variant, tiles, windows, the concatenated σ-scatter
-    map) are fixed at build time; :meth:`spmv` / :meth:`spmm` dispatch
-    straight into a cached jitted executable.
+    Static decisions (variant, tiles, windows, decode-cache layout, the
+    concatenated σ-scatter map) are fixed at build time; :meth:`spmv` /
+    :meth:`spmm` dispatch straight into a cached jitted executable.
     """
 
     variant: str                      # 'band' | 'full' | 'jnp'
@@ -200,18 +654,25 @@ class SpMVPlan:
     m: int
     total_stored: int
     inv_cat: Optional[jnp.ndarray] = None   # int32 [n] inverse σ-permutation
+    inv2_cat: Optional[jnp.ndarray] = None  # int32 [n, 2] (slice, lane) form
     cols: Optional[tuple] = None      # per-bucket int32 [S, w, C] cursor cache
+    cache_mode: str = "0"             # 'checkpoint' | 'full' | '0'
+    fused: Optional[tuple] = None     # (words2d uint32[R, wr], ckpt int32[R])
+    fused_layout: Optional[FusedLayout] = None
+    kckpts: Optional[tuple] = None    # per-bucket int32 [S, nw, C] (Pallas)
+    total_words: int = 0              # bucketed words (decode-cache pricing)
     ephemeral: bool = False           # built under tracing: never cached/jitted
     _matref: Optional[weakref.ref] = None
     _fns: dict = dataclasses.field(default_factory=dict)
+    _view: Optional[PackSELLMatrix] = None
 
     # -- σ-permutation helpers (stored-row order <-> original order) -------
     def _unpermute(self, t, inv_cat, outrow_cat):
         if inv_cat is not None:
-            # the σ-permutation applied as a gather by the precomputed
-            # inverse map (equals the scatter bit-for-bit: each original row
-            # has exactly one stored slot)
-            return jnp.take(t, inv_cat, axis=0)
+            return stored_unpermute(t, inv_cat)
+        # tracing fallback: ONE drop-mode scatter over the already-fused
+        # stored vector (never per bucket); sentinel slots (>= n) drop, and
+        # the surviving indices are unique by construction
         shape = (self.n,) + tuple(t.shape[1:])
         return jnp.zeros(shape, t.dtype).at[outrow_cat].set(t, mode="drop")
 
@@ -224,35 +685,93 @@ class SpMVPlan:
         """Gather an original-row-order vector into stored-row order;
         σ-padding slots become 0 (they stay 0 through SpMV, so stored-space
         dot products equal original-space ones)."""
-        safe = jnp.minimum(self.outrow_cat, max(self.n - 1, 0))
-        val = jnp.take(v, safe, axis=0)
-        mask = (self.outrow_cat < self.n)
-        mask = mask.reshape((-1,) + (1,) * (v.ndim - 1))
-        return jnp.where(mask, val, 0).astype(v.dtype)
+        return stored_permute(v, self.outrow_cat, self.n)
 
     # -- execution ---------------------------------------------------------
     def _device_operands(self) -> dict:
         """Plan-held device buffers, passed as jit *arguments* so XLA never
         constant-folds them into (or duplicates them inside) the
-        executable."""
-        return {"cols": self.cols, "inv": self.inv_cat,
-                "outrow": self.outrow_cat}
+        executable. Cached: the dict is rebuilt only after retile()."""
+        dev = self._fns.get("_dev")
+        if dev is None:
+            dev = {"cols": self.cols, "inv": self.inv_cat,
+                   "inv2": self.inv2_cat, "outrow": self.outrow_cat,
+                   "fused": self.fused, "kckpt": self.kckpts}
+            self._fns["_dev"] = dev
+        return dev
 
     def _execute(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
                  permuted: bool) -> jnp.ndarray:
         xc = x.astype(jnp.float32)
+        fused = dev.get("fused")
+        if fused is not None and self.variant == "jnp":
+            part = _fused_part_spmv(fused[0], fused[1], xc, mat.codec,
+                                    mat.D, self.fused_layout)
+            return self._fused_epilogue(part, dev, permuted)
+        t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=False)
+        if permuted:
+            return t_cat
+        return self._unpermute(t_cat, dev.get("inv"), dev["outrow"])
+
+    def _execute_mm(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
+                    permuted: bool) -> jnp.ndarray:
+        xc = x.astype(jnp.float32)
+        fused = dev.get("fused")
+        if fused is not None and self.variant == "jnp":
+            part = _fused_part_spmm(fused[0], fused[1], xc, mat.codec,
+                                    mat.D, self.fused_layout)
+            return self._fused_epilogue(part, dev, permuted)
+        t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=True)
+        if permuted:
+            return t_cat
+        return self._unpermute(t_cat, dev.get("inv"), dev["outrow"])
+
+    def _fused_epilogue(self, part, dev: dict, permuted: bool):
+        """Reduce group partials to the requested order. Un-permuted
+        output gathers 2-D straight off the slice-major tail
+        (:func:`_fused_unpermute2`): no flatten copy, one gather."""
+        if permuted:
+            return _fused_tail(part, self.fused_layout)
+        inv2 = dev.get("inv2")
+        if inv2 is not None:
+            return _fused_unpermute2(_fused_tail2(part, self.fused_layout),
+                                     inv2)
+        return self._unpermute(_fused_tail(part, self.fused_layout),
+                               dev.get("inv"), dev["outrow"])
+
+    def _bucket_parts(self, mat, dev, x, xc, *, multi_rhs: bool):
+        """The per-bucket execution bodies (Pallas variants, the 'full'
+        cursor cache, and the tracing scan fallback)."""
+        kck = dev.get("kckpt")
         parts = []
         for b, (pack, d0) in enumerate(zip(mat.packs, mat.d0s)):
             sb, wb = self.tiles[b]
+            ck = None if kck is None else kck[b]
+            if multi_rhs:
+                if self.variant in ("band", "full"):
+                    # multi-RHS ships the full-x kernel only; a banded plan
+                    # falls back to it (x·nb residency checked in spmm()).
+                    t = _pk.packsell_spmm_bucket(
+                        pack, d0, x, codec_name=mat.codec_name, D=mat.D,
+                        sb=sb, wb=wb, interpret=self.interpret, ckpt=ck)
+                elif dev["cols"] is not None:
+                    t = _cursor_spmm(pack, dev["cols"][b], xc, mat.codec,
+                                     mat.D)
+                else:
+                    t = pk._bucket_spmm_scan(
+                        pack, d0, xc, mat.codec, mat.D,
+                        np.int32(max(mat.m - 1, 0)), jnp.float32)
+                parts.append(t.reshape(-1, xc.shape[1]))
+                continue
             if self.variant == "band":
                 t = _pk.packsell_spmv_band_bucket(
                     pack, d0, jnp.asarray(self.wins[b]), x,
                     codec_name=mat.codec_name, D=mat.D, hw=self.hw,
-                    sb=sb, wb=wb, interpret=self.interpret)
+                    sb=sb, wb=wb, interpret=self.interpret, ckpt=ck)
             elif self.variant == "full":
                 t = _pk.packsell_spmv_bucket(
                     pack, d0, x, codec_name=mat.codec_name, D=mat.D,
-                    sb=sb, wb=wb, interpret=self.interpret)
+                    sb=sb, wb=wb, interpret=self.interpret, ckpt=ck)
             elif dev["cols"] is not None:
                 t = _cursor_spmv(pack, dev["cols"][b], xc, mat.codec, mat.D)
             else:
@@ -261,40 +780,9 @@ class SpMVPlan:
                     np.int32(max(mat.m - 1, 0)), jnp.float32)
             parts.append(t.reshape(-1))
         if not parts:
-            t_cat = jnp.zeros((0,), jnp.float32)
-        else:
-            t_cat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-        if permuted:
-            return t_cat
-        return self._unpermute(t_cat, dev["inv"], dev["outrow"])
-
-    def _execute_mm(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
-                    permuted: bool) -> jnp.ndarray:
-        nb = x.shape[1]
-        xc = x.astype(jnp.float32)
-        parts = []
-        for b, (pack, d0) in enumerate(zip(mat.packs, mat.d0s)):
-            sb, wb = self.tiles[b]
-            if self.variant in ("band", "full"):
-                # multi-RHS currently ships the full-x kernel only; a banded
-                # plan falls back to it (x·nb residency checked in spmm()).
-                t = _pk.packsell_spmm_bucket(
-                    pack, d0, x, codec_name=mat.codec_name, D=mat.D,
-                    sb=sb, wb=wb, interpret=self.interpret)
-            elif dev["cols"] is not None:
-                t = _cursor_spmm(pack, dev["cols"][b], xc, mat.codec, mat.D)
-            else:
-                t = pk._bucket_spmm_scan(
-                    pack, d0, xc, mat.codec, mat.D,
-                    np.int32(max(mat.m - 1, 0)), jnp.float32)
-            parts.append(t.reshape(-1, nb))
-        if not parts:
-            t_cat = jnp.zeros((0, nb), jnp.float32)
-        else:
-            t_cat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-        if permuted:
-            return t_cat
-        return self._unpermute(t_cat, dev["inv"], dev["outrow"])
+            shape = (0, xc.shape[1]) if multi_rhs else (0,)
+            return jnp.zeros(shape, jnp.float32)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
 
     def _dispatch(self, kind: str):
         fn = self._fns.get(kind)
@@ -309,16 +797,42 @@ class SpMVPlan:
                      multi_rhs: bool = False) -> jnp.ndarray:
         """Run the plan's execution body with externally supplied device
         operands (``{'cols': tuple|None, 'inv': array|None, 'outrow':
-        array}``) inside an existing trace — the shard_map reuse hook.
+        array, 'fused': (words2d, ckpt)|None, 'kckpt': tuple|None}``;
+        missing keys are treated as None) inside an existing trace — the
+        shard_map reuse hook.
 
-        The distributed layer builds one concrete plan per shard, stacks the
-        per-shard operands along the mesh axis, and calls this inside the
-        mapped body with each shard's slice (``DistSpMVPlan``): the plan's
-        static decisions (variant, tiles, cursor-cache layout) are reused
-        across shards while the arrays flow through shard_map in_specs.
+        The distributed layer builds one concrete plan per shard, stacks
+        the per-shard operands along the mesh axis, and calls this inside
+        the mapped body with each shard's slice (``DistSpMVPlan``): the
+        plan's static decisions (variant, tiles, fused-stream layout) are
+        reused across shards while the arrays flow through shard_map
+        in_specs.
         """
         impl = self._execute_mm if multi_rhs else self._execute
         return impl(mat, dev, x, permuted)
+
+    def _exec_mat(self, mat: PackSELLMatrix) -> PackSELLMatrix:
+        """What the jitted dispatch receives as the matrix argument. The
+        fused body reads only the plan's stream operands plus the static
+        codec metadata, so a placeholder-leaf view keeps the per-call
+        pytree flattening down to a handful of arrays (the distributed
+        layer's `_member_view` trick)."""
+        if self.fused is None or self.variant != "jnp":
+            return mat
+        if self._view is None:
+            # numpy placeholders: building the view must never capture a
+            # live trace (spmv can be first called inside a solver trace)
+            z1 = np.zeros((1,), np.int32)
+            self._view = PackSELLMatrix(
+                packs=(np.zeros((1, 1, 1), np.uint32),), d0s=(z1,),
+                outrows=(z1,), maxcols=(z1,),
+                perm=np.zeros((1,), np.uint8),
+                n=mat.n, m=mat.m, C=mat.C, sigma=mat.sigma, D=mat.D,
+                codec_name=mat.codec_name, k_left=mat.k_left, nnz=mat.nnz,
+                n_dummy=mat.n_dummy,
+                words_sell_padded=mat.words_sell_padded,
+                words_bucketed=mat.words_bucketed)
+        return self._view
 
     def spmv(self, mat: PackSELLMatrix, x: jnp.ndarray, *,
              permuted: bool = False) -> jnp.ndarray:
@@ -326,7 +840,8 @@ class SpMVPlan:
         stored-row order, skipping the σ-permutation epilogue entirely."""
         if self.ephemeral or _is_traced(mat):
             return self._execute(mat, self._device_operands(), x, permuted)
-        return self._dispatch("spmv")(mat, self._device_operands(), x,
+        return self._dispatch("spmv")(self._exec_mat(mat),
+                                      self._device_operands(), x,
                                       permuted)
 
     def spmm(self, mat: PackSELLMatrix, x: jnp.ndarray, *,
@@ -342,7 +857,8 @@ class SpMVPlan:
         if self.ephemeral or _is_traced(mat):
             return self._execute_mm(mat, self._device_operands(), x,
                                     permuted)
-        return self._dispatch("spmm")(mat, self._device_operands(), x,
+        return self._dispatch("spmm")(self._exec_mat(mat),
+                                      self._device_operands(), x,
                                       permuted)
 
     def as_composite(self, mat: PackSELLMatrix):
@@ -360,18 +876,51 @@ class SpMVPlan:
                 "tiles": [list(t) for t in self.tiles], "hw": self.hw,
                 "interpret": self.interpret, "n": self.n, "m": self.m,
                 "total_stored": self.total_stored,
-                "cursor_cache": self.cols is not None}
+                "cache_mode": self.cache_mode,
+                "cursor_cache": self.cols is not None,
+                "fused": self.fused is not None,
+                "ckpt_width": (None if self.fused_layout is None
+                               else self.fused_layout.wr)}
+
+    def decode_cache_stats(self) -> dict:
+        """Decode-cache device memory, priced against the PR-1 full cursor
+        cache (4 bytes per bucketed word) — the accounting behind the
+        BENCH_spmv.json footprint trajectory (DESIGN.md §10.3).
+
+        ``decode_cache_bytes`` is the per-matvec *auxiliary* decode stream
+        (cursors or checkpoints); ``fused_stream_bytes`` is the repacked
+        word stream, which REPLACES the bucketed packs on the hot path
+        (same words ± run padding, streamed instead of them)."""
+        full = 4 * self.total_words
+        if self.cache_mode == "checkpoint" and self.fused_layout is not None:
+            cache = self.fused_layout.checkpoint_bytes
+            stream = self.fused_layout.stream_bytes
+            pad = self.fused_layout.pad_words
+        elif self.cache_mode == "checkpoint" and self.kckpts is not None:
+            cache = sum(4 * int(np.prod(c.shape)) for c in self.kckpts)
+            stream, pad = 0, 0
+        elif self.cols is not None:
+            cache, stream, pad = full, 0, 0
+        else:
+            cache, stream, pad = 0, 0, 0
+        return dict(cache_mode=self.cache_mode,
+                    decode_cache_bytes=cache,
+                    full_cursor_bytes=full,
+                    fused_stream_bytes=stream,
+                    fused_pad_words=pad,
+                    shrink_vs_full=(full / cache) if cache else float("inf"))
 
     # -- autotune hook -----------------------------------------------------
     def retile(self, tiles) -> None:
         """Install per-bucket (sb, wb) winners (benchmarks/bench_kernels.py
-        autotune). Band windows are recomputed for the new sb's; jitted
-        dispatch functions are invalidated and re-trace on next call."""
+        autotune). Band windows and width-block checkpoints are recomputed
+        for the new tiles; jitted dispatch functions are invalidated and
+        re-trace on next call."""
         tiles = tuple((int(sb), int(wb)) for sb, wb in tiles)
         if len(tiles) != len(self.tiles):
             raise ValueError(f"need {len(self.tiles)} (sb, wb) pairs")
+        mat = self._matref() if self._matref is not None else None
         if self.variant == "band":
-            mat = self._matref() if self._matref is not None else None
             if mat is None:
                 raise ValueError("cannot retile a band plan: matrix is gone")
             wins = []
@@ -382,6 +931,10 @@ class SpMVPlan:
                         f"band kernel infeasible at sb={sb}, hw={self.hw}")
                 wins.append(win)
             self.wins = tuple(wins)
+        if self.kckpts is not None:
+            if mat is None:
+                raise ValueError("cannot retile checkpoints: matrix is gone")
+            self.kckpts = _build_block_checkpoints(mat, tiles)
         self.tiles = tiles
         self._fns.clear()
 
@@ -393,19 +946,34 @@ class SpMVPlan:
 
 def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
                hw: int = _DEF_HW, force: str | None = None,
-               interpret: bool | None = None) -> SpMVPlan:
-    """Host-side plan construction (the slow path — run once per matrix)."""
+               interpret: bool | None = None,
+               decode_cache: str | None = None,
+               fused_trim: bool = True) -> SpMVPlan:
+    """Host-side plan construction (the slow path — run once per matrix).
+
+    ``decode_cache`` in {'checkpoint', 'full', '0'} (default: the
+    ``REPRO_PLAN_CURSOR_CACHE`` env var, itself defaulting to
+    'checkpoint') picks the decode-cache layout for the 'jnp' variant and
+    whether the Pallas variants get width-block checkpoints.
+    ``fused_trim=False`` keeps the fused layout shape-derived (no
+    data-dependent slice sort / all-pad-run trimming) so SPMD consumers
+    get identical layouts across shards.
+    """
     interpret = _interpret_default() if interpret is None else interpret
     policy = (force or _env_policy()).lower()
     if policy not in _POLICIES:
         raise ValueError(f"force={policy!r} not in {_POLICIES}")
+    mode = (decode_cache or _env_cache_mode()).lower()
+    if mode not in _CACHE_MODES:
+        raise ValueError(f"decode_cache={mode!r} not in {_CACHE_MODES}")
     n_buckets = len(mat.packs)
     tiles = tuple((sb, wb) for _ in range(n_buckets))
 
     if _is_traced(mat):
         # Under jit tracing the host cannot inspect column metadata: band
-        # feasibility is undecidable, so fall back to a non-band variant and
-        # never cache (the plan holds tracers).
+        # feasibility is undecidable and the decode caches cannot be built,
+        # so fall back to the scan-decode variant and never cache (the plan
+        # holds tracers).
         if policy == "band":
             raise ValueError(
                 "force='band' requires a concrete matrix (host-side window "
@@ -421,6 +989,7 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
             n=mat.n, m=mat.m,
             total_stored=sum(int(p.shape[0]) * int(p.shape[2])
                              for p in mat.packs),
+            cache_mode="0",
             ephemeral=True)
 
     wins = None
@@ -442,7 +1011,7 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
         if interpret:
             variant = "jnp"
             reason = ("auto: non-TPU backend — Pallas would run in "
-                      "interpret mode, scan-decode XLA path is faster")
+                      "interpret mode, fused-stream XLA path is faster")
         elif wins is not None and mat.m >= _BAND_MIN_M:
             variant = "band"
             reason = (f"auto: band feasible and m={mat.m} >= "
@@ -466,8 +1035,34 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     if variant != "band":
         wins = None
 
-    outrow_cat = (jnp.concatenate([o.reshape(-1) for o in mat.outrows])
-                  if n_buckets else jnp.zeros((0,), jnp.int32))
+    fused, layout, orders = (None, None, None)
+    cols = None
+    kckpts = None
+    if variant == "jnp":
+        if mode == "checkpoint":
+            fused, layout, orders = _build_fused_stream(mat,
+                                                        trim=fused_trim)
+            if fused is None:
+                # a group's column span overflows every compact offset
+                # encoding — fall back to the full cursor cache, loudly
+                mode = "full"
+                reason += ("; checkpoint stream infeasible (group column "
+                           "span overflow), fell back to full cursor "
+                           "cache")
+        if mode == "full":
+            cols = _build_cursor_cache(mat)
+    elif mode == "checkpoint":
+        kckpts = _build_block_checkpoints(mat, tiles)
+    if orders is not None:
+        # bake the fused layout's per-bucket slice sort into the plan's
+        # stored order (outputs of the fused tail land in sorted order)
+        outs = [np.asarray(o).reshape(len(ordr), -1)[ordr].reshape(-1)
+                for o, ordr in zip(mat.outrows, orders)]
+        outrow_cat = (jnp.asarray(np.concatenate(outs)) if outs
+                      else jnp.zeros((0,), jnp.int32))
+    else:
+        outrow_cat = (jnp.concatenate([o.reshape(-1) for o in mat.outrows])
+                      if n_buckets else jnp.zeros((0,), jnp.int32))
     return SpMVPlan(
         variant=variant, policy=f"{variant} ({reason})", hw=hw,
         interpret=interpret, tiles=tiles,
@@ -475,9 +1070,13 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
         outrow_cat=outrow_cat, n=mat.n, m=mat.m,
         total_stored=sum(int(p.shape[0]) * int(p.shape[2])
                          for p in mat.packs),
-        inv_cat=_build_inverse_perm(mat, outrow_cat),
-        cols=(_build_cursor_cache(mat)
-              if variant == "jnp" and _CURSOR_CACHE else None),
+        inv_cat=(inv := _build_inverse_perm(mat, outrow_cat)),
+        inv2_cat=(None if fused is None else jnp.asarray(np.stack(
+            [np.asarray(inv) // mat.C, np.asarray(inv) % mat.C],
+            axis=1).astype(np.int32))),
+        cols=cols, cache_mode=mode, fused=fused, fused_layout=layout,
+        kckpts=kckpts,
+        total_words=sum(int(np.prod(p.shape)) for p in mat.packs),
         _matref=weakref.ref(mat))
 
 
@@ -501,24 +1100,29 @@ def _plan_token(mat: PackSELLMatrix) -> int:
 
 def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
              hw: int = _DEF_HW, force: str | None = None,
-             interpret: bool | None = None) -> SpMVPlan:
+             interpret: bool | None = None,
+             decode_cache: str | None = None,
+             fused_trim: bool = True) -> SpMVPlan:
     """Cached plan lookup. Keyed on ``(mat._plan_token, sb, wb, hw, policy,
-    interpret)`` — a monotonically assigned per-matrix token (see
-    :func:`_plan_token`); entries are dropped (weakref) when the matrix
-    dies."""
+    interpret, decode-cache mode, trim)`` — a monotonically assigned
+    per-matrix token (see :func:`_plan_token`); entries are dropped
+    (weakref) when the matrix dies."""
     interpret = _interpret_default() if interpret is None else interpret
     policy = (force or _env_policy()).lower()
+    mode = (decode_cache or _env_cache_mode()).lower()
     if _is_traced(mat):
         # tracer matrices are per-trace objects: build ephemeral, skip cache
         return build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
-                          interpret=interpret)
-    key = (_plan_token(mat), sb, wb, hw, policy, interpret)
+                          interpret=interpret, decode_cache=decode_cache)
+    key = (_plan_token(mat), sb, wb, hw, policy, interpret, mode,
+           fused_trim)
     ent = _PLANS.get(key)
     if ent is not None and ent[0]() is mat:
         _STATS["hits"] += 1
         return ent[1]
     plan = build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
-                      interpret=interpret)
+                      interpret=interpret, decode_cache=decode_cache,
+                      fused_trim=fused_trim)
 
     def _drop(_ref, key=key):
         if _PLANS.pop(key, None) is not None:

@@ -172,17 +172,20 @@ class DecodeEngine:
                     log.info("warmup: layer %d retiled from store (%s)",
                              i, key)
             plan = lin.warmup()
+            pdesc = plan.describe()
+            plan_tag = "%s/%s" % (pdesc["variant"], pdesc["cache_mode"])
+            if pdesc.get("fused"):
+                plan_tag += "@wr=%d" % pdesc["ckpt_width"]
             if desc.get("auto_selected"):
                 log.info(
                     "warmup: layer %d codec=%s D=%d auto-selected (%s), "
                     "memory_ratio=%.3f, plan=%s", i, desc["codec"],
                     desc["D"],
                     "store hit" if desc.get("from_store") else "analyzed",
-                    desc.get("memory_ratio", float("nan")),
-                    plan.describe()["variant"])
+                    desc.get("memory_ratio", float("nan")), plan_tag)
             elif desc:
-                log.info("warmup: layer %d codec=%s D=%d (caller-fixed)",
-                         i, desc["codec"], desc["D"])
+                log.info("warmup: layer %d codec=%s D=%d (caller-fixed), "
+                         "plan=%s", i, desc["codec"], desc["D"], plan_tag)
         for dp in spec.dist_plans:
             dp.warmup(nb=nb)
         for comp in spec.composites:

@@ -3,6 +3,16 @@
 Convergence criterion matches the paper's eq. (6): ||b - A x||_2 / ||b||_2 <
 tol, tracked via the CG recurrence residual (benchmarks re-verify the true
 residual afterwards).
+
+Fused solver step (DESIGN.md §10.4): ``pcg`` / ``adaptive_pcg`` accept a
+``jit_cache``/``jit_key`` pair that compiles the ENTIRE solve — setup
+(initial residual, preconditioned direction, norms), the ``while_loop``
+recurrence (matvec + α/β axpys + residual dot in one loop body) and the
+epilogue — into one cached jitted, buffer-donating dispatch, so repeated
+solves pay zero per-call tracing and zero intermediate host round-trips.
+``jacobi_pcg_stored`` parks its fused solve on the plan's function cache
+automatically. The computation graph is identical to the uncached path, so
+iteration counts (and bits) are unchanged.
 """
 from __future__ import annotations
 
@@ -13,6 +23,12 @@ import jax
 import jax.numpy as jnp
 
 Matvec = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _donate(*argnums) -> tuple:
+    """Donation argnums, except on CPU where XLA cannot alias the buffers
+    and jit would warn on every call."""
+    return argnums if jax.default_backend() != "cpu" else ()
 
 
 class SolveInfo(NamedTuple):
@@ -57,7 +73,8 @@ def _prep(b, x0, dtype, norm):
 
 def pcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec | None = None,
         tol: float = 1e-9, maxiter: int = 1000, x0=None,
-        dtype=None, dot=None, norm=None) -> tuple[jnp.ndarray, SolveInfo]:
+        dtype=None, dot=None, norm=None, jit_cache: dict | None = None,
+        jit_key=None) -> tuple[jnp.ndarray, SolveInfo]:
     """Preconditioned CG. ``M`` must be a *fixed* operator (SPD).
 
     ``dot`` / ``norm`` default to the single-device ``jnp.vdot`` /
@@ -65,7 +82,30 @@ def pcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec | None = None,
     versions (:func:`dist_dot` / :func:`dist_norm`) so the identical
     iteration runs on sharded vectors inside a shard_map region — the
     recurrence, and therefore the iteration count, is unchanged.
+
+    ``jit_cache`` (any dict the caller owns, e.g. a plan's ``_fns``)
+    compiles the whole solve once per ``(jit_key, tol, maxiter, shape,
+    dtype)`` into a single buffer-donating dispatch — the fused solver
+    step. The caller must guarantee ``jit_key`` uniquely identifies the
+    ``matvec``/``M``/``dot``/``norm`` closures it passes.
     """
+    if jit_cache is not None and not isinstance(b, jax.core.Tracer):
+        b = jnp.asarray(b)
+        sdtype = jnp.dtype(dtype or b.dtype)
+        key = ("pcg", jit_key, float(tol), int(maxiter), b.shape,
+               sdtype.name)
+        fn = jit_cache.get(key)
+        if fn is None:
+            fn = jax.jit(
+                lambda b, x0: pcg(matvec, b, M=M, tol=tol, maxiter=maxiter,
+                                  x0=x0, dtype=dtype, dot=dot, norm=norm),
+                donate_argnums=_donate(1))
+            jit_cache[key] = fn
+        # donation must never eat a caller-owned buffer: copy supplied x0
+        x0 = (jnp.zeros(b.shape, sdtype) if x0 is None
+              else jnp.array(x0, sdtype, copy=True))
+        return fn(b, x0)
+
     dot = dot or jnp.vdot
     norm = norm or jnp.linalg.norm
     b, x0, bnorm, dtype = _prep(b, x0, dtype, norm)
@@ -148,32 +188,66 @@ def jacobi_pcg_stored(mat, plan, diag: jnp.ndarray, b: jnp.ndarray, *,
     """Jacobi-PCG run entirely in σ-stored-row order (plan engine fast path).
 
     The operator is the symmetrically permuted ``P A Pᵀ`` (SPD iff A is):
-    the matvec consumes ``plan.from_stored`` (stored → original order, one
-    gather) and the kernel's ``permuted=True`` output is already stored-row
-    order — the σ-scatter epilogue is skipped on every iteration. The Jacobi
-    preconditioner and the right-hand side are permuted ONCE at setup.
-    σ-padding slots stay zero throughout, so stored-space dot products and
-    norms equal their original-space values and the convergence criterion is
-    unchanged.
+    the matvec consumes the stored → original-order gather and the kernel's
+    ``permuted=True`` output is already stored-row order — the σ-scatter
+    epilogue is skipped on every iteration. The Jacobi preconditioner and
+    the right-hand side are permuted ONCE at setup. σ-padding slots stay
+    zero throughout, so stored-space dot products and norms equal their
+    original-space values and the convergence criterion is unchanged.
+
+    The WHOLE solve — permutation setup, the PCG ``while_loop`` (matvec +
+    α/β axpys + residual dot), and the final unpermute — is one jitted,
+    buffer-donating dispatch cached on the plan (DESIGN.md §10.4): the
+    plan's device operands flow as arguments, repeated solves re-trace
+    nothing, and the computation graph (hence the iteration count, bit for
+    bit) matches the historical eager path.
 
     ``mat``/``plan``: a PackSELL matrix and its SpMVPlan (see
     ``OperatorSet.plan_pair``); ``diag``: the matrix diagonal in original
     row order.
     """
+    from repro.kernels import plan as _kp
+
     diag = jnp.asarray(diag)
-    dinv = jnp.where(diag == 0, 1.0, 1.0 / diag)
-    dinv_s = plan.to_stored(dinv.astype(b.dtype))
-    b_s = plan.to_stored(b)
+    b = jnp.asarray(b)
+    if (plan.ephemeral or plan.inv_cat is None
+            or isinstance(b, jax.core.Tracer)):
+        # tracing / ephemeral fallback: same graph, no caching
+        dinv = jnp.where(diag == 0, 1.0, 1.0 / diag)
+        dinv_s = plan.to_stored(dinv.astype(b.dtype))
+        b_s = plan.to_stored(b)
 
-    def matvec_s(x_s):
-        return plan.spmv(mat, plan.from_stored(x_s), permuted=True)
+        def matvec_s(x_s):
+            return plan.spmv(mat, plan.from_stored(x_s), permuted=True)
 
-    def M(r_s):
-        return r_s * dinv_s
+        x_s, info = pcg(matvec_s, b_s, M=lambda r: r * dinv_s, tol=tol,
+                        maxiter=maxiter, dtype=dtype)
+        return plan.from_stored(x_s), info
 
-    x_s, info = pcg(matvec_s, b_s, M=M, tol=tol, maxiter=maxiter,
-                    dtype=dtype)
-    return plan.from_stored(x_s), info
+    sdtype = jnp.dtype(dtype if dtype is not None else b.dtype)
+    key = ("jpcg_stored", float(tol), int(maxiter), b.shape, sdtype.name)
+    fn = plan._fns.get(key)
+    if fn is None:
+        def solve(mat_a, dev, diag_a, b_a, x0_s):
+            dinv = jnp.where(diag_a == 0, 1.0, 1.0 / diag_a)
+            dinv_s = _kp.stored_permute(dinv.astype(b_a.dtype),
+                                        dev["outrow"], plan.n)
+            b_s = _kp.stored_permute(b_a, dev["outrow"], plan.n)
+
+            def matvec_s(x_s):
+                return plan.execute_with(
+                    mat_a, dev, _kp.stored_unpermute(x_s, dev["inv"]),
+                    permuted=True)
+
+            x_s, info = pcg(matvec_s, b_s, M=lambda r: r * dinv_s,
+                            tol=tol, maxiter=maxiter, dtype=dtype,
+                            x0=x0_s)
+            return _kp.stored_unpermute(x_s, dev["inv"]), info
+
+        fn = jax.jit(solve, donate_argnums=_donate(4))
+        plan._fns[key] = fn
+    x0_s = jnp.zeros((plan.total_stored,), sdtype)
+    return fn(mat, plan._device_operands(), diag, b, x0_s)
 
 
 def jacobi_pcg_dist(dplan, diag: jnp.ndarray, b: jnp.ndarray, *,
@@ -239,7 +313,8 @@ def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
                  maxiter: int = 60, m_in: int = 16, x0=None,
                  dtype=None, stag_factor: float = 0.25,
                  start_tier: int = 0, dot=None, norm=None,
-                 prestage=None
+                 prestage=None, jit_cache: dict | None = None,
+                 jit_key=None
                  ) -> tuple[jnp.ndarray, AdaptiveSolveInfo]:
     """Residual-adaptive mixed-precision PCG (the paper's §6 recipe,
     iterative-refinement style; DESIGN.md §8.5).
@@ -273,11 +348,34 @@ def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
     as trailing arguments; it is hoisted out of the tier ``lax.switch`` so
     one collective per matvec serves whichever tier is active.
 
+    ``jit_cache``/``jit_key`` compile the whole refinement loop into one
+    cached buffer-donating dispatch, exactly as in :func:`pcg` (the fused
+    solver step; the caller's key must identify the tier closures).
+
     Returns ``(x, AdaptiveSolveInfo)`` with per-tier matvec counts, so
     callers can verify how much of the solve ran sub-32-bit.
     """
     if not tiers:
         raise ValueError("need at least one tier")
+    if jit_cache is not None and not isinstance(b, jax.core.Tracer):
+        b = jnp.asarray(b)
+        sdtype = jnp.dtype(dtype or b.dtype)
+        key = ("adaptive", jit_key, float(tol), int(maxiter), int(m_in),
+               float(stag_factor), int(start_tier), b.shape, sdtype.name)
+        fn = jit_cache.get(key)
+        if fn is None:
+            fn = jax.jit(
+                lambda b, x0: adaptive_pcg(
+                    tiers, b, M=M, matvec_hi=matvec_hi, tol=tol,
+                    maxiter=maxiter, m_in=m_in, x0=x0, dtype=dtype,
+                    stag_factor=stag_factor, start_tier=start_tier,
+                    dot=dot, norm=norm, prestage=prestage),
+                donate_argnums=_donate(1))
+            jit_cache[key] = fn
+        # donation must never eat a caller-owned buffer: copy supplied x0
+        x0 = (jnp.zeros(b.shape, sdtype) if x0 is None
+              else jnp.array(x0, sdtype, copy=True))
+        return fn(b, x0)
     n_tiers = len(tiers)
     dot = dot or jnp.vdot
     norm = norm or jnp.linalg.norm

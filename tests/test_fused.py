@@ -1,0 +1,437 @@
+"""Fused ragged-bucket SpMV with compact cursor checkpoints (DESIGN.md §10).
+
+Covers the tentpole end to end:
+
+* checkpoint decode ≡ full cursor decode ≡ scan decode ≡ host numpy
+  oracle — as a hypothesis property over random codecs, delta widths,
+  checkpoint widths, bucket counts and shapes (integer-valued data, so
+  every path is EXACT and accumulation order cannot hide column bugs),
+  plus deterministic edges: empty matrix, single word, dummy words
+  straddling checkpoint boundaries, span-overflow fallback;
+* the fused ragged pass ≡ the per-bucket oracle for spmv/spmm and for
+  two-member composites (one concatenated word-stream operand);
+* Pallas interpret parity for the checkpoint-seeded full/band/spmm
+  kernels against both the legacy carry kernels and the jnp oracle;
+* the trace-count regression guard: steady-state matvec = exactly one
+  jitted dispatch, no retrace across 10 calls;
+* the `_unpermute` fix: traced (ephemeral) plans match concrete plans
+  bit-for-bit (scatter fallback ≡ inverse-permutation gather);
+* the fused solver step: jacobi_pcg_stored / pcg / adaptive_pcg with the
+  jitted cached solve — iteration counts and iterates unchanged.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import packsell, testmats
+from repro.core import codecs as cd
+from repro.kernels import composite as kc
+from repro.kernels import ops, ref
+from repro.kernels import packsell_spmv as kpk
+from repro.kernels import plan as kplan
+from repro.solvers import cg
+
+RNG = np.random.default_rng(7)
+
+
+def _int_csr(n, m, nnz_per_row, seed=0):
+    """Random integer-valued CSR (values exact in every codec, sums exact
+    in fp32 — so cross-path comparisons can be bitwise)."""
+    rng = np.random.default_rng(seed)
+    rows, cols, vals = [], [], []
+    for i in range(n):
+        k = rng.integers(0, nnz_per_row + 1)
+        if k == 0:
+            continue
+        cs = rng.choice(m, size=min(k, m), replace=False)
+        for c in cs:
+            rows.append(i)
+            cols.append(c)
+            vals.append(float(rng.integers(1, 9)) * rng.choice([-1.0, 1.0]))
+    a = sp.csr_matrix((vals, (rows, cols)), shape=(n, m))
+    a.sort_indices()
+    return a
+
+
+def _int_x(m, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.integers(-8, 9, size=m)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# decode-path equivalence (deterministic core cases)
+# ---------------------------------------------------------------------------
+
+MODES = ("checkpoint", "full", "0")
+
+
+@pytest.mark.parametrize("codec,D", [("fp16", 15), ("bf16", 12),
+                                     ("e8m", 16), ("e8m", 8),
+                                     ("fixed16", 15), ("fixed16", 10)])
+def test_decode_modes_agree_exactly(codec, D):
+    """checkpoint ≡ full cursor ≡ scan ≡ numpy oracle, bit for bit, on
+    integer data — across split16 ('f16'/'top16'/'fixed16'), rebased
+    'words' and the overflow fallback encodings."""
+    a = _int_csr(90, 110, 7, seed=3)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=D, codec=codec)
+    x = _int_x(110)
+    oracle = ref.packsell_spmv_dense_oracle(mat, np.asarray(x))
+    ys = {}
+    for mode in MODES:
+        plan = kplan.build_plan(mat, force="jnp", decode_cache=mode)
+        ys[mode] = np.asarray(plan.spmv(mat, x))
+        np.testing.assert_array_equal(ys[mode], oracle.astype(np.float32))
+    np.testing.assert_array_equal(ys["checkpoint"], ys["full"])
+    np.testing.assert_array_equal(ys["checkpoint"], ys["0"])
+
+
+def test_checkpoint_widths_all_agree(monkeypatch):
+    """Every checkpoint width (run chunking) decodes identically."""
+    a = _int_csr(70, 80, 9, seed=5)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=15, codec="fp16")
+    x = _int_x(80)
+    base = None
+    for wr in (8, 16, 32, 64, 128):
+        monkeypatch.setattr(kplan, "_CKPT_WIDTHS", (wr,))
+        plan = kplan.build_plan(mat, force="jnp", decode_cache="checkpoint")
+        assert plan.fused_layout.wr == wr
+        y = np.asarray(plan.spmv(mat, x))
+        if base is None:
+            base = y
+        else:
+            np.testing.assert_array_equal(y, base)
+
+
+def test_edge_empty_and_single_word():
+    # empty matrix: nnz = 0, every mode returns zeros
+    a = sp.csr_matrix((4, 6))
+    mat = packsell.from_csr(a, C=4, sigma=4, D=10, codec="fp16")
+    x = _int_x(6)
+    for mode in MODES:
+        plan = kplan.build_plan(mat, force="jnp", decode_cache=mode)
+        np.testing.assert_array_equal(np.asarray(plan.spmv(mat, x)),
+                                      np.zeros(4, np.float32))
+    # single stored word
+    a1 = sp.csr_matrix(([3.0], ([0], [2])), shape=(1, 5))
+    m1 = packsell.from_csr(a1, C=4, sigma=4, D=10, codec="fp16")
+    x1 = _int_x(5)
+    for mode in MODES:
+        plan = kplan.build_plan(m1, force="jnp", decode_cache=mode)
+        np.testing.assert_array_equal(
+            np.asarray(plan.spmv(m1, x1)),
+            np.asarray([3.0 * float(x1[2])], np.float32))
+
+
+def test_edge_dummy_words_straddle_checkpoint_boundary(monkeypatch):
+    """Column gaps force dummy-word chains; rows long enough that the
+    dummies land on / straddle run boundaries must decode exactly."""
+    n, m = 8, 5000
+    rows, cols, vals = [], [], []
+    rng = np.random.default_rng(11)
+    for i in range(n):
+        # 20 entries: dense prefix then huge jumps (dummies under D=4)
+        cs = np.unique(np.concatenate([
+            np.arange(6) + i, rng.choice(m - 100, size=14, replace=False)]))
+        for c in cs:
+            rows.append(i)
+            cols.append(int(c))
+            vals.append(float(rng.integers(1, 5)))
+    a = sp.csr_matrix((vals, (rows, cols)), shape=(n, m))
+    monkeypatch.setattr(kplan, "_CKPT_WIDTHS", (8,))
+    for codec, D in (("fp16", 15), ("e8m", 4)):
+        mat = packsell.from_csr(a, C=4, sigma=8, D=D, codec=codec)
+        x = _int_x(m)
+        oracle = ref.packsell_spmv_dense_oracle(mat, np.asarray(x))
+        plan = kplan.build_plan(mat, force="jnp", decode_cache="checkpoint")
+        np.testing.assert_array_equal(np.asarray(plan.spmv(mat, x)),
+                                      oracle.astype(np.float32))
+
+
+def test_span_overflow_falls_back_to_cursor_cache():
+    """e8m D=4 ('words' encoding needs run-local offsets < 2^4): wide
+    in-run column spans cannot be re-based — the plan must fall back to
+    the full cursor cache, loudly, and stay correct."""
+    a = _int_csr(60, 4000, 6, seed=9)     # scattered: spans >> 16
+    mat = packsell.from_csr(a, C=8, sigma=32, D=4, codec="e8m")
+    plan = kplan.build_plan(mat, force="jnp", decode_cache="checkpoint")
+    assert plan.fused is None and plan.cols is not None
+    assert "fell back to full cursor cache" in plan.policy
+    x = _int_x(4000)
+    np.testing.assert_array_equal(
+        np.asarray(plan.spmv(mat, x)),
+        ref.packsell_spmv_dense_oracle(mat, np.asarray(x))
+        .astype(np.float32))
+
+
+def test_env_mode_parsing(monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CURSOR_CACHE", "1")   # PR-1 spelling
+    assert kplan._env_cache_mode() == "checkpoint"
+    monkeypatch.setenv("REPRO_PLAN_CURSOR_CACHE", "full")
+    assert kplan._env_cache_mode() == "full"
+    monkeypatch.setenv("REPRO_PLAN_CURSOR_CACHE", "0")
+    assert kplan._env_cache_mode() == "0"
+    monkeypatch.setenv("REPRO_PLAN_CURSOR_CACHE", "bogus")
+    with pytest.raises(ValueError):
+        kplan._env_cache_mode()
+
+
+def test_decode_cache_memory_shrinks_8x_on_suite():
+    """The acceptance floor: checkpoints >= 8x smaller than the PR-1
+    cursor cache on every tiny-suite class."""
+    for name, a in testmats.suite("tiny").items():
+        mat = packsell.from_csr(a, C=32, sigma=256, D=15, codec="fp16")
+        plan = kplan.build_plan(mat, force="jnp",
+                                decode_cache="checkpoint")
+        st = plan.decode_cache_stats()
+        assert st["shrink_vs_full"] >= 8.0, (name, st)
+
+
+# ---------------------------------------------------------------------------
+# fused ragged pass vs per-bucket oracle (spmv / spmm / composites)
+# ---------------------------------------------------------------------------
+
+def test_fused_matches_per_bucket_oracle_spmv_spmm():
+    a = _int_csr(120, 100, 11, seed=13)   # pow2 -> multiple buckets
+    mat = packsell.from_csr(a, C=8, sigma=64, D=15, codec="fp16")
+    assert len(mat.packs) > 1
+    x = _int_x(100)
+    X = jnp.stack([_int_x(100, seed=s) for s in range(3)], axis=1)
+    plan = kplan.build_plan(mat, force="jnp", decode_cache="checkpoint")
+    np.testing.assert_array_equal(
+        np.asarray(plan.spmv(mat, x)),
+        np.asarray(packsell.packsell_spmv_jnp(mat, x)))
+    np.testing.assert_array_equal(
+        np.asarray(plan.spmm(mat, X)),
+        np.asarray(packsell.packsell_spmm_jnp(mat, X)))
+
+
+def test_two_member_composite_fused_stream():
+    """Row-class composite: ONE concatenated word-stream operand feeds
+    both members; outputs match the dense per-class oracle and the
+    execute_with (per-member operands) path bit-for-bit."""
+    a = _int_csr(80, 80, 6, seed=17)
+    rows = np.arange(80)
+    classes = [("fp16", 15, rows[: 40]), ("bf16", 12, rows[40:])]
+    cp = kc.CompositePlan.from_classes(a, classes, C=8, sigma=32)
+    cat = cp.fused_cat()
+    assert cat is not None and sum(s is not None for s in cat[2]) == 2
+    x = _int_x(80)
+    y = np.asarray(cp.spmv(x))
+    # dense oracle: each class quantized at its codec
+    dense = np.zeros((80, 80))
+    for (codec, D, rws), mem in zip(classes, cp.members):
+        sub = a[rws].toarray()
+        q = cd.quantize_np(sub.ravel(), cd.make_codec(codec), D)
+        dense[rws] = q.reshape(sub.shape)
+    np.testing.assert_array_equal(y, (dense @ np.asarray(x))
+                                  .astype(np.float32))
+    y2 = np.asarray(cp.execute_with(cp.member_mats(), cp.member_devs(),
+                                    cp.invs, (x,)))
+    np.testing.assert_array_equal(y, y2)
+
+
+# ---------------------------------------------------------------------------
+# Pallas checkpoint kernels (interpret parity)
+# ---------------------------------------------------------------------------
+
+def test_pallas_ckpt_kernels_match_legacy_and_oracle():
+    a = testmats.random_banded(600, 30, 8, seed=21)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=15, codec="fp16",
+                            bucket_strategy="uniform")
+    x = jnp.asarray(RNG.standard_normal(600).astype(np.float32))
+    X = jnp.asarray(RNG.standard_normal((600, 3)).astype(np.float32))
+    oracle = np.asarray(packsell.packsell_spmv_jnp(mat, x))
+    for force in ("full", "band"):
+        p_ck = kplan.build_plan(mat, sb=4, wb=8, force=force,
+                                decode_cache="checkpoint")
+        p_legacy = kplan.build_plan(mat, sb=4, wb=8, force=force,
+                                    decode_cache="0")
+        assert p_ck.kckpts is not None and p_legacy.kckpts is None
+        np.testing.assert_allclose(np.asarray(p_ck.spmv(mat, x)), oracle,
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(p_legacy.spmv(mat, x)),
+                                   oracle, rtol=1e-6, atol=1e-6)
+    Y = np.asarray(packsell.packsell_spmm_jnp(mat, X))
+    p_full = kplan.build_plan(mat, sb=4, wb=8, force="full",
+                              decode_cache="checkpoint")
+    np.testing.assert_allclose(np.asarray(p_full.spmm(mat, X)), Y,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_retile_recomputes_block_checkpoints():
+    a = testmats.random_banded(300, 20, 6, seed=23)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=15, codec="fp16")
+    x = jnp.asarray(RNG.standard_normal(300).astype(np.float32))
+    plan = kplan.build_plan(mat, sb=4, wb=8, force="full",
+                            decode_cache="checkpoint")
+    y1 = np.asarray(plan.spmv(mat, x))
+    plan.retile([(2, 16)] * len(mat.packs))
+    assert all(int(c.shape[1]) == -(-int(p.shape[1]) // 16)
+               for c, p in zip(plan.kckpts, mat.packs))
+    np.testing.assert_allclose(np.asarray(plan.spmv(mat, x)), y1,
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# trace-count regression guard + traced-vs-concrete epilogue
+# ---------------------------------------------------------------------------
+
+def test_steady_state_matvec_single_dispatch_no_retrace():
+    """10 matvecs = ONE jitted executable, zero retraces (the CI guard)."""
+    a = _int_csr(100, 100, 5, seed=29)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=15, codec="fp16")
+    kplan.clear_cache()
+    plan = kplan.get_plan(mat)
+    for i in range(10):
+        x = _int_x(100, seed=i)
+        jax.block_until_ready(plan.spmv(mat, x))
+    fn = plan._fns["spmv"]
+    assert fn._cache_size() == 1, "steady-state spmv retraced"
+    assert kplan.cache_stats()["misses"] == 1
+
+
+def test_traced_plan_matches_concrete_bit_for_bit():
+    """The `_unpermute` regression (issue satellite): an ephemeral traced
+    plan (drop-mode scatter epilogue, scan decode) must equal the concrete
+    plan with the same decode (inverse-permutation gather) bitwise."""
+    a = _int_csr(90, 90, 6, seed=31)
+    mat = packsell.from_csr(a, C=8, sigma=32, D=15, codec="fp16")
+    x = _int_x(90)
+    plan0 = kplan.build_plan(mat, force="jnp", decode_cache="0")
+    y_concrete = np.asarray(plan0.spmv(mat, x))
+
+    @jax.jit
+    def traced(mat, x):
+        return ops.packsell_spmv(mat, x, decode_cache="0")
+
+    np.testing.assert_array_equal(np.asarray(traced(mat, x)), y_concrete)
+    # and the default checkpoint mode agrees exactly on integer data
+    y_fused = np.asarray(kplan.build_plan(
+        mat, force="jnp", decode_cache="checkpoint").spmv(mat, x))
+    np.testing.assert_array_equal(y_fused, y_concrete)
+
+
+# ---------------------------------------------------------------------------
+# fused solver step
+# ---------------------------------------------------------------------------
+
+def _spd_problem(n=216):
+    a = testmats.stencil_3d(6, 6, 6, neighbours=27)
+    from repro.solvers import operators as op
+    s, _ = op.sym_scale(a)
+    mat = packsell.from_csr(s, C=8, sigma=32, D=15, codec="fp16")
+    plan = kplan.get_plan(mat, force="jnp")
+    b = jnp.asarray(np.random.default_rng(5).standard_normal(s.shape[0])
+                    .astype(np.float32))
+    return s, mat, plan, b
+
+
+def test_jacobi_pcg_stored_fused_solve_matches_eager():
+    s, mat, plan, b = _spd_problem()
+    diag = s.diagonal()
+    x_f, info_f = cg.jacobi_pcg_stored(mat, plan, diag, b, tol=1e-6,
+                                       maxiter=200, dtype=jnp.float32)
+    # eager reference: the historical un-jitted composition
+    dinv = jnp.where(jnp.asarray(diag) == 0, 1.0, 1.0 / jnp.asarray(diag))
+    dinv_s = plan.to_stored(dinv.astype(b.dtype))
+    b_s = plan.to_stored(b)
+    x_s, info_e = cg.pcg(
+        lambda x_s: plan.spmv(mat, plan.from_stored(x_s), permuted=True),
+        b_s, M=lambda r: r * dinv_s, tol=1e-6, maxiter=200,
+        dtype=jnp.float32)
+    x_e = plan.from_stored(x_s)
+    assert int(info_f.iters) == int(info_e.iters)
+    np.testing.assert_array_equal(np.asarray(x_f), np.asarray(x_e))
+    # second call reuses the cached executable
+    key = [k for k in plan._fns if isinstance(k, tuple)
+           and k and k[0] == "jpcg_stored"]
+    assert len(key) == 1
+    fn = plan._fns[key[0]]
+    cg.jacobi_pcg_stored(mat, plan, diag, b, tol=1e-6, maxiter=200,
+                         dtype=jnp.float32)
+    assert fn._cache_size() == 1
+
+
+def test_pcg_jit_cache_matches_uncached():
+    s, mat, plan, b = _spd_problem()
+    matvec = lambda v: plan.spmv(mat, v)   # noqa: E731
+    cache = {}
+    x1, i1 = cg.pcg(matvec, b, tol=1e-6, maxiter=150, dtype=jnp.float32)
+    x2, i2 = cg.pcg(matvec, b, tol=1e-6, maxiter=150, dtype=jnp.float32,
+                    jit_cache=cache, jit_key="t")
+    assert int(i1.iters) == int(i2.iters)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    assert len(cache) == 1
+
+
+def test_adaptive_pcg_jit_cache_iterations_unchanged():
+    s, mat, plan, b = _spd_problem()
+    diag = jnp.asarray(s.diagonal().astype(np.float32))
+    dense = jnp.asarray(s.toarray().astype(np.float64))
+    tiers = [lambda v: plan.spmv(mat, v),
+             lambda v: (dense @ v.astype(jnp.float64)).astype(jnp.float32)]
+    M = lambda r: r / diag                  # noqa: E731
+    kw = dict(M=M, tol=1e-8, maxiter=40, m_in=8, dtype=jnp.float32)
+    x1, a1 = cg.adaptive_pcg(tiers, b, **kw)
+    cache = {}
+    x2, a2 = cg.adaptive_pcg(tiers, b, jit_cache=cache, jit_key="t", **kw)
+    assert int(a1.iters) == int(a2.iters)
+    assert int(a1.promotions) == int(a2.promotions)
+    np.testing.assert_array_equal(np.asarray(a1.tier_history),
+                                  np.asarray(a2.tier_history))
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: all decode paths == numpy oracle, exactly
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYP = True
+except Exception:                            # pragma: no cover
+    _HAVE_HYP = False
+
+if _HAVE_HYP:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    CODECS = [("fp16", 15), ("fp16", 8), ("bf16", 12), ("e8m", 16),
+              ("e8m", 8), ("fixed16", 15), ("fixed16", 9)]
+
+    @st.composite
+    def fused_cases(draw):
+        n = draw(st.integers(1, 60))
+        m = draw(st.integers(1, 80))
+        nnz_per_row = draw(st.integers(0, 10))
+        codec, D = draw(st.sampled_from(CODECS))
+        C = draw(st.sampled_from([2, 4, 8]))
+        sigma = C * draw(st.sampled_from([1, 2, 4]))
+        wr = draw(st.sampled_from([8, 16, 32, 128]))
+        seed = draw(st.integers(0, 2 ** 16))
+        return n, m, nnz_per_row, codec, D, C, sigma, wr, seed
+
+    @settings(max_examples=25, deadline=None)
+    @given(fused_cases())
+    def test_property_decode_paths_match_oracle(case):
+        n, m, nnz_per_row, codec, D, C, sigma, wr, seed = case
+        a = _int_csr(n, m, nnz_per_row, seed=seed)
+        mat = packsell.from_csr(a, C=C, sigma=sigma, D=D, codec=codec)
+        x = _int_x(m, seed=seed + 1)
+        oracle = ref.packsell_spmv_dense_oracle(
+            mat, np.asarray(x)).astype(np.float32)
+        old = kplan._CKPT_WIDTHS
+        kplan._CKPT_WIDTHS = (wr,)
+        try:
+            for mode in MODES:
+                plan = kplan.build_plan(mat, force="jnp",
+                                        decode_cache=mode)
+                np.testing.assert_array_equal(
+                    np.asarray(plan.spmv(mat, x)), oracle)
+                X = x[:, None]
+                np.testing.assert_array_equal(
+                    np.asarray(plan.spmm(mat, X))[:, 0], oracle)
+        finally:
+            kplan._CKPT_WIDTHS = old

@@ -119,7 +119,6 @@ def test_fused_scatter_matches_per_bucket_baseline(force):
     mat = packsell.from_csr(a, C=8, sigma=64, D=6, codec="e8m")
     assert len(mat.packs) > 1, "test needs a multi-bucket matrix"
     x = _x(a.shape[1])
-    y_fused = ops.packsell_spmv(mat, x, sb=4, wb=8, force=force)
     # seed baseline: one full-length scatter per bucket
     y_base = jnp.zeros((mat.n,), jnp.float32)
     for pack, d0, outrow in zip(mat.packs, mat.d0s, mat.outrows):
@@ -131,8 +130,16 @@ def test_fused_scatter_matches_per_bucket_baseline(force):
                 pack, d0, x, mat.codec, mat.D,
                 np.int32(mat.m - 1), jnp.float32)
         y_base = y_base.at[outrow].set(t.reshape(-1), mode="drop")
-    # bit-for-bit: same bucket outputs, same scatter targets
-    np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_base))
+    # the legacy decode-cache modes keep the baseline's accumulation order:
+    # bit-for-bit — same bucket outputs, same scatter targets
+    plan = kplan.build_plan(mat, sb=4, wb=8, force=force, decode_cache="0")
+    np.testing.assert_array_equal(np.asarray(plan.spmv(mat, x)),
+                                  np.asarray(y_base))
+    # the default checkpoint decode reorders the accumulation (fused
+    # ragged stream / grid-parallel width blocks): equal up to rounding
+    y_fused = ops.packsell_spmv(mat, x, sb=4, wb=8, force=force)
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_base),
+                               rtol=1e-6, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------
