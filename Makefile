@@ -2,8 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test verify verify-dist verify-precision verify-composite \
-	verify-fused bench bench-spmv bench-dist bench-precision \
-	bench-composite
+	verify-fused verify-robust bench bench-spmv bench-dist \
+	bench-precision bench-composite bench-robust
 
 test:
 	python -m pytest -x -q
@@ -42,6 +42,15 @@ verify-composite:
 		python -m pytest -x -q tests/test_composite.py \
 		tests/test_composite_properties.py
 
+# guarded execution (DESIGN.md §11): guard/inject/recover unit+property
+# tests, the distributed fault cases under 8 simulated devices, and a
+# tiny-scale injection-campaign + recovery benchmark smoke
+verify-robust:
+	python -m pytest -x -q tests/test_robust.py
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+		python -m pytest -x -q tests/test_robust.py -k "dist"
+	python -m benchmarks.run --only robust --scale tiny
+
 bench:
 	python -m benchmarks.run
 
@@ -60,3 +69,8 @@ bench-precision:
 # regenerate the checked-in dist-mixed vs dist-fp32 PCG curve (small scale)
 bench-composite:
 	python -m benchmarks.run --only composite --scale small
+
+# regenerate the checked-in guard overhead/detection/recovery file
+# (small scale)
+bench-robust:
+	python -m benchmarks.run --only robust --scale small

@@ -14,7 +14,7 @@ import time
 from . import common
 
 MODULES = ("spmv", "memory", "e8my", "f3r", "iocg", "kernels", "roofline",
-           "distributed", "precision", "composite")
+           "distributed", "precision", "composite", "robust")
 
 
 def main() -> None:

@@ -35,8 +35,21 @@ if [[ "${1:-}" != "fast" ]]; then
   # checkpoint-seeded Pallas kernels must match the legacy carry kernels
   # in interpret mode (band/full variants otherwise never run in CI), a
   # steady-state matvec must stay ONE jitted dispatch across 10 calls,
-  # and the fused solver step must not change iteration counts
-  python -m pytest -x -q tests/test_fused.py
+  # and the fused solver step must not change iteration counts. Run the
+  # whole file under each cursor-cache mode so the default-plan override
+  # paths ('full' build-time cols, '0' runtime scan) stay green too.
+  for mode in checkpoint full 0; do
+    echo "   -- REPRO_PLAN_CURSOR_CACHE=$mode"
+    REPRO_PLAN_CURSOR_CACHE="$mode" python -m pytest -x -q tests/test_fused.py
+  done
+
+  echo "== robust: guard/inject/recover + dist fault cases =="
+  # guarded execution (DESIGN.md §11): checksum + ABFT detection under
+  # seeded injection, store quarantine, cache-bound regression, and the
+  # self-healing solve; the dist fault cases need 8 simulated devices
+  python -m pytest -x -q tests/test_robust.py
+  XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_robust.py -k "dist"
 
   echo "== precision: subsystem tests + adaptive_pcg smoke =="
   # the example's adaptive section must converge to 1e-8 with a
@@ -46,15 +59,18 @@ if [[ "${1:-}" != "fast" ]]; then
   python examples/mixed_precision_solver.py --nx 6 | tee /tmp/adaptive_smoke.txt
   grep -q "sub-32-bit matvecs" /tmp/adaptive_smoke.txt
 
-  echo "== smoke: benchmarks (spmv, tiny scale) =="
-  # writes artifacts/bench_results.json and BENCH_spmv.json; the tiny-scale
-  # JSON is a smoke artifact only — the checked-in BENCH_spmv.json is
-  # regenerated at small scale (make bench-spmv), so restore it afterwards.
-  cp BENCH_spmv.json /tmp/BENCH_spmv.json.orig 2>/dev/null || true
-  python -m benchmarks.run --only spmv --scale tiny
-  if [[ -f /tmp/BENCH_spmv.json.orig ]]; then
-    mv /tmp/BENCH_spmv.json.orig BENCH_spmv.json
-  fi
+  echo "== smoke: benchmarks (spmv + robust, tiny scale) =="
+  # writes artifacts/bench_results.json plus BENCH_spmv.json and
+  # BENCH_robust.json; the tiny-scale JSONs are smoke artifacts only —
+  # the checked-in files are regenerated at small scale (make bench-spmv
+  # / bench-robust), so restore them afterwards.
+  for f in BENCH_spmv.json BENCH_robust.json; do
+    cp "$f" "/tmp/$f.orig" 2>/dev/null || true
+  done
+  python -m benchmarks.run --only spmv,robust --scale tiny
+  for f in BENCH_spmv.json BENCH_robust.json; do
+    if [[ -f "/tmp/$f.orig" ]]; then mv "/tmp/$f.orig" "$f"; fi
+  done
 fi
 
 echo "== ci.sh: OK =="

@@ -121,6 +121,15 @@ class PackSELLMatrix:
     def spmv(self, x: jnp.ndarray, compute_dtype=jnp.float32) -> jnp.ndarray:
         return packsell_spmv_jnp(self, x, compute_dtype)
 
+    def validate(self, *, raise_: bool = True) -> list:
+        """Structural integrity check (robust.guard.validate_matrix):
+        offset/outrow lengths and ranges, finite packed values, decoded
+        column bounds, outrow bijectivity. Returns the list of problem
+        strings (empty when clean); raises IntegrityError instead when
+        ``raise_`` is set."""
+        from repro.robust import guard as _guard
+        return _guard.validate_matrix(self, raise_=raise_)
+
 
 # Width-chunk for the scan decode: parallel within a chunk, cursor carried
 # across chunks. Bounds the [S, chunk, C] intermediates so wide buckets stay
@@ -319,6 +328,15 @@ def from_csr(a: sp.csr_matrix, *, C: int = 128, sigma: int = 256, D: int = 15,
     n, m = a.shape
     indptr = a.indptr.astype(np.int64)
     indices = a.indices.astype(np.int64)
+    if a.nnz and not np.all(np.isfinite(a.data)):
+        bad = int(np.count_nonzero(~np.isfinite(a.data)))
+        raise ValueError(
+            f"from_csr: input has {bad} non-finite (NaN/Inf) values; "
+            "packed codecs cannot represent them")
+    if a.nnz and (indices.min() < 0 or indices.max() >= m):
+        raise ValueError(
+            f"from_csr: column indices outside [0, {m}) "
+            f"(min {int(indices.min())}, max {int(indices.max())})")
     values = a.data.astype(np.float32)
     codec_obj = cd.make_codec(codec)
     if not (codec_obj.min_D <= D <= codec_obj.max_D):
@@ -389,7 +407,16 @@ def from_csr(a: sp.csr_matrix, *, C: int = 128, sigma: int = 256, D: int = 15,
 
 
 def from_dense(a: np.ndarray, **kw) -> PackSELLMatrix:
-    return from_csr(sp.csr_matrix(np.asarray(a)), **kw)
+    a = np.asarray(a)
+    if a.ndim != 2:
+        raise ValueError(f"from_dense: expected a 2-D array, got shape "
+                         f"{a.shape}")
+    if not np.all(np.isfinite(a)):
+        bad = int(np.count_nonzero(~np.isfinite(a)))
+        raise ValueError(
+            f"from_dense: input has {bad} non-finite (NaN/Inf) values; "
+            "packed codecs cannot represent them")
+    return from_csr(sp.csr_matrix(a), **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -321,6 +321,14 @@ class CompositePlan:
             self._invs = tuple(jnp.asarray(v) for v in self._invs_np)
         return self._invs
 
+    def validate(self, *, raise_: bool = True) -> list:
+        """Structural integrity check over every member block and term
+        inverse (robust.guard.validate_composite). Returns the list of
+        problem strings (empty when clean); raises IntegrityError instead
+        when ``raise_`` is set."""
+        from repro.robust import guard as _guard
+        return _guard.validate_composite(self, raise_=raise_)
+
     # -- operand plumbing --------------------------------------------------
     def member_mats(self) -> tuple:
         return tuple(mem.mat for mem in self.members)

@@ -16,8 +16,11 @@ the test suite to validate against the pure-jnp oracles in ``ref.py``.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.packsell import PackSELLMatrix
 from repro.core.sell import SELLMatrix
@@ -34,6 +37,23 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _debug_check_finite(x) -> None:
+    """Opt-in input screen (``REPRO_DEBUG_FINITE=1``): reject NaN/Inf in
+    x BEFORE it enters the packed kernels, where a poisoned entry smears
+    into every output row touching its column. Host-side only — skipped
+    for tracers (inside jit the guard layer owns detection)."""
+    if os.environ.get("REPRO_DEBUG_FINITE", "0") != "1":
+        return
+    if isinstance(x, jax.core.Tracer):
+        return
+    xh = np.asarray(x)
+    if not np.all(np.isfinite(xh)):
+        bad = int(np.count_nonzero(~np.isfinite(xh)))
+        raise FloatingPointError(
+            f"packsell_spmv: input x has {bad} non-finite (NaN/Inf) "
+            "entries (REPRO_DEBUG_FINITE=1)")
+
+
 def packsell_spmv(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
                   wb: int = 32, hw: int = _DEF_HW,
                   interpret: bool | None = None,
@@ -47,6 +67,7 @@ def packsell_spmv(mat: PackSELLMatrix, x: jnp.ndarray, *, sb: int = 8,
     decode-cache layout (default: ``REPRO_PLAN_CURSOR_CACHE``);
     ``permuted=True`` returns y in stored-row order (no σ-scatter).
     """
+    _debug_check_finite(x)
     plan = _plan.get_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
                           interpret=interpret, decode_cache=decode_cache)
     return plan.spmv(mat, x, permuted=permuted)

@@ -75,6 +75,48 @@ _BAND_MIN_M = int(os.environ.get("REPRO_BAND_MIN_M", 65_536))
 _POLICIES = ("auto", "full", "band", "jnp")
 _CACHE_MODES = ("checkpoint", "full", "0")
 
+
+class LRUDict(dict):
+    """A dict with LRU eviction, capacity read from an env var at insert
+    time (so long-running processes can be re-tuned and tests can shrink
+    it). Backs the per-plan jit-function caches: eviction only drops a
+    compiled executable or the cached operand dict — both rebuild on the
+    next call, bit-identically (the computation graph is a pure function
+    of the plan's static fields)."""
+
+    def __init__(self, env: str = "REPRO_JIT_CACHE_CAP", cap: int = 64):
+        super().__init__()
+        self._env = env
+        self._default_cap = cap
+
+    def _cap(self) -> int:
+        try:
+            return int(os.environ.get(self._env, self._default_cap))
+        except ValueError:
+            return self._default_cap
+
+    def _touch(self, key) -> None:
+        val = super().pop(key)
+        super().__setitem__(key, val)       # move to MRU position
+
+    def __getitem__(self, key):
+        val = super().__getitem__(key)
+        self._touch(key)
+        return val
+
+    def get(self, key, default=None):
+        if key not in self:
+            return default
+        return self[key]
+
+    def __setitem__(self, key, value) -> None:
+        if key in self:
+            super().pop(key)
+        super().__setitem__(key, value)
+        cap = max(self._cap(), 1)
+        while len(self) > cap:
+            super().pop(next(iter(self)))   # evict LRU
+
 #: candidate checkpoint row widths (words between checkpoints), largest
 #: first. Power-of-two so pow2 bucket widths >= wr need no run padding.
 _CKPT_WIDTHS = (128, 64, 32, 16, 8)
@@ -663,7 +705,7 @@ class SpMVPlan:
     total_words: int = 0              # bucketed words (decode-cache pricing)
     ephemeral: bool = False           # built under tracing: never cached/jitted
     _matref: Optional[weakref.ref] = None
-    _fns: dict = dataclasses.field(default_factory=dict)
+    _fns: dict = dataclasses.field(default_factory=LRUDict)
     _view: Optional[PackSELLMatrix] = None
 
     # -- σ-permutation helpers (stored-row order <-> original order) -------
@@ -869,6 +911,22 @@ class SpMVPlan:
         from . import composite
         return composite.CompositePlan.single(mat, self)
 
+    def validate(self, mat: PackSELLMatrix | None = None, *,
+                 raise_: bool = True) -> list:
+        """Full structural validation of the plan's derived operands
+        (checkpoint monotonicity/range, fused-stream accounting, offset
+        range, permutation bijectivity) — the on-demand deep check;
+        :func:`_quick_validate` already ran the cheap subset at build.
+        Returns the issue list (``raise_=False``) or raises
+        ``robust.guard.IntegrityError``."""
+        from repro.robust import guard as _guard
+
+        if mat is None:
+            mat = self._matref() if self._matref is not None else None
+        if mat is None:
+            raise ValueError("cannot validate: matrix is gone; pass mat=")
+        return _guard.validate_plan(mat, self, raise_=raise_)
+
     def describe(self) -> dict:
         """Machine-readable plan summary (serving warmup logs, and the
         precision store's retile records key off this)."""
@@ -1063,7 +1121,7 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     else:
         outrow_cat = (jnp.concatenate([o.reshape(-1) for o in mat.outrows])
                       if n_buckets else jnp.zeros((0,), jnp.int32))
-    return SpMVPlan(
+    plan = SpMVPlan(
         variant=variant, policy=f"{variant} ({reason})", hw=hw,
         interpret=interpret, tiles=tiles,
         wins=None if wins is None else tuple(wins),
@@ -1078,11 +1136,60 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
         kckpts=kckpts,
         total_words=sum(int(np.prod(p.shape)) for p in mat.packs),
         _matref=weakref.ref(mat))
+    _quick_validate(mat, plan)
+    return plan
+
+
+def _quick_validate(mat: PackSELLMatrix, plan: SpMVPlan) -> None:
+    """Cheap build-time structural invariants (O(n) bincount + O(segments)
+    accounting — no word decode; the deep pass is
+    :meth:`SpMVPlan.validate`). A violation here is a construction bug,
+    never input data: raise immediately rather than hand the kernels a
+    plan that scatters out of bounds."""
+    outrow = np.asarray(plan.outrow_cat)
+    if len(outrow) != plan.total_stored:
+        raise ValueError(
+            f"plan build: outrow_cat length {len(outrow)} != total_stored "
+            f"{plan.total_stored}")
+    counts = np.bincount(outrow[outrow < plan.n], minlength=max(plan.n, 1))
+    if plan.n and (counts[:plan.n].min() < 1 or counts[:plan.n].max() > 1):
+        raise ValueError("plan build: outrow_cat is not a bijection onto "
+                         "[0, n)")
+    layout = plan.fused_layout
+    if plan.fused is not None and layout is not None:
+        w3, ck = plan.fused
+        if tuple(w3.shape) != (layout.groups, layout.wr, layout.C):
+            raise ValueError(
+                f"plan build: fused stream shape {tuple(w3.shape)} != "
+                f"layout ({layout.groups}, {layout.wr}, {layout.C})")
+        if tuple(ck.shape) != (layout.groups, layout.C):
+            raise ValueError(
+                f"plan build: fused checkpoint shape {tuple(ck.shape)} != "
+                f"({layout.groups}, {layout.C})")
+        g_sum = sum(seg.groups for seg in layout.segments)
+        if g_sum != layout.groups:
+            raise ValueError(
+                f"plan build: segment group accounting {g_sum} != "
+                f"{layout.groups}")
+        stored = sum(seg.stored for seg in layout.segments)
+        if stored != plan.total_stored:
+            raise ValueError(
+                f"plan build: segment stored accounting {stored} != "
+                f"{plan.total_stored}")
 
 
 _PLANS: dict = {}
 _STATS = {"hits": 0, "misses": 0, "evicted": 0}
 _TOKENS = itertools.count()
+
+
+def _plan_cache_cap() -> int:
+    """Plan-cache capacity (env-tunable so serving processes stay
+    bounded; read per call so tests can shrink it at runtime)."""
+    try:
+        return max(int(os.environ.get("REPRO_PLAN_CACHE_CAP", 256)), 1)
+    except ValueError:
+        return 256
 
 
 def _plan_token(mat: PackSELLMatrix) -> int:
@@ -1119,6 +1226,7 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     ent = _PLANS.get(key)
     if ent is not None and ent[0]() is mat:
         _STATS["hits"] += 1
+        _PLANS[key] = _PLANS.pop(key)       # move to MRU position
         return ent[1]
     plan = build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
                       interpret=interpret, decode_cache=decode_cache,
@@ -1130,6 +1238,13 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
 
     _PLANS[key] = (weakref.ref(mat, _drop), plan)
     _STATS["misses"] += 1
+    # LRU bound: a long-running serving process cycling many matrices must
+    # not grow without limit; an evicted plan rebuilds bit-identically
+    # (build_plan is deterministic in (mat, key))
+    cap = _plan_cache_cap()
+    while len(_PLANS) > cap:
+        _PLANS.pop(next(iter(_PLANS)))
+        _STATS["evicted"] += 1
     return plan
 
 

@@ -51,6 +51,9 @@ class PackSELLLinear:
     precision_plan: object = None     # precision.select.PrecisionPlan | None
     fingerprint: str | None = None
     from_store: bool = False
+    # retained pruned weight (CSR) — the self-healing rebuild source
+    # (serving warmup rebuilds unhealthy plans from it; DESIGN.md §11.4)
+    _csr: object = None               # scipy.sparse.csr_matrix | None
 
     @classmethod
     def from_dense(cls, w: np.ndarray, *, density: float = 0.3,
@@ -97,11 +100,25 @@ class PackSELLLinear:
         return cls(mat=mat, density=density,
                    dense_bytes=w.size * np.dtype(np.float32).itemsize,
                    precision_plan=pplan, fingerprint=fingerprint,
-                   from_store=from_store)
+                   from_store=from_store, _csr=csr)
 
     @property
     def plan(self) -> kplan.SpMVPlan:
         """The cached SpMVPlan (built once, shared by every decode tick)."""
+        return kplan.get_plan(self.mat)
+
+    def rebuild(self) -> kplan.SpMVPlan:
+        """Re-pack the matrix and plan from the retained pruned CSR —
+        the recovery path when the guard layer marks the live plan
+        unhealthy (bit flips in packed operands survive jit re-dispatch,
+        so only a fresh build clears them). Raises if the layer was
+        constructed without a retained CSR (e.g. unpickled from an old
+        snapshot)."""
+        if self._csr is None:
+            raise RuntimeError(
+                "PackSELLLinear.rebuild: no retained CSR on this layer")
+        self.mat = pk.from_csr(self._csr, C=self.mat.C, sigma=self.mat.sigma,
+                               D=self.mat.D, codec=self.mat.codec_name)
         return kplan.get_plan(self.mat)
 
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:

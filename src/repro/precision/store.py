@@ -21,16 +21,43 @@ cheaply via ``validate=True``.
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
 import tempfile
+import warnings
 
 import numpy as np
 import scipy.sparse as sp
 
 from . import analyze as an
 from . import select as se
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: locking degrades to a no-op
+    fcntl = None
+
+
+@contextlib.contextmanager
+def _file_lock(path: str):
+    """Advisory cross-process lock on ``path + '.lock'`` (flock): two
+    processes autotuning against one store serialize their
+    read-modify-write cycles instead of losing each other's entries.
+    No-op where fcntl is unavailable."""
+    if fcntl is None:
+        yield
+        return
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    lockpath = path + ".lock"
+    with open(lockpath, "w") as lf:
+        fcntl.flock(lf.fileno(), fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lf.fileno(), fcntl.LOCK_UN)
 
 
 def matrix_fingerprint(a: sp.csr_matrix) -> str:
@@ -77,32 +104,68 @@ class PrecisionStore:
         return cls(store_or_path)
 
     # -- persistence -------------------------------------------------------
-    def load(self) -> None:
-        if os.path.exists(self.path):
+    def _quarantine(self, why: str) -> dict:
+        """Move an unreadable store aside (``*.corrupt``) and start fresh
+        — a truncated or garbled file must not take selection down with
+        it; the quarantined copy is kept for post-mortems."""
+        quarantine = self.path + ".corrupt"
+        try:
+            os.replace(self.path, quarantine)
+        except OSError:
+            quarantine = "<could not move>"
+        warnings.warn(
+            f"precision store {self.path} is unreadable ({why}); "
+            f"quarantined to {quarantine}, starting with an empty store",
+            RuntimeWarning, stacklevel=4)
+        return {}
+
+    def _read_entries(self) -> dict:
+        if not os.path.exists(self.path):
+            return {}
+        try:
             with open(self.path) as f:
                 blob = json.load(f)
-            if blob.get("version", 1) != self.VERSION:
-                raise ValueError(
-                    f"precision store {self.path} has version "
-                    f"{blob.get('version')}, expected {self.VERSION}")
-            self._entries = blob.get("entries", {})
-        else:
-            self._entries = {}
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            return self._quarantine(str(e))
+        if not isinstance(blob, dict) \
+                or not isinstance(blob.get("entries", {}), dict):
+            return self._quarantine("top-level JSON is not a store object")
+        if blob.get("version", 1) != self.VERSION:
+            raise ValueError(
+                f"precision store {self.path} has version "
+                f"{blob.get('version')}, expected {self.VERSION}")
+        return blob.get("entries", {})
+
+    def load(self) -> None:
+        with _file_lock(self.path):
+            self._entries = self._read_entries()
 
     def save(self) -> None:
-        """Atomic write: tmp file in the same directory + os.replace."""
-        blob = {"version": self.VERSION, "entries": self._entries}
+        """Atomic write (tmp file + ``os.replace``) under the advisory
+        ``*.lock`` file. Disk entries another process added since our
+        load are merged back in first (ours win per key), so concurrent
+        autotuners don't silently drop each other's selections."""
         d = os.path.dirname(os.path.abspath(self.path)) or "."
         os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(blob, f, indent=1, default=float)
-            os.replace(tmp, self.path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        with _file_lock(self.path):
+            for fp, ent in self._read_entries().items():
+                mine = self._entries.setdefault(fp, {})
+                for k, v in ent.items():
+                    if k == "retile" and isinstance(mine.get(k), dict):
+                        for rk, rv in v.items():
+                            mine[k].setdefault(rk, rv)
+                    else:
+                        mine.setdefault(k, v)
+            blob = {"version": self.VERSION, "entries": self._entries}
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(blob, f, indent=1, default=float)
+                os.replace(tmp, self.path)
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
 
     # -- precision plans ---------------------------------------------------
     def __len__(self) -> int:

@@ -1,0 +1,37 @@
+"""Guarded execution: fault injection, ABFT checksum guards, recovery.
+
+The paper's pitch — aggressive sub-32-bit packing on the hot path of
+long-running PCG solves — is exactly the regime where a flipped bit in a
+packed word stream, a NaN-poisoned input, or a corrupted autotune store
+silently destroys a solve. This subsystem makes the other five survive
+faults (DESIGN.md §11):
+
+* :mod:`repro.robust.inject` — seeded, deterministic fault injectors for
+  every execution path (plan / composite / distributed operands, input
+  vectors, the precision store file);
+* :mod:`repro.robust.guard` — structural ``validate()`` passes plus the
+  ABFT checksum guard (``c = eᵀA`` at build, ``c·x`` vs ``sum(y)`` in
+  fp64 + an exact mod-2³² stream checksum inside the jitted dispatch);
+* :mod:`repro.robust.recover` — ``guarded_solve``: PCG/refinement with
+  per-step guard checks and a bounded escalation policy (retry → promote
+  precision tier → rebuild from the retained CSR → fp32 reference),
+  recording a machine-readable recovery log.
+"""
+from .guard import (GuardState, IntegrityError, build_guard, checksum,
+                    guarded_spmv, is_healthy, mark_unhealthy, plan_health,
+                    validate_composite, validate_matrix, validate_plan)
+from .inject import (Injection, corrupt_composite_word,
+                     corrupt_dist_checkpoint, corrupt_fused_checkpoint,
+                     corrupt_permutation, corrupt_store, flip_fused_word,
+                     flip_pack_word, poison_x)
+from .recover import GuardedSolveInfo, guarded_solve
+
+__all__ = [
+    "GuardState", "IntegrityError", "build_guard", "checksum",
+    "guarded_spmv", "is_healthy", "mark_unhealthy", "plan_health",
+    "validate_composite", "validate_matrix", "validate_plan",
+    "Injection", "corrupt_composite_word", "corrupt_dist_checkpoint",
+    "corrupt_fused_checkpoint", "corrupt_permutation", "corrupt_store",
+    "flip_fused_word", "flip_pack_word", "poison_x",
+    "GuardedSolveInfo", "guarded_solve",
+]

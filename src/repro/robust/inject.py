@@ -1,0 +1,380 @@
+"""Seeded, deterministic fault injectors for every execution path.
+
+Each injector corrupts ONE operand of a live plan (copy-modify-replace —
+jax arrays are immutable), returns an :class:`Injection` describing what
+changed and whether the corruption is provably **value-neutral** (y is
+bit-identical for every finite x — e.g. a bit flip inside a padding word,
+or a delta-field flip under the 'full' cursor cache, whose columns were
+decoded at build time). The neutrality oracle is exact: it compares the
+corrupted operand's per-row coefficient vectors against the originals
+under the same clip semantics the runtime gather uses.
+
+Injectors never invalidate a plan's jitted dispatch functions — operands
+flow through the dispatch as jit *arguments*, which is precisely why a
+corrupted buffer reaches the kernel (and why the guard must checksum the
+buffers, not trust the trace). Only the plan's cached operand dict
+(``_fns['_dev']``) is refreshed so the next call ships the corrupted
+arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codecs as cd
+from repro.core import packsell as pk
+
+from .guard import _decode_stream_np
+
+
+@dataclasses.dataclass
+class Injection:
+    """One injected fault: what was corrupted, where, and whether it can
+    change any SpMV result (``value_neutral=False`` ⇒ some finite x sees a
+    different y). ``undo()`` restores the original operand."""
+
+    target: str                       # 'fused_word' | 'ckpt' | 'perm' | ...
+    detail: dict
+    value_neutral: bool
+    _undo: Optional[Callable[[], None]] = None
+    undone: bool = False
+
+    def undo(self) -> None:
+        if not self.undone and self._undo is not None:
+            self._undo()
+        self.undone = True
+
+
+def _refresh(plan) -> None:
+    plan._fns.pop("_dev", None)
+
+
+def _decode_word(word: np.uint32, mat, layout):
+    """(value float64, run-local offset int) of one fused-stream word."""
+    v, local = _decode_stream_np(
+        np.asarray(word, np.uint32).reshape(1, 1, 1), mat, layout)
+    return float(v[0, 0, 0]), int(local[0, 0, 0])
+
+
+def _lane_coeff_fused(words, ck_val: int, mat, layout, m: int):
+    """Coefficient vector of one fused group lane: coeff[col] = Σ v over
+    the lane's words (runtime clip semantics). Equal coefficient vectors
+    ⇔ identical y for every finite x."""
+    w3 = np.asarray(words, np.uint32).reshape(1, -1, 1)
+    v, local = _decode_stream_np(w3, mat, layout)
+    cols = np.clip(ck_val + local[0, :, 0], 0, max(m - 1, 0))
+    coeff = np.zeros(max(m, 1), np.float64)
+    contrib = v[0, :, 0] != 0
+    np.add.at(coeff, cols[contrib], v[0, :, 0][contrib])
+    return coeff
+
+
+def _lane_coeff_pack(words, d0_val: int, codec, D, m: int,
+                     cols_override=None):
+    """Coefficient vector of one bucketed-pack lane (scan/checkpoint
+    decode: columns re-derived from the deltas; 'full' cursor cache:
+    ``cols_override`` pins the build-time columns)."""
+    v, d, flag = cd.unpack_words_np(np.asarray(words, np.uint32), codec, D)
+    if cols_override is None:
+        cols = d0_val + np.cumsum(d.astype(np.int64))
+    else:
+        cols = cols_override
+    cols = np.clip(cols, 0, max(m - 1, 0))
+    coeff = np.zeros(max(m, 1), np.float64)
+    f1 = flag == 1
+    np.add.at(coeff, cols[f1], v[f1].astype(np.float64))
+    return coeff, cols
+
+
+def _coeff_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    # array_equal is False on NaN: a corruption that decodes NaN is
+    # value-affecting by definition
+    return bool(np.array_equal(a, b))
+
+
+# ---------------------------------------------------------------------------
+# SpMVPlan operand injectors
+# ---------------------------------------------------------------------------
+
+
+def flip_fused_word(mat, plan, seed: int, *, bit: int | None = None,
+                    pos: tuple | None = None) -> Injection:
+    """Flip one bit of one word of the fused ragged stream. Fused columns
+    are checkpoint-absolute (no carry across words), so exactly one
+    (value, column) pair changes — the neutrality oracle compares just
+    that pair."""
+    if plan.fused is None:
+        raise ValueError("plan has no fused stream to corrupt")
+    rng = np.random.default_rng(seed)
+    orig = plan.fused
+    w_np = np.asarray(orig[0]).copy()
+    G, wr, C = w_np.shape
+    if w_np.size == 0:
+        raise ValueError("fused stream is empty")
+    g, j, c = (pos if pos is not None else
+               (int(rng.integers(G)), int(rng.integers(wr)),
+                int(rng.integers(C))))
+    b = int(rng.integers(32)) if bit is None else int(bit)
+    old = np.uint32(w_np[g, j, c])
+    new = np.uint32(old ^ np.uint32(1 << b))
+    w_np[g, j, c] = new
+    ck_val = int(np.asarray(orig[1])[g, c])
+    layout = plan.fused_layout
+    vo, lo = _decode_word(old, mat, layout)
+    vn, ln = _decode_word(new, mat, layout)
+    mlim = max(plan.m - 1, 0)
+    neutral = bool(
+        (vo == 0.0 and vn == 0.0)
+        or (vo == vn and np.isfinite(vn)
+            and min(max(ck_val + lo, 0), mlim)
+            == min(max(ck_val + ln, 0), mlim)))
+
+    plan.fused = (jnp.asarray(w_np), orig[1])
+    _refresh(plan)
+
+    def undo():
+        plan.fused = orig
+        _refresh(plan)
+
+    return Injection("fused_word",
+                     dict(pos=(g, j, c), bit=b, old=int(old), new=int(new),
+                          v_old=vo, v_new=vn, seed=seed),
+                     neutral, undo)
+
+
+def corrupt_fused_checkpoint(mat, plan, seed: int) -> Injection:
+    """Shift one cursor checkpoint by a random nonzero offset — every word
+    of that group lane then gathers from the wrong columns. Neutral only
+    when the lane carries no contributing word (all padding) or the clip
+    happens to map every contributing column identically."""
+    if plan.fused is None:
+        raise ValueError("plan has no fused checkpoints to corrupt")
+    rng = np.random.default_rng(seed)
+    orig = plan.fused
+    ck_np = np.asarray(orig[1]).copy()
+    G, C = ck_np.shape
+    if ck_np.size == 0:
+        raise ValueError("fused checkpoint array is empty")
+    g, c = int(rng.integers(G)), int(rng.integers(C))
+    delta = int(rng.integers(1, max(plan.m, 2))) * (1 if rng.random() < 0.5
+                                                    else -1)
+    old = int(ck_np[g, c])
+    ck_np[g, c] = np.int32(old + delta)
+    lane = np.asarray(orig[0])[g, :, c]
+    co = _lane_coeff_fused(lane, old, mat, plan.fused_layout, plan.m)
+    cn = _lane_coeff_fused(lane, old + delta, mat, plan.fused_layout,
+                           plan.m)
+    plan.fused = (orig[0], jnp.asarray(ck_np))
+    _refresh(plan)
+
+    def undo():
+        plan.fused = orig
+        _refresh(plan)
+
+    return Injection("ckpt", dict(pos=(g, c), old=old, delta=delta,
+                                  seed=seed),
+                     _coeff_equal(co, cn), undo)
+
+
+def flip_pack_word(mat, plan, seed: int, *, bit: int | None = None) -> \
+        Injection:
+    """Flip one bit of one bucketed pack word (the non-fused execution
+    paths: 'full' cursor cache, scan decode, Pallas buckets). Under the
+    'full' cache the columns were decoded at build time, so delta-field
+    corruption is value-neutral — only payload/flag changes reach y; the
+    oracle accounts for the plan's cache mode."""
+    rng = np.random.default_rng(seed)
+    sizes = [int(np.prod(p.shape)) for p in mat.packs]
+    if not sizes or sum(sizes) == 0:
+        raise ValueError("matrix has no packed words")
+    bkt = int(rng.choice(len(sizes), p=np.asarray(sizes, np.float64)
+                         / sum(sizes)))
+    words = np.asarray(mat.packs[bkt]).copy()
+    S, w, C = words.shape
+    s, j, c = (int(rng.integers(S)), int(rng.integers(w)),
+               int(rng.integers(C)))
+    b = int(rng.integers(32)) if bit is None else int(bit)
+    old_lane = words[s, :, c].copy()
+    words[s, j, c] = np.uint32(words[s, j, c] ^ np.uint32(1 << b))
+    new_lane = words[s, :, c]
+    d0_val = int(np.asarray(mat.d0s[bkt])[s])
+    full_cache = plan.cache_mode == "full" and plan.cols is not None
+    co, cols_old = _lane_coeff_pack(old_lane, d0_val, mat.codec, mat.D,
+                                    mat.m)
+    cn, _ = _lane_coeff_pack(new_lane, d0_val, mat.codec, mat.D, mat.m,
+                             cols_override=cols_old if full_cache else None)
+    orig_packs = mat.packs
+    packs = list(mat.packs)
+    packs[bkt] = jnp.asarray(words) if not isinstance(
+        orig_packs[bkt], np.ndarray) else words
+    mat.packs = tuple(packs)
+    _refresh(plan)
+
+    def undo():
+        mat.packs = orig_packs
+        _refresh(plan)
+
+    return Injection("pack_word",
+                     dict(bucket=bkt, pos=(s, j, c), bit=b, seed=seed,
+                          cache_mode=plan.cache_mode),
+                     _coeff_equal(co, cn), undo)
+
+
+def corrupt_permutation(mat, plan, seed: int) -> Injection:
+    """Swap two rows of the inverse σ-permutation — y's entries for those
+    rows trade places. Sum-invariant, so the analytic ABFT identity alone
+    cannot see it; the operand checksum catches it exactly. Neutral only
+    when the two matrix rows are identical (then the swap is a no-op on
+    y)."""
+    if plan.n < 2:
+        raise ValueError("need n >= 2 to swap permutation rows")
+    rng = np.random.default_rng(seed)
+    r1, r2 = rng.choice(plan.n, size=2, replace=False)
+    r1, r2 = int(r1), int(r2)
+    orig_inv, orig_inv2 = plan.inv_cat, plan.inv2_cat
+    if orig_inv is None and orig_inv2 is None:
+        raise ValueError("plan carries no inverse permutation")
+    if orig_inv is not None:
+        inv = np.asarray(orig_inv).copy()
+        inv[[r1, r2]] = inv[[r2, r1]]
+        plan.inv_cat = jnp.asarray(inv)
+    if orig_inv2 is not None:
+        inv2 = np.asarray(orig_inv2).copy()
+        inv2[[r1, r2]] = inv2[[r2, r1]]
+        plan.inv2_cat = jnp.asarray(inv2)
+    _refresh(plan)
+    dense = pk.decode_to_dense(mat)
+    neutral = bool(np.array_equal(dense[r1], dense[r2]))
+
+    def undo():
+        plan.inv_cat = orig_inv
+        plan.inv2_cat = orig_inv2
+        _refresh(plan)
+
+    return Injection("perm", dict(rows=(r1, r2), seed=seed), neutral, undo)
+
+
+# ---------------------------------------------------------------------------
+# Input / halo poisoning
+# ---------------------------------------------------------------------------
+
+
+def poison_x(x, seed: int, mode: str = "nan"):
+    """Poison one entry of an input (or halo-travelling) vector with
+    NaN/Inf. Returns ``(x_poisoned, Injection)`` — the original is not
+    modified, so no undo is needed."""
+    if mode not in ("nan", "inf"):
+        raise ValueError(f"mode={mode!r} not in ('nan', 'inf')")
+    rng = np.random.default_rng(seed)
+    xp = np.asarray(x, np.float64).copy()
+    if xp.size == 0:
+        raise ValueError("cannot poison an empty vector")
+    i = int(rng.integers(xp.size))
+    xp.reshape(-1)[i] = np.nan if mode == "nan" else np.inf
+    return xp, Injection("x", dict(index=i, mode=mode, seed=seed), False)
+
+
+# ---------------------------------------------------------------------------
+# Precision-store corruption (satellite: store must survive this)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_store(path: str, seed: int, mode: str = "truncate") -> \
+        Injection:
+    """Truncate or garble the on-disk precision-store JSON (simulating a
+    crashed writer / bad sector). Undo restores the original bytes."""
+    if mode not in ("truncate", "garble"):
+        raise ValueError(f"mode={mode!r} not in ('truncate', 'garble')")
+    rng = np.random.default_rng(seed)
+    with open(path, "rb") as f:
+        orig = f.read()
+    if mode == "truncate":
+        cut = int(rng.integers(1, max(len(orig), 2)))
+        bad = orig[:cut]
+    else:
+        bad = bytearray(orig if orig else b"{")
+        for _ in range(max(1, len(bad) // 16)):
+            bad[int(rng.integers(len(bad)))] = int(rng.integers(256))
+        bad = bytes(bad)
+    with open(path, "wb") as f:
+        f.write(bad)
+
+    def undo():
+        with open(path, "wb") as f:
+            f.write(orig)
+
+    return Injection("store", dict(path=os.fspath(path), mode=mode,
+                                   nbytes=len(bad), seed=seed),
+                     False, undo)
+
+
+# ---------------------------------------------------------------------------
+# Distributed / composite operand injectors
+# ---------------------------------------------------------------------------
+
+
+def corrupt_dist_checkpoint(dplan, seed: int) -> Injection:
+    """Shift one cursor checkpoint inside a DistSpMVPlan's stacked device
+    operands (a ``*_fckpt`` leaf). The solvers pass ``dplan.dev`` into the
+    shard_map dispatch per call, so the corrupted leaf reaches the kernels
+    without any re-bind."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    keys = sorted(k for k in dplan.dev if k.endswith("_fckpt"))
+    if not keys:
+        raise ValueError("dist plan has no fused checkpoint operands")
+    rng = np.random.default_rng(seed)
+    key = keys[int(rng.integers(len(keys)))]
+    orig = dplan.dev[key]
+    arr = np.asarray(orig).copy()
+    i = int(rng.integers(arr.size))
+    delta = int(rng.integers(1, max(int(dplan.m) if hasattr(dplan, "m")
+                                    else 2 ** 15, 2)))
+    flat = arr.reshape(-1)
+    old = int(flat[i])
+    flat[i] = np.int32(old + delta)
+    shard = NamedSharding(dplan.mesh, P(dplan.axis_name))
+    dplan.dev[key] = jax.device_put(arr, shard)
+
+    def undo():
+        dplan.dev[key] = orig
+
+    return Injection("dist_ckpt", dict(key=key, index=i, old=old,
+                                       delta=delta, seed=seed),
+                     False, undo)
+
+
+def corrupt_composite_word(comp, member: int, seed: int) -> Injection:
+    """Flip a word inside one member block of a CompositePlan and
+    invalidate the composite's concatenated stream copy so the corruption
+    reaches the composite dispatch."""
+    mem = comp.members[member]
+    if mem.plan is None:
+        raise ValueError(f"member {member} ({mem.label}) is not a "
+                         f"PackSELL block")
+
+    def _invalidate():
+        comp._cat = None
+        comp._cat_built = False
+
+    if mem.plan.fused is not None:
+        inj = flip_fused_word(mem.mat, mem.plan, seed)
+    else:
+        inj = flip_pack_word(mem.mat, mem.plan, seed)
+    _invalidate()
+    inner_undo = inj._undo
+
+    def undo():
+        if inner_undo is not None:
+            inner_undo()
+        _invalidate()
+
+    inj._undo = undo
+    inj.detail["member"] = member
+    inj.target = "composite_" + inj.target
+    return inj

@@ -1,0 +1,188 @@
+"""Self-healing solves: guarded PCG with a bounded escalation policy.
+
+``guarded_solve`` is a host-driven iterative-refinement outer loop whose
+inner correction solves run on a packed (guarded) operator. After every
+outer step it checks three things: the ABFT checksum guard on the plan's
+operands (:func:`~repro.robust.guard.guarded_spmv`), finiteness of the
+fp64 *true* residual (computed against the retained CSR on the host —
+never through the operator under suspicion), and divergence. On
+detection it escalates through a bounded policy (DESIGN.md §11.3):
+
+1. **retry**   — revert x to the last accepted iterate, re-run the step
+   (heals transient faults);
+2. **promote** — step up the PR-3 precision ladder
+   (``precision.select.tier_ladder``): the next tier's operand is built
+   fresh from the retained CSR, so promotion both heals persistent
+   operand corruption and buys accuracy;
+3. **rebuild** — rebuild the CURRENT kind's operand from the retained
+   CSR (the ladder is exhausted but the codec was fine);
+4. **fp32**    — fall back to the uncompressed fp32 reference operator
+   (terminal: no packed operand left to corrupt).
+
+Each escalation appends a machine-readable record to the recovery log,
+and every tripped plan is marked unhealthy
+(:func:`~repro.robust.guard.mark_unhealthy`) so the serving engine
+rebuilds it before reuse.
+"""
+from __future__ import annotations
+
+import types
+from typing import Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.solvers import cg
+from repro.solvers import operators as op
+
+from . import guard as gd
+
+
+class GuardedSolveInfo(NamedTuple):
+    """Outcome of :func:`guarded_solve` (host values)."""
+
+    iters: int              # accepted outer steps
+    relres: float           # final TRUE relative residual ||b - Ax|| / ||b||
+    history: np.ndarray     # true relres per accepted step
+    log: list               # recovery log: [{step, event, action, detail}]
+    final_kind: str         # operator kind that finished the solve
+    trips: int              # total guard detections
+
+
+def promotion_ladder(kind: str) -> list:
+    """Operator kinds from ``kind`` up the PR-3 precision ladder
+    (``tier_ladder`` over the kind's codec), ending at ``'fp32'``."""
+    from repro.precision import select as psel
+
+    spec = op.parse_kind(kind)
+    if spec.family != "plan":
+        raise ValueError(
+            f"guarded_solve needs a plan_<codec> kind, got {kind!r}")
+    shim = types.SimpleNamespace(
+        primary=psel.PrecisionClass(spec.codec, spec.D))
+    return [kind if c.codec == spec.codec and c.D == spec.D
+            else psel.operator_kind(c)
+            for c in psel.tier_ladder(shim)]
+
+
+def _correction(matvec, r, dinv, m_in: int):
+    """m_in fixed PCG iterations on A d = r from d0 = 0 (Jacobi)."""
+    d, _ = cg.pcg(matvec, jnp.asarray(r), M=lambda rr: rr * dinv,
+                  tol=0.0, maxiter=m_in, dtype=jnp.float64)
+    return np.asarray(d, np.float64)
+
+
+def guarded_solve(ops: op.OperatorSet, kind: str, b, *,
+                  tol: float = 1e-9, maxiter: int = 60, m_in: int = 16,
+                  on_step: Optional[Callable[[int, dict], None]] = None
+                  ) -> tuple[np.ndarray, GuardedSolveInfo]:
+    """Solve ``A x = b`` to the TRUE relative residual ``tol`` on a
+    guarded packed operator, surviving operand corruption and poisoned
+    inputs via the bounded escalation policy above.
+
+    ``ops`` retains the source CSR — the rebuild escalations and the
+    host-side true-residual checks both read it. ``kind`` is a
+    ``plan_<codec>`` kind (a leading ``'guarded:'`` prefix is accepted
+    and stripped — guarding is implied here). ``on_step(step, ctx)`` runs
+    before each outer step with ``ctx = {mat, plan, guard, x, kind}`` —
+    the fault-injection hook the robustness tests and benchmarks use.
+    """
+    if kind.startswith("guarded:"):
+        kind = kind[len("guarded:"):]
+    ladder = promotion_ladder(kind)
+
+    a64 = ops.csr.tocsr().astype(np.float64)
+    b = np.asarray(b, np.float64)
+    bnorm = float(np.linalg.norm(b))
+    bnorm = bnorm if bnorm > 0 else 1.0
+    diag = np.asarray(ops.diag(), np.float64)
+    dinv = jnp.asarray(np.where(diag == 0, 1.0, 1.0 / diag))
+
+    def _bind(k: str):
+        """(matvec, mat, plan, guard) for a ladder kind ('fp32': no
+        guard — the reference operator has no packed operands)."""
+        if k == "fp32":
+            return ops.matvec("fp32"), None, None, None
+        mat, plan = ops.plan_pair(k)
+        fn = lambda v: plan.spmv(mat, v)
+        return fn, mat, plan, gd.build_guard(mat, plan)
+
+    tier = 0
+    cur = ladder[tier]
+    matvec, mat, plan, gs = _bind(cur)
+
+    x = np.zeros(a64.shape[0], np.float64)
+    r = b - a64 @ x
+    relres = float(np.linalg.norm(r)) / bnorm
+    hist = [relres]
+    log: list = []
+    trips = 0
+    attempts = 0          # consecutive detections (escalation state)
+    rebuilt = False
+    steps = 0
+
+    for outer in range(maxiter):
+        if relres < tol:
+            break
+        # snapshot the accepted iterate: a fault that poisons the live x
+        # (ctx['x'] is the real array) must not destroy the revert target
+        x_snap = x.copy()
+        if on_step is not None:
+            on_step(outer, dict(mat=mat, plan=plan, guard=gs, x=x,
+                                kind=cur))
+
+        d = _correction(matvec, r, dinv, m_in)
+        x_new = x + d
+        r_new = b - a64 @ x_new
+        rel_new = float(np.linalg.norm(r_new)) / bnorm
+
+        # -- detection --------------------------------------------------
+        event = None
+        if gs is not None:
+            _, ok, rel_err = gd.guarded_spmv(mat, plan, gs, jnp.asarray(d))
+            if not bool(ok):
+                event = ("guard_trip",
+                         dict(rel_err=float(np.asarray(rel_err))))
+        if event is None and not np.all(np.isfinite(r_new)):
+            event = ("nonfinite_residual", {})
+        if event is None and np.isfinite(rel_new) \
+                and rel_new > 10.0 * max(relres, tol):
+            event = ("divergence", dict(relres=rel_new))
+
+        if event is None:
+            x, r, relres = x_new, r_new, rel_new
+            hist.append(relres)
+            steps += 1
+            attempts = 0
+            continue
+
+        # -- escalation -------------------------------------------------
+        trips += 1
+        attempts += 1
+        x = x_snap                          # revert to the last good iterate
+        r = b - a64 @ x
+        relres = float(np.linalg.norm(r)) / bnorm
+        if plan is not None:
+            gd.mark_unhealthy(plan, event[0])
+        if attempts == 1:
+            action, detail = "retry", dict(kind=cur)
+        elif tier + 1 < len(ladder) - 1:
+            tier += 1
+            cur = ladder[tier]
+            matvec, mat, plan, gs = _bind(cur)
+            action, detail = "promote", dict(kind=cur)
+        elif not rebuilt and cur != "fp32":
+            rebuilt = True
+            ops._cache.pop(cur, None)       # force a fresh from_csr build
+            matvec, mat, plan, gs = _bind(cur)
+            action, detail = "rebuild", dict(kind=cur)
+        else:
+            tier = len(ladder) - 1
+            cur = ladder[tier]              # 'fp32'
+            matvec, mat, plan, gs = _bind(cur)
+            action, detail = "fp32_fallback", dict(kind=cur)
+        log.append(dict(step=outer, event=event[0], action=action,
+                        detail={**event[1], **detail}))
+
+    return x, GuardedSolveInfo(steps, relres, np.asarray(hist), log, cur,
+                               trips)

@@ -166,6 +166,18 @@ class DecodeEngine:
             jax.block_until_ready(logits)
         for i, lin in enumerate(spec.sparse_layers):
             desc = lin.describe() if hasattr(lin, "describe") else {}
+            # self-healing: a plan the guard layer marked unhealthy (ABFT
+            # checksum trip, validation failure) is rebuilt from the
+            # layer's retained CSR before any decode tick reuses it —
+            # corrupted packed operands survive jit re-dispatch otherwise
+            if hasattr(lin, "plan") and hasattr(lin, "rebuild"):
+                from repro.robust import guard as _guard
+                health = _guard.plan_health(lin.plan)
+                if health is not None:
+                    log.warning(
+                        "warmup: layer %d plan unhealthy (%s) — rebuilding "
+                        "from retained CSR", i, health)
+                    lin.rebuild()
             if store is not None and desc.get("fingerprint"):
                 key = f"plan_{desc['codec']}{desc['D']}"
                 if store.apply_retile(desc["fingerprint"], key, lin.plan):

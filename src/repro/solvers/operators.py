@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
@@ -56,8 +57,8 @@ DENSE_KINDS = ("fp64", "fp32", "fp16", "bf16")
 KIND_MENU = (
     "fp64 | fp32 | fp16 | bf16 | csr64 | packsell_<codec> | plan_<codec> "
     "| dist_<codec> | auto:<budget> | mixed:<budget> | dist_auto:<budget> "
-    "| dist_mixed:<budget>   (<codec>: fp16 | bf16 | e8m<D>, e.g. e8m8; "
-    "<budget>: a positive float, e.g. 1e-3)")
+    "| dist_mixed:<budget> | guarded:plan_<codec>   (<codec>: fp16 | bf16 "
+    "| e8m<D>, e.g. e8m8; <budget>: a positive float, e.g. 1e-3)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +77,7 @@ class KindSpec:
     codec: Optional[str] = None     # codec families
     D: Optional[int] = None
     budget: Optional[float] = None  # budget families
+    inner: Optional["KindSpec"] = None  # 'guarded:' wraps a plan_ kind
 
     @property
     def distributed(self) -> bool:
@@ -118,6 +120,15 @@ def parse_kind(kind: str) -> KindSpec:
         return KindSpec(kind, "dense", codec=kind)
     if kind == "csr64":
         return KindSpec(kind, "csr64")
+    if kind.startswith("guarded:"):
+        inner = parse_kind(kind[len("guarded:"):])
+        if inner.family != "plan":
+            raise ValueError(
+                f"guarded: wraps plan_<codec> kinds only (ABFT checksums "
+                f"need the plan engine's packed operands), got "
+                f"{inner.raw!r} in {kind!r}; valid kinds: {KIND_MENU}")
+        return KindSpec(kind, "guarded", codec=inner.codec, D=inner.D,
+                        inner=inner)
     for family in ("dist_auto", "dist_mixed", "auto", "mixed"):
         if kind.startswith(family + ":"):
             return KindSpec(kind, family,
@@ -250,6 +261,30 @@ class OperatorSet:
         elif spec.family == "csr64":
             mat = sps.csr_from_scipy(self.csr, "float64")
             fn = lambda x, mat=mat: mat.spmv(x, jnp.float64)
+        elif spec.family == "guarded":
+            # 'guarded:plan_<codec>' — the inner plan engine with the ABFT
+            # checksum guard run on every host-level call. Tracers pass
+            # through unguarded (inside jit the caller owns detection);
+            # tripped calls mark the plan unhealthy and count in
+            # ``fn.trips()``. ``fn.guard`` / ``fn.pair`` expose the
+            # GuardState and (mat, plan) for solvers and tests.
+            from repro.robust import guard as gd
+            mat, p = self.plan_pair(spec.inner.raw)
+            gs = gd.build_guard(mat, p)
+            state = {"trips": 0}
+
+            def fn(x, mat=mat, p=p, gs=gs, state=state):
+                if isinstance(x, jax.core.Tracer):
+                    return p.spmv(mat, x)
+                y, ok, _ = gd.guarded_spmv(mat, p, gs, x)
+                if not bool(ok):
+                    state["trips"] += 1
+                    gd.mark_unhealthy(p, "guard_trip")
+                return y
+
+            fn.guard = gs
+            fn.pair = (mat, p)
+            fn.trips = lambda state=state: state["trips"]
         elif spec.family == "auto":
             # budget-driven global selection ('auto:1e-3') — delegates to
             # the selected codec's plan_ kind (or fp32 fallback)

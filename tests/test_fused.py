@@ -207,10 +207,13 @@ def test_fused_matches_per_bucket_oracle_spmv_spmm():
         np.asarray(packsell.packsell_spmm_jnp(mat, X)))
 
 
-def test_two_member_composite_fused_stream():
+def test_two_member_composite_fused_stream(monkeypatch):
     """Row-class composite: ONE concatenated word-stream operand feeds
     both members; outputs match the dense per-class oracle and the
-    execute_with (per-member operands) path bit-for-bit."""
+    execute_with (per-member operands) path bit-for-bit. The fused cat
+    stream only exists in checkpoint mode, so pin it (the CI loop runs
+    this module under all three cursor-cache modes)."""
+    monkeypatch.setenv("REPRO_PLAN_CURSOR_CACHE", "checkpoint")
     a = _int_csr(80, 80, 6, seed=17)
     rows = np.arange(80)
     classes = [("fp16", 15, rows[: 40]), ("bf16", 12, rows[40:])]
