@@ -2,8 +2,9 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test verify verify-dist verify-precision verify-composite \
-	verify-fused verify-robust bench bench-spmv bench-dist \
-	bench-precision bench-composite bench-robust
+	verify-fused verify-robust verify-observe bench bench-spmv \
+	bench-dist bench-precision bench-composite bench-robust \
+	bench-roofline
 
 test:
 	python -m pytest -x -q
@@ -51,6 +52,15 @@ verify-robust:
 		python -m pytest -x -q tests/test_robust.py -k "dist"
 	python -m benchmarks.run --only robust --scale tiny
 
+# flight recorder (DESIGN.md §12): registry + parity + serving tests
+# with the recorder ON (tier-1 runs them with it off), the dist parity
+# case under 4 simulated devices, and the <3% dispatch-overhead gate
+verify-observe:
+	REPRO_OBS=1 python -m pytest -x -q tests/test_observe.py
+	XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+		python -m pytest -x -q tests/test_observe.py -k "dist"
+	python scripts/check_observe_overhead.py
+
 bench:
 	python -m benchmarks.run
 
@@ -74,3 +84,8 @@ bench-composite:
 # (small scale)
 bench-robust:
 	python -m benchmarks.run --only robust --scale small
+
+# regenerate the checked-in roofline scoreboard (tiny suite × codecs,
+# achieved-vs-peak + HLO cross-check + embedded observe report)
+bench-roofline:
+	python -m benchmarks.run --only roofline --scale tiny

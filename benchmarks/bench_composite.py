@@ -131,10 +131,7 @@ def _child(scale: str) -> None:
               "to watch (must not drift with P)"),
         rows=common.rows(),
     )
-    with open(_JSON_PATH, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    print(f"[bench_composite] wrote {_JSON_PATH}")
+    common.save_bench_json(_JSON_PATH, payload)
 
 
 if __name__ == "__main__":

@@ -139,10 +139,7 @@ def _child(scale: str) -> None:
               "interconnect bandwidth; speedup_vs_p1 = t(P=1)/t(P)"),
         rows=common.rows(),
     )
-    with open(_JSON_PATH, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    print(f"[bench_distributed] wrote {_JSON_PATH}")
+    common.save_bench_json(_JSON_PATH, payload)
 
 
 if __name__ == "__main__":

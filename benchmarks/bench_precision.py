@@ -159,7 +159,4 @@ def run(scale: str | None = None) -> None:
               "full-FP32 PCG (both to 1e-8)"),
         frontier=frontier, adaptive=traces,
     )
-    with open(_JSON_PATH, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    print(f"[bench_precision] wrote {_JSON_PATH}")
+    common.save_bench_json(_JSON_PATH, payload)

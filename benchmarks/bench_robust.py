@@ -201,11 +201,8 @@ def run(scale: str | None = None) -> None:
     for name, a in tiny.items():
         _recovery(name, a)
 
-    import json
     rows = [r for r in common.rows() if r["bench"].startswith("robust")]
-    with open(_JSON_PATH, "w") as f:
-        json.dump(rows, f, indent=1, default=float)
-    print(f"[bench_robust] wrote {len(rows)} rows -> {_JSON_PATH}")
+    common.save_bench_json(_JSON_PATH, rows)
 
 
 if __name__ == "__main__":

@@ -205,7 +205,4 @@ def run(scale: str | None = None) -> None:
               "stream (checkpoints vs one int32 cursor per word)"),
         cases=engine_rows,
     )
-    with open(_JSON_PATH, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
-        f.write("\n")
-    print(f"[bench_spmv] wrote {_JSON_PATH}")
+    common.save_bench_json(_JSON_PATH, payload)

@@ -9,14 +9,77 @@ from __future__ import annotations
 
 import json
 import os
+import platform
+import subprocess
 import time
+from datetime import datetime, timezone
 
 import jax
 import numpy as np
 
 SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")   # tiny|small|medium
 
+#: BENCH_*.json metadata-header schema. Bump when header fields change
+#: meaning — trajectory tooling compares runs only within a schema version.
+BENCH_SCHEMA_VERSION = 1
+
 _ROWS: list[dict] = []
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def _cpu_model() -> str:
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return platform.processor() or platform.machine() or "unknown"
+
+
+def bench_meta(**extra) -> dict:
+    """Schema-versioned metadata header stamped into every BENCH_*.json:
+    what machine, toolchain, and commit produced the numbers — so
+    trajectories stay comparable across machines and reruns."""
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "generated_at": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "cpu": _cpu_model(),
+        "python": platform.python_version(),
+        "scale": SCALE,
+        **extra,
+    }
+
+
+def save_bench_json(path: str, payload) -> None:
+    """Write a checked-in BENCH_*.json with the :func:`bench_meta` header.
+    ``payload`` may be a dict (header merged in under ``meta``) or a bare
+    row list (wrapped as ``{"meta": ..., "rows": [...]}``)."""
+    if not isinstance(payload, dict):
+        payload = {"rows": payload}
+    payload = {"meta": bench_meta(), **payload}
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"[benchmarks] wrote {path}")
 
 
 def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:

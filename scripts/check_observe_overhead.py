@@ -1,0 +1,90 @@
+"""CI gate: the flight recorder's dispatch-path cost (DESIGN.md §12.5).
+
+Times a steady-state plan-dispatch SpMV loop with the recorder off and
+on, INTERLEAVED (:func:`benchmarks.common.time_fns`, so container noise
+cancels out of the ratio), and fails when the enabled recorder costs
+more than ``--budget`` percent (default 3).  The instrumented work per
+dispatch is one dict lookup plus a prebuilt lock-free counter bump —
+the per-plan byte figures are derived once and cached in ``plan._fns``
+— so the budget holds with a wide margin on any healthy build.
+
+    PYTHONPATH=src python scripts/check_observe_overhead.py
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from benchmarks import common                                # noqa: E402
+from repro import observe                                    # noqa: E402
+from repro.core import packsell as pk                        # noqa: E402
+from repro.core import testmats                              # noqa: E402
+from repro.kernels import plan as kplan                      # noqa: E402
+
+#: calls per timing sample: the recorder cost is ~1.5us against a
+#: ~100us dispatch, so each sample averages a burst; the whole on+off
+#: round stays far shorter than a container throttle window, so both
+#: arms of each paired ratio see the same machine state
+REPS = 20
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=3.0,
+                    help="max recorder overhead in percent")
+    ap.add_argument("--rounds", type=int, default=75)
+    args = ap.parse_args()
+
+    a = testmats.stencil_1d(16384, 3)
+    mat = pk.from_csr(a, C=32, sigma=256, D=15, codec="fp16")
+    plan = kplan.get_plan(mat)
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal(mat.m).astype(np.float32))
+    jax.block_until_ready(plan.spmv(mat, x))     # compile once for both
+
+    def burst(v, on):
+        prev = observe.enable(on)
+        try:
+            for _ in range(REPS - 1):
+                plan.spmv(mat, v)
+            return plan.spmv(mat, v)
+        finally:
+            observe.enable(prev)
+
+    def measure():
+        prev = observe.enable(False)
+        try:
+            ts = common.time_fns(
+                {"off": lambda v: burst(v, False),
+                 "on": lambda v: burst(v, True)},
+                {"off": (x,), "on": (x,)},
+                warmup=3, rounds=args.rounds, samples=True)
+        finally:
+            observe.enable(prev)
+            observe.reset()
+        ratio = common.paired_speedup(ts, "on", "off")   # t_on / t_off
+        return (ratio - 1.0) * 100.0, ts
+
+    for attempt in (1, 2):           # one re-measure absorbs a throttle
+        overhead, ts = measure()     # window that swallowed a whole run
+        t_off = float(np.median(ts["off"])) / REPS * 1e6
+        t_on = float(np.median(ts["on"])) / REPS * 1e6
+        print(f"observe overhead: off={t_off:.2f}us on={t_on:.2f}us "
+              f"per dispatch -> {overhead:+.2f}% "
+              f"(budget {args.budget:.1f}%, attempt {attempt})")
+        if overhead <= args.budget:
+            print("OK")
+            return 0
+    print("FAIL: recorder overhead exceeds budget", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

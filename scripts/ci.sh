@@ -51,6 +51,15 @@ if [[ "${1:-}" != "fast" ]]; then
   XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     python -m pytest -x -q tests/test_robust.py -k "dist"
 
+  echo "== observe: flight recorder ON + overhead gate =="
+  # the whole observe suite runs with the recorder ENABLED (tier-1 above
+  # already ran it with the recorder off — both states must stay green;
+  # the parity tests prove REPRO_OBS=1 changes no solver results
+  # bit-for-bit), then the dispatch-path cost gate: recorder overhead on
+  # a steady-state spmv loop must stay under 3%
+  REPRO_OBS=1 python -m pytest -x -q tests/test_observe.py
+  python scripts/check_observe_overhead.py
+
   echo "== precision: subsystem tests + adaptive_pcg smoke =="
   # the example's adaptive section must converge to 1e-8 with a
   # low-precision (sub-32-bit) operator/preconditioner; the store
@@ -59,16 +68,17 @@ if [[ "${1:-}" != "fast" ]]; then
   python examples/mixed_precision_solver.py --nx 6 | tee /tmp/adaptive_smoke.txt
   grep -q "sub-32-bit matvecs" /tmp/adaptive_smoke.txt
 
-  echo "== smoke: benchmarks (spmv + robust, tiny scale) =="
-  # writes artifacts/bench_results.json plus BENCH_spmv.json and
-  # BENCH_robust.json; the tiny-scale JSONs are smoke artifacts only —
-  # the checked-in files are regenerated at small scale (make bench-spmv
-  # / bench-robust), so restore them afterwards.
-  for f in BENCH_spmv.json BENCH_robust.json; do
+  echo "== smoke: benchmarks (spmv + robust + roofline, tiny scale) =="
+  # writes artifacts/bench_results.json plus BENCH_spmv.json,
+  # BENCH_robust.json and BENCH_roofline.json; the smoke JSONs are
+  # artifacts only — the checked-in files are regenerated deliberately
+  # (make bench-spmv / bench-robust / bench-roofline), so restore them
+  # afterwards.
+  for f in BENCH_spmv.json BENCH_robust.json BENCH_roofline.json; do
     cp "$f" "/tmp/$f.orig" 2>/dev/null || true
   done
-  python -m benchmarks.run --only spmv,robust --scale tiny
-  for f in BENCH_spmv.json BENCH_robust.json; do
+  python -m benchmarks.run --only spmv,robust,roofline --scale tiny
+  for f in BENCH_spmv.json BENCH_robust.json BENCH_roofline.json; do
     if [[ -f "/tmp/$f.orig" ]]; then mv "/tmp/$f.orig" "$f"; fi
   done
 fi

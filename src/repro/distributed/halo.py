@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.observe import metrics as _obs
+
 from .partition import RowPartition, comm_counts
 
 EXCHANGE_MODES = ("ppermute", "all_gather")
@@ -133,8 +135,9 @@ def prestage(shared: dict, *, axis_name: str, n_shards: int, h_pad: int,
     def pre(x_loc: jnp.ndarray) -> tuple:
         if h_pad == 0:
             return ()
-        return (gather_halo(x_loc, shared, axis_name=axis_name,
-                            n_shards=n_shards, h_pad=h_pad, mode=mode),)
+        with _obs.span("packsell.halo_prestage"):
+            return (gather_halo(x_loc, shared, axis_name=axis_name,
+                                n_shards=n_shards, h_pad=h_pad, mode=mode),)
     return pre
 
 

@@ -53,6 +53,7 @@ from repro.core import packsell as pk
 from repro.core import sell as sl
 from repro.kernels import composite as kc
 from repro.kernels import plan as kplan
+from repro.observe import metrics as _obs
 from repro.parallel.sharding import make_shard_mesh, shard_map_compat
 
 from . import halo as dh
@@ -560,6 +561,9 @@ class DistSpMVPlan(_MeshBound):
             # validate here, not only in gather_halo: halo-free partitions
             # (h_pad == 0) never reach the gather
             raise ValueError(f"mode={mode!r} not in {dh.EXCHANGE_MODES}")
+        if _obs.enabled() and not isinstance(xs, jax.core.Tracer):
+            _obs.inc("dist.dispatch", mode=mode, shards=self.n_shards,
+                     kind="spmm" if multi_rhs else "spmv")
         return self._spmv_fn(mode, multi_rhs)(self.dev, xs)
 
     def spmv(self, x, *, mode: str | None = None) -> jnp.ndarray:

@@ -54,6 +54,7 @@ from repro.core import packsell as pk
 from repro.core import sell as sl
 from repro.core.packsell import PackSELLMatrix
 from repro.core.sell import SELLMatrix
+from repro.observe import metrics as _obs
 
 from . import plan as kplan
 
@@ -465,6 +466,9 @@ class CompositePlan:
         if isinstance(x, jax.core.Tracer):
             return self._execute(mats, devs, invs, (x,), multi_rhs,
                                  cat=cat)
+        _obs.inc("composite.dispatch", composite=self.name,
+                 kind="spmm" if multi_rhs else "spmv",
+                 members=len(self.members), terms=self.n_terms)
         return self._dispatch(multi_rhs)(mats, devs, invs, (x,), cat)
 
     def spmv(self, x: jnp.ndarray) -> jnp.ndarray:

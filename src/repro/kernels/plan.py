@@ -56,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import os
+import time
 import weakref
 from typing import Optional
 
@@ -66,6 +67,7 @@ import numpy as np
 from repro.core import codecs as cd
 from repro.core import packsell as pk
 from repro.core.packsell import PackSELLMatrix
+from repro.observe import metrics as _obs
 from . import packsell_spmv as _pk
 
 _DEF_HW = 4096              # default half-window (elements, multiple of 128)
@@ -116,6 +118,14 @@ class LRUDict(dict):
         cap = max(self._cap(), 1)
         while len(self) > cap:
             super().pop(next(iter(self)))   # evict LRU
+            _obs.inc("jit_cache.evict", cache=self._env)
+
+    @classmethod
+    def default_cap(cls) -> int:
+        try:
+            return int(os.environ.get("REPRO_JIT_CACHE_CAP", 64))
+        except ValueError:
+            return 64
 
 #: candidate checkpoint row widths (words between checkpoints), largest
 #: first. Power-of-two so pow2 bucket widths >= wr need no run padding.
@@ -747,8 +757,9 @@ class SpMVPlan:
         xc = x.astype(jnp.float32)
         fused = dev.get("fused")
         if fused is not None and self.variant == "jnp":
-            part = _fused_part_spmv(fused[0], fused[1], xc, mat.codec,
-                                    mat.D, self.fused_layout)
+            with _obs.span("packsell.fused_decode"):
+                part = _fused_part_spmv(fused[0], fused[1], xc, mat.codec,
+                                        mat.D, self.fused_layout)
             return self._fused_epilogue(part, dev, permuted)
         t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=False)
         if permuted:
@@ -760,8 +771,9 @@ class SpMVPlan:
         xc = x.astype(jnp.float32)
         fused = dev.get("fused")
         if fused is not None and self.variant == "jnp":
-            part = _fused_part_spmm(fused[0], fused[1], xc, mat.codec,
-                                    mat.D, self.fused_layout)
+            with _obs.span("packsell.fused_decode"):
+                part = _fused_part_spmm(fused[0], fused[1], xc, mat.codec,
+                                        mat.D, self.fused_layout)
             return self._fused_epilogue(part, dev, permuted)
         t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=True)
         if permuted:
@@ -772,14 +784,15 @@ class SpMVPlan:
         """Reduce group partials to the requested order. Un-permuted
         output gathers 2-D straight off the slice-major tail
         (:func:`_fused_unpermute2`): no flatten copy, one gather."""
-        if permuted:
-            return _fused_tail(part, self.fused_layout)
-        inv2 = dev.get("inv2")
-        if inv2 is not None:
-            return _fused_unpermute2(_fused_tail2(part, self.fused_layout),
-                                     inv2)
-        return self._unpermute(_fused_tail(part, self.fused_layout),
-                               dev.get("inv"), dev["outrow"])
+        with _obs.span("packsell.gather_epilogue"):
+            if permuted:
+                return _fused_tail(part, self.fused_layout)
+            inv2 = dev.get("inv2")
+            if inv2 is not None:
+                return _fused_unpermute2(
+                    _fused_tail2(part, self.fused_layout), inv2)
+            return self._unpermute(_fused_tail(part, self.fused_layout),
+                                   dev.get("inv"), dev["outrow"])
 
     def _bucket_parts(self, mat, dev, x, xc, *, multi_rhs: bool):
         """The per-bucket execution bodies (Pallas variants, the 'full'
@@ -876,12 +889,44 @@ class SpMVPlan:
                 words_bucketed=mat.words_bucketed)
         return self._view
 
+    def _obs_record(self, mat: PackSELLMatrix, kind: str) -> None:
+        """Per-dispatch flight-recorder record (DESIGN.md §12): variant,
+        checkpoint width ``wr``, hot-path stream bytes and bytes/nnz.
+        Called only from host entry points with concrete operands — never
+        from inside a trace, where it would freeze at trace time. The
+        derived byte figures are per-plan constants, computed once and
+        parked in ``_fns`` (cleared by :meth:`retile`, so they re-derive)."""
+        bump = self._fns.get(("_obs", kind))
+        if bump is None:
+            dcs = self.decode_cache_stats()
+            stream = (dcs["fused_stream_bytes"] or 4 * self.total_words) \
+                + dcs["decode_cache_bytes"]
+            lab = dict(variant=self.variant, codec=mat.codec_name,
+                       cache_mode=self.cache_mode)
+            # per-plan constants: gauges set once here, not per call (a
+            # registry reset() loses them until the next retile — fine,
+            # they describe the plan, not traffic)
+            _obs.gauge("spmv.wr", 0 if self.fused_layout is None
+                       else int(self.fused_layout.wr), **lab)
+            _obs.gauge("spmv.stream_bytes", int(stream), **lab)
+            _obs.gauge("spmv.bytes_per_nnz",
+                       stream / max(int(mat.nnz), 1), **lab)
+            # label sort/stringification paid once per (plan, kind): the
+            # steady-state record is one prebuilt two-counter closure
+            bump = _obs.counter_bump((
+                (_obs.series_key("spmv.dispatch", kind=kind, **lab), 1),
+                (_obs.series_key("spmv.nnz", **lab), int(mat.nnz))))
+            self._fns[("_obs", kind)] = bump
+        bump()
+
     def spmv(self, mat: PackSELLMatrix, x: jnp.ndarray, *,
              permuted: bool = False) -> jnp.ndarray:
         """y = A @ x — one jitted dispatch; ``permuted=True`` returns y in
         stored-row order, skipping the σ-permutation epilogue entirely."""
         if self.ephemeral or _is_traced(mat):
             return self._execute(mat, self._device_operands(), x, permuted)
+        if _obs.enabled() and not isinstance(x, jax.core.Tracer):
+            self._obs_record(mat, "spmv")
         return self._dispatch("spmv")(self._exec_mat(mat),
                                       self._device_operands(), x,
                                       permuted)
@@ -899,6 +944,8 @@ class SpMVPlan:
         if self.ephemeral or _is_traced(mat):
             return self._execute_mm(mat, self._device_operands(), x,
                                     permuted)
+        if _obs.enabled() and not isinstance(x, jax.core.Tracer):
+            self._obs_record(mat, "spmm")
         return self._dispatch("spmm")(self._exec_mat(mat),
                                       self._device_operands(), x,
                                       permuted)
@@ -1017,6 +1064,24 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     data-dependent slice sort / all-pad-run trimming) so SPMD consumers
     get identical layouts across shards.
     """
+    t0 = time.perf_counter()
+    with _obs.span("packsell.plan_build"):
+        plan = _build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
+                           interpret=interpret, decode_cache=decode_cache,
+                           fused_trim=fused_trim)
+    if not plan.ephemeral:
+        _obs.inc("plan.build", variant=plan.variant,
+                 cache_mode=plan.cache_mode)
+        _obs.observe("plan.build_s", time.perf_counter() - t0,
+                     variant=plan.variant)
+    return plan
+
+
+def _build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
+                hw: int = _DEF_HW, force: str | None = None,
+                interpret: bool | None = None,
+                decode_cache: str | None = None,
+                fused_trim: bool = True) -> SpMVPlan:
     interpret = _interpret_default() if interpret is None else interpret
     policy = (force or _env_policy()).lower()
     if policy not in _POLICIES:
@@ -1226,6 +1291,7 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     ent = _PLANS.get(key)
     if ent is not None and ent[0]() is mat:
         _STATS["hits"] += 1
+        _obs.inc("plan_cache.hit")
         _PLANS[key] = _PLANS.pop(key)       # move to MRU position
         return ent[1]
     plan = build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
@@ -1235,9 +1301,11 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     def _drop(_ref, key=key):
         if _PLANS.pop(key, None) is not None:
             _STATS["evicted"] += 1
+            _obs.inc("plan_cache.evict", cause="matrix_dead")
 
     _PLANS[key] = (weakref.ref(mat, _drop), plan)
     _STATS["misses"] += 1
+    _obs.inc("plan_cache.miss")
     # LRU bound: a long-running serving process cycling many matrices must
     # not grow without limit; an evicted plan rebuilds bit-identically
     # (build_plan is deterministic in (mat, key))
@@ -1245,10 +1313,14 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     while len(_PLANS) > cap:
         _PLANS.pop(next(iter(_PLANS)))
         _STATS["evicted"] += 1
+        _obs.inc("plan_cache.evict", cause="capacity")
     return plan
 
 
 def cache_stats() -> dict:
+    """Plan-cache counters; also the live source behind
+    ``repro.observe.report()``'s ``plan_cache`` block — the registry's
+    ``plan_cache.*`` event counters mirror the same increments."""
     return dict(_STATS, size=len(_PLANS))
 
 

@@ -1,0 +1,219 @@
+"""Process-local metrics registry and trace spans (DESIGN.md §12).
+
+The flight recorder behind every PackSELL dispatch: counters, gauges and
+histograms keyed by ``(name, labels)``, plus ``span()`` context managers
+that name hot regions in XLA profiles. Two invariants shape the design:
+
+* **Zero-cost when disabled.** ``REPRO_OBS=0`` (the tier-1 default) makes
+  every recording call a single predicate check and ``span()`` a bare
+  ``yield`` — no dict lookups, no allocation, no lock.
+* **Jit-compatible.** Recording happens only at host-side dispatch entry
+  points; code inside a ``jax.jit``-traced body runs once at trace time,
+  so counters there would silently freeze. ``span()`` *is* legal inside
+  traced code — ``jax.named_scope`` only attaches metadata to the ops it
+  encloses and ``jax.profiler.TraceAnnotation`` marks host trace-time —
+  neither can change numerics, which is what the REPRO_OBS=1 bit-for-bit
+  parity tests pin down.
+
+Series naming follows ``subsystem.event`` with labels for dimensions, e.g.
+``spmv.dispatch{cache_mode=checkpoint,codec=fp16,variant=jnp}``. The full
+span/series naming map lives in DESIGN.md §12.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import threading
+
+__all__ = [
+    "enabled", "enable", "inc", "gauge", "observe", "record_trace",
+    "series_key", "inc_many", "counter_bump", "snapshot", "reset",
+    "export_json", "span",
+]
+
+
+def _env_on(val: str | None) -> bool:
+    return (val or "0").strip().lower() not in ("", "0", "false", "off", "no")
+
+
+_ENABLED = _env_on(os.environ.get("REPRO_OBS"))
+
+_LOCK = threading.Lock()
+# series key: (name, (("k","v"), ...)) with labels sorted by key
+_COUNTERS: dict = {}
+_GAUGES: dict = {}
+_HISTS: dict = {}          # key -> {"count", "sum", "min", "max", "last"}
+_TRACES: dict = {}         # key -> list of records (bounded)
+_TRACE_CAP = 256           # per-series record cap (drop-oldest)
+
+
+def enabled() -> bool:
+    """True when the registry records (``REPRO_OBS`` truthy or enable())."""
+    return _ENABLED
+
+
+def enable(on: bool = True) -> bool:
+    """Flip recording on/off at runtime (benchmarks/tests; the env var
+    only sets the process default). Returns the previous state."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = bool(on)
+    return prev
+
+
+def _key(name: str, labels: dict):
+    if not labels:
+        return (name, ())
+    return (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+
+
+def inc(name: str, value: float = 1, **labels) -> None:
+    """Add ``value`` to counter ``name{labels}`` (no-op when disabled)."""
+    if not _ENABLED:
+        return
+    k = _key(name, labels)
+    with _LOCK:
+        _COUNTERS[k] = _COUNTERS.get(k, 0) + value
+
+
+def series_key(name: str, **labels):
+    """Precompute a series handle for :func:`inc_many` — hot dispatch
+    paths pay the label sort/stringification once at plan setup instead
+    of on every call (the <3% overhead budget of DESIGN.md §12.5)."""
+    return _key(name, labels)
+
+
+def inc_many(pairs) -> None:
+    """Bump several precomputed ``(series_key, value)`` counters — the
+    steady-state dispatch record.  Deliberately lock-free: each get/set
+    is GIL-atomic, so the only cross-thread hazard is a lost increment
+    when two threads interleave on the SAME series — acceptable for a
+    flight recorder, and it keeps the hot dispatch path inside the §12.5
+    overhead budget (the lock acquisition costs as much as both bumps)."""
+    if not _ENABLED:
+        return
+    for k, v in pairs:
+        _COUNTERS[k] = _COUNTERS.get(k, 0) + v
+
+
+def counter_bump(pairs):
+    """Compile ``(series_key, value)`` pairs into a zero-arg closure —
+    the cheapest possible steady-state record (everything resolvable is
+    bound at build time; the common two-counter case is unrolled).  The
+    closure re-checks ``_ENABLED`` so a cached bump goes quiet when the
+    recorder is turned off.  Same lock-free tradeoff as
+    :func:`inc_many`."""
+    pairs = tuple(pairs)
+    C = _COUNTERS          # reset() clears in place, never rebinds
+    if len(pairs) == 2:
+        (k1, v1), (k2, v2) = pairs
+
+        def bump(C=C, get=C.get):
+            if _ENABLED:
+                C[k1] = get(k1, 0) + v1
+                C[k2] = get(k2, 0) + v2
+        return bump
+
+    def bump(C=C, get=C.get):
+        if _ENABLED:
+            for k, v in pairs:
+                C[k] = get(k, 0) + v
+    return bump
+
+
+def gauge(name: str, value: float, **labels) -> None:
+    """Set gauge ``name{labels}`` to the latest ``value``."""
+    if not _ENABLED:
+        return
+    k = _key(name, labels)
+    with _LOCK:
+        _GAUGES[k] = value
+
+
+def observe(name: str, value: float, **labels) -> None:
+    """Record ``value`` into histogram ``name{labels}`` (count/sum/min/
+    max/last — enough for rates and ranges without bucket configuration)."""
+    if not _ENABLED:
+        return
+    k = _key(name, labels)
+    v = float(value)
+    with _LOCK:
+        h = _HISTS.get(k)
+        if h is None:
+            _HISTS[k] = {"count": 1, "sum": v, "min": v, "max": v, "last": v}
+        else:
+            h["count"] += 1
+            h["sum"] += v
+            h["min"] = min(h["min"], v)
+            h["max"] = max(h["max"], v)
+            h["last"] = v
+
+
+def record_trace(name: str, record: dict, **labels) -> None:
+    """Append a structured record (e.g. one solve's convergence history)
+    to trace series ``name{labels}``; oldest records drop past the cap."""
+    if not _ENABLED:
+        return
+    k = _key(name, labels)
+    with _LOCK:
+        lst = _TRACES.setdefault(k, [])
+        lst.append(record)
+        if len(lst) > _TRACE_CAP:
+            del lst[: len(lst) - _TRACE_CAP]
+
+
+def _fmt_key(k) -> str:
+    name, labels = k
+    if not labels:
+        return name
+    return name + "{" + ",".join(f"{a}={b}" for a, b in labels) + "}"
+
+
+def snapshot() -> dict:
+    """Point-in-time copy of every series, keyed ``name{k=v,...}``."""
+    with _LOCK:
+        return {
+            "enabled": _ENABLED,
+            "counters": {_fmt_key(k): v for k, v in sorted(_COUNTERS.items())},
+            "gauges": {_fmt_key(k): v for k, v in sorted(_GAUGES.items())},
+            "histograms": {_fmt_key(k): dict(v)
+                           for k, v in sorted(_HISTS.items())},
+            "traces": {_fmt_key(k): [dict(r) for r in v]
+                       for k, v in sorted(_TRACES.items())},
+        }
+
+
+def reset() -> None:
+    """Clear every series (the enabled flag is left as-is)."""
+    with _LOCK:
+        _COUNTERS.clear()
+        _GAUGES.clear()
+        _HISTS.clear()
+        _TRACES.clear()
+
+
+def export_json(path: str) -> dict:
+    """Write :func:`snapshot` to ``path``; returns the snapshot."""
+    snap = snapshot()
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(snap, f, indent=1, default=float)
+    return snap
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Name a hot region in XLA profiles: ``jax.named_scope`` tags the ops
+    traced inside (visible in HLO metadata / device profiles) and
+    ``TraceAnnotation`` marks the host-side interval. Single bare yield
+    when disabled. Safe inside jit-traced code — metadata only."""
+    if not _ENABLED:
+        yield
+        return
+    import jax
+
+    with jax.named_scope(name), jax.profiler.TraceAnnotation(name):
+        yield

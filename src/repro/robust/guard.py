@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core import codecs as cd
 from repro.core.packsell import PackSELLMatrix
+from repro.observe import metrics as _obs
 
 
 class IntegrityError(ValueError):
@@ -56,6 +57,7 @@ def mark_unhealthy(plan, reason: str) -> None:
     """Flag a plan as tripped; the serving engine rebuilds flagged plans
     before reuse (``serving.engine.DecodeEngine.warmup``)."""
     plan._unhealthy = str(reason)
+    _obs.inc("guard.plan_unhealthy", reason=str(reason))
 
 
 def plan_health(plan) -> str | None:
@@ -211,6 +213,11 @@ class GuardState:
     source: str               # 'decoded' | 'csr'
     every: int = 1            # full-guard stride (1 = every call)
     calls: int = 0            # guarded_spmv call counter (host-side)
+    calls_since_full: int = 0  # light checks since the last full guard
+    last_check_latency: int = 1  # detection-latency (calls) of the most
+    #                              recent check: guarded calls since the
+    #                              last full guard, inclusive — the window
+    #                              a silent corruption could have survived
     _dev: dict | None = dataclasses.field(default=None, repr=False)
 
     def dev(self) -> dict:
@@ -314,7 +321,14 @@ def guarded_spmv(mat: PackSELLMatrix, plan, gs: GuardState, x, *,
     if full is None:
         full = gs.every <= 1 or (gs.calls % gs.every == 0)
         gs.calls += 1
-    if not full and not (plan.ephemeral or isinstance(x, jax.core.Tracer)):
+    traced = plan.ephemeral or isinstance(x, jax.core.Tracer)
+    if not traced:
+        # detection-latency accounting (host entry points only; a traced
+        # guard is one fused check inside the caller's loop)
+        gs.last_check_latency = gs.calls_since_full + 1
+        gs.calls_since_full = 0 if full else gs.calls_since_full + 1
+        _obs.inc("guard.check", depth="full" if full else "light")
+    if not full and not traced:
         key = ("guarded_spmv_light", x.shape, x.dtype)
         fn = plan._fns.get(key)
         if fn is None:
@@ -333,7 +347,8 @@ def guarded_spmv(mat: PackSELLMatrix, plan, gs: GuardState, x, *,
         y = plan._execute(mat, dev, x, False)
         gdev = gs.dev()
         ok, rel = _guard_terms(gdev, x, y)
-        cs0, cs1 = _checksum_jnp(guard_arrays(mat, plan))
+        with _obs.span("packsell.guard_checksum"):
+            cs0, cs1 = _checksum_jnp(guard_arrays(mat, plan))
         return (y, ok & (cs0 == gdev["ref"][0]) & (cs1 == gdev["ref"][1]),
                 rel)
 
@@ -357,7 +372,8 @@ def guarded_spmv(mat: PackSELLMatrix, plan, gs: GuardState, x, *,
             elif dev.get("inv") is not None:
                 arrs.append(dev["inv"])
             arrs.append(dev["outrow"])
-            cs0, cs1 = _checksum_jnp(arrs)
+            with _obs.span("packsell.guard_checksum"):
+                cs0, cs1 = _checksum_jnp(arrs)
             return (y, ok & (cs0 == gdev["ref"][0])
                     & (cs1 == gdev["ref"][1]), rel)
 

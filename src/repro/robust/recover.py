@@ -32,6 +32,7 @@ from typing import Callable, NamedTuple, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.observe import metrics as _obs
 from repro.solvers import cg
 from repro.solvers import operators as op
 
@@ -159,6 +160,9 @@ def guarded_solve(ops: op.OperatorSet, kind: str, b, *,
         # -- escalation -------------------------------------------------
         trips += 1
         attempts += 1
+        _obs.observe("guard.detection_latency_calls",
+                     gs.last_check_latency if gs is not None else 1,
+                     event=event[0])
         x = x_snap                          # revert to the last good iterate
         r = b - a64 @ x
         relres = float(np.linalg.norm(r)) / bnorm
@@ -183,6 +187,15 @@ def guarded_solve(ops: op.OperatorSet, kind: str, b, *,
             action, detail = "fp32_fallback", dict(kind=cur)
         log.append(dict(step=outer, event=event[0], action=action,
                         detail={**event[1], **detail}))
+        _obs.inc("guard.trip", event=event[0], action=action)
 
+    if _obs.enabled():
+        _obs.inc("guard.solves", kind=cur)
+        _obs.record_trace(
+            "guard.solve",
+            dict(iters=steps, relres=relres, trips=trips, final_kind=cur,
+                 log=[dict(step=e["step"], event=e["event"],
+                           action=e["action"]) for e in log]),
+            kind=kind)
     return x, GuardedSolveInfo(steps, relres, np.asarray(hist), log, cur,
                                trips)

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.observe import metrics as _obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,12 +178,27 @@ class DecodeEngine:
                     log.warning(
                         "warmup: layer %d plan unhealthy (%s) — rebuilding "
                         "from retained CSR", i, health)
+                    _obs.inc("serving.warmup_rebuild", reason=health)
                     lin.rebuild()
             if store is not None and desc.get("fingerprint"):
                 key = f"plan_{desc['codec']}{desc['D']}"
-                if store.apply_retile(desc["fingerprint"], key, lin.plan):
-                    log.info("warmup: layer %d retiled from store (%s)",
-                             i, key)
+                layer_name = getattr(lin, "name", None) or f"layer_{i}"
+                try:
+                    applied = store.apply_retile(desc["fingerprint"], key,
+                                                 lin.plan)
+                except Exception as e:
+                    # a poisoned store entry (malformed tiles, infeasible
+                    # band retile) must not take warmup down: the layer
+                    # keeps its build-time tiles, which are always valid
+                    log.warning(
+                        "warmup: %s (layer %d) retile from store FAILED — "
+                        "shape=%s key=%s fingerprint=%s: %s", layer_name,
+                        i, desc.get("shape"), key, desc["fingerprint"], e)
+                    _obs.inc("serving.warmup_retile_failure", key=key)
+                else:
+                    if applied:
+                        log.info("warmup: %s (layer %d) retiled from store "
+                                 "(%s)", layer_name, i, key)
             plan = lin.warmup()
             pdesc = plan.describe()
             plan_tag = "%s/%s" % (pdesc["variant"], pdesc["cache_mode"])
@@ -261,6 +277,8 @@ class DecodeEngine:
         self.done.append(req)
         self.slot_req[slot] = None
         self.slot_remaining[slot] = 0
+        _obs.inc("serving.finished")
+        _obs.observe("serving.request_latency_s", req.latency)
 
     def _sample(self, logits: jnp.ndarray) -> np.ndarray:
         if self.scfg.temperature <= 0.0:
@@ -289,6 +307,8 @@ class DecodeEngine:
             self.slot_remaining[i] -= 1
             if self.slot_remaining[i] <= 0 or tok == self.scfg.eos_id:
                 self._finish(i)
+        _obs.inc("serving.tick")
+        _obs.inc("serving.decode_tokens", len(active))
         return len(active)
 
     def run(self, max_ticks: int = 100_000) -> list[Request]:

@@ -22,6 +22,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import observe as _obs
+
 Matvec = Callable[[jnp.ndarray], jnp.ndarray]
 
 
@@ -104,7 +106,9 @@ def pcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec | None = None,
         # donation must never eat a caller-owned buffer: copy supplied x0
         x0 = (jnp.zeros(b.shape, sdtype) if x0 is None
               else jnp.array(x0, sdtype, copy=True))
-        return fn(b, x0)
+        x, info = fn(b, x0)
+        _obs.record_solve("pcg", info, path="jit_cache")
+        return x, info
 
     dot = dot or jnp.vdot
     norm = norm or jnp.linalg.norm
@@ -139,8 +143,11 @@ def pcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec | None = None,
         return (k + 1, x, r, z, p, rz_new, hist, done)
 
     s0 = (jnp.asarray(0), x0, r0, z0, z0, rz0, hist0, jnp.asarray(False))
-    k, x, r, z, p, rz, hist, done = jax.lax.while_loop(cond, body, s0)
-    return x, SolveInfo(k, norm(r) / bnorm, hist)
+    with _obs.span("packsell.solver_while"):
+        k, x, r, z, p, rz, hist, done = jax.lax.while_loop(cond, body, s0)
+    info = SolveInfo(k, norm(r) / bnorm, hist)
+    _obs.record_solve("pcg", info, path="eager")
+    return x, info
 
 
 def fcg(matvec: Matvec, b: jnp.ndarray, *, M: Matvec, tol: float = 1e-9,
@@ -222,6 +229,7 @@ def jacobi_pcg_stored(mat, plan, diag: jnp.ndarray, b: jnp.ndarray, *,
 
         x_s, info = pcg(matvec_s, b_s, M=lambda r: r * dinv_s, tol=tol,
                         maxiter=maxiter, dtype=dtype)
+        _obs.record_solve("jacobi_pcg_stored", info, path="fallback")
         return plan.from_stored(x_s), info
 
     sdtype = jnp.dtype(dtype if dtype is not None else b.dtype)
@@ -247,7 +255,9 @@ def jacobi_pcg_stored(mat, plan, diag: jnp.ndarray, b: jnp.ndarray, *,
         fn = jax.jit(solve, donate_argnums=_donate(4))
         plan._fns[key] = fn
     x0_s = jnp.zeros((plan.total_stored,), sdtype)
-    return fn(mat, plan._device_operands(), diag, b, x0_s)
+    x, info = fn(mat, plan._device_operands(), diag, b, x0_s)
+    _obs.record_solve("jacobi_pcg_stored", info, path="fused")
+    return x, info
 
 
 def jacobi_pcg_dist(dplan, diag: jnp.ndarray, b: jnp.ndarray, *,
@@ -305,7 +315,9 @@ def jacobi_pcg_dist(dplan, diag: jnp.ndarray, b: jnp.ndarray, *,
                          build)
     xs, k, relres, hist = fn(dplan.dev, dplan.shard_vector(b.astype(dtype)),
                              dplan.shard_vector(dinv))
-    return dplan.unshard_vector(xs), SolveInfo(k, relres, hist)
+    info = SolveInfo(k, relres, hist)
+    _obs.record_solve("jacobi_pcg_dist", info, shards=dplan.n_shards)
+    return dplan.unshard_vector(xs), info
 
 
 def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
@@ -375,7 +387,9 @@ def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
         # donation must never eat a caller-owned buffer: copy supplied x0
         x0 = (jnp.zeros(b.shape, sdtype) if x0 is None
               else jnp.array(x0, sdtype, copy=True))
-        return fn(b, x0)
+        x, info = fn(b, x0)
+        _obs.record_solve("adaptive_pcg", info, path="jit_cache")
+        return x, info
     n_tiers = len(tiers)
     dot = dot or jnp.vdot
     norm = norm or jnp.linalg.norm
@@ -449,9 +463,12 @@ def adaptive_pcg(tiers, b: jnp.ndarray, *, M: Matvec | None = None,
     s0 = (jnp.asarray(0), x0, r0, rel0,
           jnp.asarray(min(start_tier, n_tiers - 1)), jnp.asarray(0),
           mv0, jnp.asarray(1), hist0, thist0)
-    k, x, r, relres, tier, nprom, mvc, hic, hist, thist = \
-        jax.lax.while_loop(cond, body, s0)
-    return x, AdaptiveSolveInfo(k, relres, hist, thist, nprom, mvc, hic)
+    with _obs.span("packsell.solver_while"):
+        k, x, r, relres, tier, nprom, mvc, hic, hist, thist = \
+            jax.lax.while_loop(cond, body, s0)
+    info = AdaptiveSolveInfo(k, relres, hist, thist, nprom, mvc, hic)
+    _obs.record_solve("adaptive_pcg", info, path="eager")
+    return x, info
 
 
 def adaptive_pcg_dist(ladder, diag: jnp.ndarray, b: jnp.ndarray, *,
@@ -533,7 +550,9 @@ def adaptive_pcg_dist(ladder, diag: jnp.ndarray, b: jnp.ndarray, *,
          jnp.dtype(dtype).name, mode), build)
     out = fn(ladder.dev, ladder.shard_vector(b.astype(dtype)),
              ladder.shard_vector(dinv))
-    return ladder.unshard_vector(out[0]), AdaptiveSolveInfo(*out[1:])
+    info = AdaptiveSolveInfo(*out[1:])
+    _obs.record_solve("adaptive_pcg_dist", info, shards=ladder.n_shards)
+    return ladder.unshard_vector(out[0]), info
 
 
 def pcg_fixed_iters(matvec: Matvec, M: Matvec, m_in: int,
