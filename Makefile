@@ -4,7 +4,7 @@ export PYTHONPATH
 .PHONY: test verify verify-dist verify-precision verify-composite \
 	verify-fused verify-robust verify-observe bench bench-spmv \
 	bench-dist bench-precision bench-composite bench-robust \
-	bench-roofline
+	bench-roofline bench-memory bench-e8my perf-gate perf-baseline
 
 test:
 	python -m pytest -x -q
@@ -89,3 +89,24 @@ bench-robust:
 # achieved-vs-peak + HLO cross-check + embedded observe report)
 bench-roofline:
 	python -m benchmarks.run --only roofline --scale tiny
+
+# regenerate the checked-in memory-footprint ratios (small scale)
+bench-memory:
+	python -m benchmarks.run --only memory --scale small
+
+# regenerate the checked-in E8MY D-sweep (small scale)
+bench-e8my:
+	python -m benchmarks.run --only e8my --scale small
+
+# perf sentinel (DESIGN.md §13.3): gate the working tree against the
+# committed noise-aware baseline — runs the gated benches (spmv +
+# roofline) at tiny scale in a temp dir and compares paired medians
+perf-gate:
+	python scripts/check_perf_regression.py \
+		--against artifacts/perf_baseline.json
+
+# refresh the committed baseline (3 repeated tiny-scale runs -> median
+# + IQR per gated metric); commit artifacts/perf_baseline.json after
+perf-baseline:
+	python scripts/check_perf_regression.py \
+		--make-baseline artifacts/perf_baseline.json --reps 3

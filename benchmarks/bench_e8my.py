@@ -3,19 +3,35 @@
 Sweeps the delta width D (mantissa Y = 22 − D) against FP32/FP16/BF16 SELL
 with FP32 input/output vectors and the paper's row scaling G⁻¹A. Reports
 median time, speedup over FP32 SELL, and the eq. (5) backward error.
+
+The PackSELL side dispatches through the cached :mod:`repro.kernels.plan`
+path — the same executable every other benchmark (and the serving layer)
+runs — not the seed-era eager ``packsell_spmv_jnp``, so the sweep reflects
+the shipped hot path.  Per-D timings are interleaved with the FP32 SELL
+baseline (:func:`benchmarks.common.time_fns`) so the speedup column is a
+paired ratio.  Writes ``BENCH_e8my.json``.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import observe
 from repro.core import packsell as pk
 from repro.core import sell as sl
 from repro.core import testmats
+from repro.kernels import plan as kplan
 from repro.solvers.operators import row_scale
 
 from . import common
+
+_JSON_PATH = os.environ.get(
+    "REPRO_BENCH_E8MY_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_e8my.json"))
 
 D_GRID = (1, 2, 4, 6, 8, 10, 12)
 
@@ -24,35 +40,66 @@ def run(scale: str | None = None) -> None:
     scale = scale or common.SCALE
     suite = testmats.suite(scale)
     C, sigma = 32, 256
-    for name, a0 in suite.items():
-        a, _ = row_scale(a0)
-        a = a.tocsr()
-        a.sort_indices()
-        rng = np.random.default_rng(11)
-        x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
+    prev = observe.enable(True)
+    rows = []
+    try:
+        for name, a0 in suite.items():
+            a, _ = row_scale(a0)
+            a = a.tocsr()
+            a.sort_indices()
+            rng = np.random.default_rng(11)
+            x = jnp.asarray(
+                rng.standard_normal(a.shape[1]).astype(np.float32))
 
-        base = {}
-        for kind, dt in (("fp32", "float32"), ("fp16", "float16"),
-                         ("bf16", "bfloat16")):
-            mm = sl.from_csr(a, C=C, sigma=sigma, value_dtype=dt)
-            fn = jax.jit(lambda x, mm=mm: sl.sell_spmv_jnp(mm, x))
-            t = common.time_fn(fn, x)
-            be = common.backward_error(fn(x), a, np.asarray(x))
-            base[kind] = t
-            common.emit("e8my_baseline", f"{name}_{kind}",
-                        t_us=t * 1e6, backward_error=be)
+            base = {}
+            for kind, dt in (("fp32", "float32"), ("fp16", "float16"),
+                             ("bf16", "bfloat16")):
+                mm = sl.from_csr(a, C=C, sigma=sigma, value_dtype=dt)
+                fn = jax.jit(lambda x, mm=mm: sl.sell_spmv_jnp(mm, x))
+                t = common.time_fn(fn, x)
+                be = common.backward_error(fn(x), a, np.asarray(x))
+                base[kind] = t
+                rows.append(common.emit(
+                    "e8my_baseline", f"{name}_{kind}",
+                    t_us=t * 1e6, backward_error=be))
 
-        for D in D_GRID:
-            mm = pk.from_csr(a, C=C, sigma=sigma, D=D, codec="e8m")
-            fn = jax.jit(lambda x, mm=mm: pk.packsell_spmv_jnp(mm, x))
-            t = common.time_fn(fn, x)
-            be = common.backward_error(fn(x), a, np.asarray(x))
-            common.emit(
-                "e8my_sweep", f"{name}_D{D}",
-                mantissa=22 - D,
-                t_us=t * 1e6,
-                speedup_vs_fp32sell=base["fp32"] / t,
-                speedup_vs_fp16sell=base["fp16"] / t,
-                backward_error=be,
-                dummy_frac=mm.n_dummy / max(a.nnz, 1),
-            )
+            # all D columns + the fp32 SELL reference timed interleaved:
+            # per-round pairing cancels container throughput drift out of
+            # the speedup ratios (the PR-5 comparison discipline)
+            mm32 = sl.from_csr(a, C=C, sigma=sigma, value_dtype="float32")
+            ref = jax.jit(lambda x, mm=mm32: sl.sell_spmv_jnp(mm, x))
+            mats = {D: pk.from_csr(a, C=C, sigma=sigma, D=D, codec="e8m")
+                    for D in D_GRID}
+            plans = {D: kplan.get_plan(mats[D]) for D in D_GRID}
+            fns = {"sell_fp32": ref}
+            fns.update({f"D{D}": (lambda v, m=mats[D], p=plans[D]:
+                                  p.spmv(m, v)) for D in D_GRID})
+            ts = common.time_fns(fns, {k: (x,) for k in fns},
+                                 rounds=9, samples=True)
+            for D in D_GRID:
+                mat, plan = mats[D], plans[D]
+                t = float(np.median(ts[f"D{D}"]))
+                be = common.backward_error(plan.spmv(mat, x), a,
+                                           np.asarray(x))
+                rows.append(common.emit(
+                    "e8my_sweep", f"{name}_D{D}",
+                    mantissa=22 - D,
+                    t_us=t * 1e6,
+                    variant=plan.variant,
+                    cache_mode=plan.cache_mode,
+                    speedup_vs_fp32sell=common.paired_speedup(
+                        ts, "sell_fp32", f"D{D}"),
+                    speedup_vs_fp16sell=base["fp16"] / t,
+                    backward_error=be,
+                    dummy_frac=mat.n_dummy / max(a.nnz, 1),
+                ))
+        common.save_bench_json(_JSON_PATH, {"scale": scale, "rows": rows})
+    finally:
+        observe.enable(prev)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default=None)
+    run(ap.parse_args().scale)

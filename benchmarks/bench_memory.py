@@ -6,69 +6,113 @@ text). Dummy elements and σ-padding move the ratio up; scattered matrices
 can exceed 1.0 — exactly the Fig. 7 story. Also reports the bucket-padding
 overhead our TPU layout adds (DESIGN.md §2) so the adaptation cost is
 visible and accounted.
+
+Post-PR-5 the hot path is the *plan*, not the raw format arrays, so the
+main rows also carry the plan-backed accounting the roofline scoreboard
+uses: ``plan.as_composite(mat).memory_stats()`` (resident composite
+bytes) and ``plan.decode_cache_stats()`` (the fused word stream + decode
+cache the dispatch actually reads).  Writes ``BENCH_memory.json``.
 """
 from __future__ import annotations
 
-import numpy as np
+import os
 
+from repro import observe
 from repro.core import packsell as pk
 from repro.core import sell as sl
 from repro.core import testmats
+from repro.kernels import plan as kplan
 
 from . import common
+
+_JSON_PATH = os.environ.get(
+    "REPRO_BENCH_MEMORY_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_memory.json"))
+
+
+def _plan_stats(mat) -> dict:
+    """Hot-path byte accounting for one packed matrix: what the cached
+    dispatch is resident in (composite) and what it streams per call."""
+    plan = kplan.get_plan(mat)
+    dcs = plan.decode_cache_stats()
+    fmt = plan.as_composite(mat).memory_stats()
+    stream = (dcs["fused_stream_bytes"] or 4 * plan.total_words) \
+        + dcs["decode_cache_bytes"]
+    return {
+        "variant": plan.variant,
+        "cache_mode": plan.cache_mode,
+        "composite_bytes": int(fmt["composite_bytes"]),
+        "composite_bytes_per_nnz": fmt["bytes_per_nnz"],
+        "stream_bytes": int(stream),
+    }
 
 
 def run(scale: str | None = None) -> None:
     scale = scale or common.SCALE
     suite = testmats.suite(scale)
     C, sigma = 32, 256
-    for name, a in suite.items():
-        ps = pk.from_csr(a, C=C, sigma=sigma, D=15, codec="fp16",
-                         device=False)
-        se = sl.from_csr(a, C=C, sigma=sigma, value_dtype="float16",
-                         device=False)
-        ms_p = ps.memory_stats()
-        ms_s = se.memory_stats()
-        ratio = ms_p["packsell_bytes"] / ms_s["sell_bytes"]
-        common.emit(
-            "memory_ratio", name,
-            nnz=a.nnz,
-            packsell_bytes=ms_p["packsell_bytes"],
-            sell_bytes=ms_s["sell_bytes"],
-            ratio=ratio,
-            dummy_frac=ps.n_dummy / max(a.nnz, 1),
-            bucket_overhead_frac=ms_p["bucket_overhead_bytes"]
-            / max(ms_p["packsell_bytes"], 1),
-        )
+    prev = observe.enable(True)
+    rows = []
+    try:
+        for name, a in suite.items():
+            ps = pk.from_csr(a, C=C, sigma=sigma, D=15, codec="fp16")
+            se = sl.from_csr(a, C=C, sigma=sigma, value_dtype="float16",
+                             device=False)
+            ms_p = ps.memory_stats()
+            ms_s = se.memory_stats()
+            ratio = ms_p["packsell_bytes"] / ms_s["sell_bytes"]
+            rows.append(common.emit(
+                "memory_ratio", name,
+                nnz=a.nnz,
+                packsell_bytes=ms_p["packsell_bytes"],
+                sell_bytes=ms_s["sell_bytes"],
+                ratio=ratio,
+                dummy_frac=ps.n_dummy / max(a.nnz, 1),
+                bucket_overhead_frac=ms_p["bucket_overhead_bytes"]
+                / max(ms_p["packsell_bytes"], 1),
+                **_plan_stats(ps),
+            ))
 
-        # D sweep for the e8m codec (memory side of Fig. 9)
-        for D in (1, 4, 8, 12):
-            pe = pk.from_csr(a, C=C, sigma=sigma, D=D, codec="e8m",
-                             device=False)
-            common.emit(
-                "memory_ratio_e8m", f"{name}_D{D}",
-                ratio=pe.memory_stats()["packsell_bytes"]
-                / ms_s["sell_bytes"],
-                dummy_frac=pe.n_dummy / max(a.nnz, 1),
-            )
+            # D sweep for the e8m codec (memory side of Fig. 9)
+            for D in (1, 4, 8, 12):
+                pe = pk.from_csr(a, C=C, sigma=sigma, D=D, codec="e8m")
+                rows.append(common.emit(
+                    "memory_ratio_e8m", f"{name}_D{D}",
+                    ratio=pe.memory_stats()["packsell_bytes"]
+                    / ms_s["sell_bytes"],
+                    dummy_frac=pe.n_dummy / max(a.nnz, 1),
+                    **_plan_stats(pe),
+                ))
 
-    # RCM reordering (paper §5.1.1 future work): locality recovery on the
-    # scattered/powerlaw classes — dummy fraction and footprint before/after
-    from repro.core import reorder
-    for name, a in suite.items():
-        if a.shape[0] != a.shape[1]:
-            continue
-        sym = (a + a.T).tocsr()
-        ar, _ = reorder.rcm_reorder(sym)
-        for tag, mat in (("orig", sym), ("rcm", ar)):
-            pe = pk.from_csr(mat, C=C, sigma=sigma, D=6, codec="e8m",
-                             device=False)
-            se = sl.from_csr(mat, C=C, sigma=sigma, value_dtype="float16",
-                             device=False)
-            common.emit(
-                "memory_rcm", f"{name}_{tag}",
-                bandwidth=reorder.bandwidth(mat),
-                dummy_frac=pe.n_dummy / max(mat.nnz, 1),
-                ratio=pe.memory_stats()["packsell_bytes"]
-                / se.memory_stats()["sell_bytes"],
-            )
+        # RCM reordering (paper §5.1.1 future work): locality recovery on
+        # the scattered/powerlaw classes — dummy fraction and footprint
+        # before/after
+        from repro.core import reorder
+        for name, a in suite.items():
+            if a.shape[0] != a.shape[1]:
+                continue
+            sym = (a + a.T).tocsr()
+            ar, _ = reorder.rcm_reorder(sym)
+            for tag, mat in (("orig", sym), ("rcm", ar)):
+                pe = pk.from_csr(mat, C=C, sigma=sigma, D=6, codec="e8m",
+                                 device=False)
+                se = sl.from_csr(mat, C=C, sigma=sigma,
+                                 value_dtype="float16", device=False)
+                rows.append(common.emit(
+                    "memory_rcm", f"{name}_{tag}",
+                    bandwidth=reorder.bandwidth(mat),
+                    dummy_frac=pe.n_dummy / max(mat.nnz, 1),
+                    ratio=pe.memory_stats()["packsell_bytes"]
+                    / se.memory_stats()["sell_bytes"],
+                ))
+        common.save_bench_json(_JSON_PATH, {"scale": scale, "rows": rows})
+    finally:
+        observe.enable(prev)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default=None)
+    run(ap.parse_args().scale)

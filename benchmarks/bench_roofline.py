@@ -69,16 +69,38 @@ CODECS = (("fp16", 15), ("e8m", 8))
 HLO_TOLERANCE = float(os.environ.get("REPRO_ROOFLINE_HLO_TOL", "8.0"))
 
 
-def _hlo_bytes(plan, mat, x) -> float:
+def _hlo_text(plan, mat, x) -> str:
+    """Compiled optimized-HLO text of one plan dispatch — feeds both the
+    byte cross-check and (``--profile``) the op->span attribution join."""
+    fn = jax.jit(plan._execute, static_argnums=(3,))
+    return fn.lower(plan._exec_mat(mat), plan._device_operands(), x,
+                    False).compile().as_text()
+
+
+def _hlo_bytes(txt: str) -> float:
     """Bytes moved by one compiled plan dispatch, per the HLO cost model
     (static analysis of the optimized module — no execution)."""
-    fn = jax.jit(plan._execute, static_argnums=(3,))
-    txt = fn.lower(plan._exec_mat(mat), plan._device_operands(), x,
-                   False).compile().as_text()
     return float(hlo_cost.aggregate(txt)["bytes"])
 
 
-def _cells(name: str, a, peak: dict) -> list[dict]:
+def _span_profile(plan, mat, x, hlo_txt: str) -> dict:
+    """Per-cell device-time span breakdown (``--profile``): run the plan
+    dispatch under ``observe.profile.profile_dispatch`` with the SAME
+    compiled-HLO text the byte cross-check lowered, so trace events join
+    against exactly the executable being measured."""
+    from repro.observe import profile as obs_profile
+
+    sp = obs_profile.profile_dispatch(
+        lambda v: plan.spmv(mat, v), x, hlo_texts=(hlo_txt,), repeats=10)
+    d = sp.to_dict()
+    # trim event payloads the scoreboard does not need
+    d["spans"] = {k: {kk: vv for kk, vv in v.items()}
+                  for k, v in d["spans"].items()
+                  if v["device_s"] > 0 or v["host_s"] > 0 or v["ops"]}
+    return d
+
+
+def _cells(name: str, a, peak: dict, profile: bool = False) -> list[dict]:
     """One scoreboard row per codec for matrix class ``name`` — both
     codecs timed interleaved so the fp16-vs-packed ratio is paired."""
     a = a.tocsr()
@@ -110,7 +132,8 @@ def _cells(name: str, a, peak: dict) -> list[dict]:
             + dcs["decode_cache_bytes"] + vec_bytes
         fmt = plan.as_composite(mat).memory_stats()
         model_bytes = fmt["composite_bytes"] + vec_bytes
-        hlo = _hlo_bytes(plan, mat, x)
+        hlo_txt = _hlo_text(plan, mat, x)
+        hlo = _hlo_bytes(hlo_txt)
 
         gbs = stream_bytes / t / 1e9
         frac = gbs * 1e9 / peak["bw_bytes_per_s"]
@@ -130,9 +153,18 @@ def _cells(name: str, a, peak: dict) -> list[dict]:
             peak_gbs=peak["bw_bytes_per_s"] / 1e9,
             achieved_frac_of_peak=frac,
         )
+        if profile:
+            prof = _span_profile(plan, mat, x, hlo_txt)
+            row["span_profile"] = prof
+            tag = ("profiler_unavailable" if prof["profiler_unavailable"]
+                   else f"accounted={prof['accounted_frac_of_wall']:.2f} "
+                        f"span_dev={prof['coverage_of_wall']:.2f} "
+                        f"host={prof['host_overhead_s'] * 1e6:.1f}us")
+            print(f"  profile {name}/{key}: {tag}")
         rows.append(row)
         common.emit("roofline_spmv", f"{name}_{key}",
-                    **{k: v for k, v in row.items() if k != "klass"})
+                    **{k: v for k, v in row.items()
+                       if k not in ("klass", "span_profile")})
     return rows
 
 
@@ -165,8 +197,11 @@ def _legacy_dryrun_cells() -> list[dict]:
     return out
 
 
-def run(scale: str | None = None) -> None:
+def run(scale: str | None = None, profile: bool | None = None) -> None:
     scale = scale or common.SCALE
+    if profile is None:
+        profile = os.environ.get("REPRO_BENCH_PROFILE", "0") not in (
+            "0", "", "false")
     prev = observe.enable(True)          # the run records itself
     try:
         peak = rl.peak_bandwidth()
@@ -175,12 +210,13 @@ def run(scale: str | None = None) -> None:
                     source=peak["source"])
         cells = []
         for name, a in testmats.suite("tiny").items():
-            cells.extend(_cells(name, a, peak))
+            cells.extend(_cells(name, a, peak, profile=profile))
 
         bad = [f"{c['klass']}/{c['codec']}{c['D']}" for c in cells
                if not c["hlo_within_tolerance"]]
         payload = dict(
             scale=scale, backend=jax.default_backend(),
+            profiled=bool(profile),
             peak_bandwidth=peak,
             hlo_tolerance=HLO_TOLERANCE,
             hlo_cells_out_of_tolerance=bad,
@@ -206,4 +242,8 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default=None)
-    run(ap.parse_args().scale)
+    ap.add_argument("--profile", action="store_true",
+                    help="attach a per-cell device-time span breakdown "
+                         "(observe.profile) to every scoreboard cell")
+    ns = ap.parse_args()
+    run(ns.scale, profile=ns.profile or None)

@@ -9,10 +9,7 @@ from __future__ import annotations
 
 import json
 import os
-import platform
-import subprocess
 import time
-from datetime import datetime, timezone
 
 import jax
 import numpy as np
@@ -26,60 +23,72 @@ BENCH_SCHEMA_VERSION = 1
 _ROWS: list[dict] = []
 
 
-def _git_sha() -> str:
-    try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short=12", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)),
-            capture_output=True, text=True, timeout=10,
-        ).stdout.strip() or "unknown"
-    except (OSError, subprocess.SubprocessError):
-        return "unknown"
-
-
-def _cpu_model() -> str:
-    try:
-        with open("/proc/cpuinfo") as f:
-            for line in f:
-                if line.lower().startswith("model name"):
-                    return line.split(":", 1)[1].strip()
-    except OSError:
-        pass
-    return platform.processor() or platform.machine() or "unknown"
-
-
 def bench_meta(**extra) -> dict:
-    """Schema-versioned metadata header stamped into every BENCH_*.json:
-    what machine, toolchain, and commit produced the numbers — so
-    trajectories stay comparable across machines and reruns."""
+    """Schema-versioned metadata header stamped into every BENCH_*.json.
+    Provenance fields (commit, toolchain, machine) come from
+    ``observe.export.run_meta`` — the SAME header telemetry archives
+    carry, so bench files and metric streams stay joinable in the
+    trajectory store."""
+    from repro.observe import export as _export
+
     return {
         "schema_version": BENCH_SCHEMA_VERSION,
-        "generated_at": datetime.now(timezone.utc).isoformat(
-            timespec="seconds"),
-        "git_sha": _git_sha(),
-        "jax_version": jax.__version__,
-        "backend": jax.default_backend(),
-        "platform": platform.platform(),
-        "cpu": _cpu_model(),
-        "python": platform.python_version(),
-        "scale": SCALE,
-        **extra,
+        **_export.run_meta(scale=SCALE, **extra),
     }
 
 
 def save_bench_json(path: str, payload) -> None:
     """Write a checked-in BENCH_*.json with the :func:`bench_meta` header.
     ``payload`` may be a dict (header merged in under ``meta``) or a bare
-    row list (wrapped as ``{"meta": ..., "rows": [...]}``)."""
+    row list (wrapped as ``{"meta": ..., "rows": [...]}``).
+
+    Every writer gets the flight-recorder treatment for free: unless the
+    payload already carries an ``observe_report`` section, the current
+    ``observe.report()`` snapshot is embedded (counters land next to the
+    timings they describe), and the full telemetry state is archived as a
+    JSONL delta under ``artifacts/obs/`` (``REPRO_OBS_ARCHIVE_DIR``; set
+    to empty to disable)."""
     if not isinstance(payload, dict):
         payload = {"rows": payload}
-    payload = {"meta": bench_meta(), **payload}
+    meta = bench_meta()
+    if "observe_report" not in payload:
+        try:
+            from repro import observe as _observe
+
+            payload = {**payload, "observe_report": _observe.report()}
+        except Exception:
+            pass
+    payload = {"meta": meta, **payload}
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"[benchmarks] wrote {path}")
+    _archive_telemetry(path, meta)
+
+
+def _archive_telemetry(bench_path: str, meta: dict) -> None:
+    """Append this run's metric state to ``artifacts/obs/<bench>.jsonl``
+    (one meta header per file, then snapshot-deltas — JsonlSink
+    semantics), so the raw counters behind every committed BENCH figure
+    survive next to the repo's other artifacts."""
+    root = os.environ.get(
+        "REPRO_OBS_ARCHIVE_DIR",
+        os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "artifacts", "obs"))
+    if not root:
+        return
+    try:
+        from repro.observe import export as _export
+
+        stem = os.path.splitext(os.path.basename(bench_path))[0]
+        sink = _export.JsonlSink(
+            os.path.join(root, f"{stem}.jsonl"),
+            meta={**meta, "bench_file": os.path.basename(bench_path)})
+        sink.flush()
+    except Exception as e:            # archive must never fail the bench
+        print(f"[benchmarks] telemetry archive skipped: {e!r}")
 
 
 def time_fn(fn, *args, warmup: int = 2, repeats: int = 5) -> float:

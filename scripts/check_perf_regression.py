@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Noise-aware benchmark regression gate (DESIGN.md §13.3).
+
+Two modes, both built on :mod:`repro.observe.trajectory`:
+
+    # refresh the committed baseline (N repeated tiny-scale runs)
+    python scripts/check_perf_regression.py \
+        --make-baseline artifacts/perf_baseline.json --reps 3
+
+    # gate the working tree against it (what `make perf-gate` / ci.sh run)
+    python scripts/check_perf_regression.py \
+        --against artifacts/perf_baseline.json
+
+The gated benches (spmv + roofline, the hot-path timings) run at TINY
+scale in a subprocess with their output redirected to a temp dir via the
+``REPRO_BENCH_*_JSON`` env vars, so the checked-in small-scale BENCH
+files are never clobbered.  Pass ``--bench FILE...`` to gate
+already-produced BENCH files instead of re-running (ci.sh does this with
+its smoke artifacts).
+
+Every gated run is also appended to ``artifacts/trajectory.jsonl`` — the
+unified perf history — unless ``--trajectory ''`` disables it.
+
+Exit code: 0 = gate passed (or baseline written), 1 = regression.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from repro.observe import trajectory  # noqa: E402
+
+#: benches that produce GATED_METRICS rows, with their redirect env var
+_GATED_BENCHES = (
+    ("spmv", "REPRO_BENCH_SPMV_JSON"),
+    ("roofline", "REPRO_BENCH_ROOFLINE_JSON"),
+)
+
+
+def run_gated_benches(outdir: str, tag: str = "run") -> list[str]:
+    """One tiny-scale run of the gated benches, outputs redirected into
+    ``outdir``/``tag`` (canonical BENCH_<name>.json filenames — the
+    trajectory keys on the filename); returns the produced paths."""
+    env = dict(os.environ)
+    paths = []
+    os.makedirs(os.path.join(outdir, tag), exist_ok=True)
+    for name, var in _GATED_BENCHES:
+        p = os.path.join(outdir, tag, f"BENCH_{name}.json")
+        env[var] = p
+        paths.append(p)
+    env["REPRO_OBS_ARCHIVE_DIR"] = ""        # no telemetry spam from reps
+    src = os.path.join(_ROOT, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    only = ",".join(name for name, _ in _GATED_BENCHES)
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", only,
+         "--scale", "tiny"],
+        cwd=_ROOT, env=env, check=True,
+        stdout=subprocess.DEVNULL)
+    return [p for p in paths if os.path.exists(p)]
+
+
+def _report(res: dict) -> None:
+    bm = res["baseline_meta"]
+    print(f"[perf-gate] baseline: sha={bm.get('git_sha', '?')} "
+          f"scale={bm.get('scale', '?')} reps={bm.get('reps', '?')}")
+    print(f"[perf-gate] thresholds: rel_tol={res['rel_tol']} "
+          f"iqr_k={res['iqr_k']} severe_tol={res['severe_tol']} "
+          f"min_classes={res['min_classes']}")
+    for row in res["checked"]:
+        mark = "SEVERE" if row["severe"] else (
+            "regressed" if row["regressed"] else "ok")
+        arrow = "<=" if row["direction"] == "lower" else ">="
+        print(f"  [{mark:>9}] {row['key']:<55} "
+              f"base={row['baseline']:.4g} cur={row['current']:.4g} "
+              f"({arrow} better) regression={row['regression']:+.1%} "
+              f"threshold={row['threshold']:.1%}")
+    for row in res["skipped"]:
+        print(f"  [  skipped] {row['key']:<55} {row['reason']}")
+    if res["regressed_classes"]:
+        print(f"[perf-gate] regressed classes: "
+              f"{', '.join(res['regressed_classes'])} "
+              f"(fail at >= {res['min_classes']})")
+    print(f"[perf-gate] {'PASS' if res['ok'] else 'FAIL'}: "
+          f"{len(res['checked'])} checked, "
+          f"{len(res['regressed'])} regressed, "
+          f"{len(res['severe'])} severe, {len(res['skipped'])} skipped")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--against", default=None, metavar="BASELINE",
+                    help="gate mode: committed baseline JSON to compare "
+                         "against")
+    ap.add_argument("--make-baseline", default=None, metavar="PATH",
+                    help="baseline mode: run --reps repetitions and write "
+                         "the reduced baseline here")
+    ap.add_argument("--reps", type=int, default=3,
+                    help="baseline repetitions (default 3)")
+    ap.add_argument("--bench", nargs="*", default=None, metavar="FILE",
+                    help="gate these BENCH_*.json files instead of "
+                         "running the tiny benches")
+    ap.add_argument("--trajectory", default="artifacts/trajectory.jsonl",
+                    help="unified perf-history JSONL ('' disables)")
+    ap.add_argument("--rel-tol", type=float, default=0.25)
+    ap.add_argument("--iqr-k", type=float, default=3.0)
+    ap.add_argument("--severe-tol", type=float, default=0.75)
+    ap.add_argument("--min-classes", type=int, default=2)
+    args = ap.parse_args(argv)
+    if bool(args.against) == bool(args.make_baseline):
+        ap.error("exactly one of --against / --make-baseline is required")
+
+    traj = args.trajectory
+    if traj and not os.path.isabs(traj):
+        traj = os.path.join(_ROOT, traj)
+
+    if args.make_baseline:
+        runs = []
+        with tempfile.TemporaryDirectory(prefix="perf_baseline_") as td:
+            for i in range(args.reps):
+                print(f"[perf-baseline] rep {i + 1}/{args.reps} "
+                      "(tiny-scale gated benches)...")
+                files = run_gated_benches(td, tag=f"rep{i}")
+                runs.append(trajectory.ingest_many(files))
+        base = trajectory.build_baseline(runs)
+        trajectory.save_baseline(base, args.make_baseline)
+        print(f"[perf-baseline] wrote {args.make_baseline}: "
+              f"{len(base['entries'])} entries, reps={args.reps}")
+        if traj:
+            n = trajectory.append([r for run in runs for r in run], traj)
+            print(f"[perf-baseline] appended {n} records -> {traj}")
+        return 0
+
+    baseline = trajectory.load_baseline(args.against)
+    if args.bench:
+        current = trajectory.ingest_many(args.bench)
+    else:
+        with tempfile.TemporaryDirectory(prefix="perf_gate_") as td:
+            print("[perf-gate] running tiny-scale gated benches...")
+            current = trajectory.ingest_many(
+                run_gated_benches(td, tag="gate"))
+    res = trajectory.gate(
+        current, baseline, rel_tol=args.rel_tol, iqr_k=args.iqr_k,
+        severe_tol=args.severe_tol, min_classes=args.min_classes)
+    _report(res)
+    if traj:
+        n = trajectory.append(current, traj)
+        print(f"[perf-gate] appended {n} records -> {traj}")
+    return 0 if res["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -60,6 +60,14 @@ if [[ "${1:-}" != "fast" ]]; then
   REPRO_OBS=1 python -m pytest -x -q tests/test_observe.py
   python scripts/check_observe_overhead.py
 
+  echo "== sentinel: exporters + trajectory + overhead with live exporter =="
+  # the perf-sentinel layer (DESIGN.md §13): Prometheus/JSONL exporter
+  # round-trips, trajectory schema contract, gate statistics, span
+  # profiling — then the same <3% dispatch-overhead gate re-run with a
+  # live 1s-interval exporter thread flushing throughout
+  REPRO_OBS=1 python -m pytest -x -q tests/test_sentinel.py
+  python scripts/check_observe_overhead.py --with-exporter
+
   echo "== precision: subsystem tests + adaptive_pcg smoke =="
   # the example's adaptive section must converge to 1e-8 with a
   # low-precision (sub-32-bit) operator/preconditioner; the store
@@ -78,6 +86,16 @@ if [[ "${1:-}" != "fast" ]]; then
     cp "$f" "/tmp/$f.orig" 2>/dev/null || true
   done
   python -m benchmarks.run --only spmv,robust,roofline --scale tiny
+
+  echo "== sentinel: perf regression gate on the smoke artifacts =="
+  # the tiny smoke run just produced BENCH_spmv/roofline at the SAME
+  # scale as the committed baseline — gate them before restoring the
+  # checked-in files (a failure here means the working tree made the
+  # hot path slower than artifacts/perf_baseline.json tolerates)
+  python scripts/check_perf_regression.py \
+    --against artifacts/perf_baseline.json \
+    --bench BENCH_spmv.json BENCH_roofline.json
+
   for f in BENCH_spmv.json BENCH_robust.json BENCH_roofline.json; do
     if [[ -f "/tmp/$f.orig" ]]; then mv "/tmp/$f.orig" "$f"; fi
   done

@@ -761,10 +761,12 @@ class SpMVPlan:
                 part = _fused_part_spmv(fused[0], fused[1], xc, mat.codec,
                                         mat.D, self.fused_layout)
             return self._fused_epilogue(part, dev, permuted)
-        t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=False)
+        with _obs.span("packsell.bucket_decode"):
+            t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=False)
         if permuted:
             return t_cat
-        return self._unpermute(t_cat, dev.get("inv"), dev["outrow"])
+        with _obs.span("packsell.gather_epilogue"):
+            return self._unpermute(t_cat, dev.get("inv"), dev["outrow"])
 
     def _execute_mm(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
                     permuted: bool) -> jnp.ndarray:
@@ -775,10 +777,12 @@ class SpMVPlan:
                 part = _fused_part_spmm(fused[0], fused[1], xc, mat.codec,
                                         mat.D, self.fused_layout)
             return self._fused_epilogue(part, dev, permuted)
-        t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=True)
+        with _obs.span("packsell.bucket_decode"):
+            t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=True)
         if permuted:
             return t_cat
-        return self._unpermute(t_cat, dev.get("inv"), dev["outrow"])
+        with _obs.span("packsell.gather_epilogue"):
+            return self._unpermute(t_cat, dev.get("inv"), dev["outrow"])
 
     def _fused_epilogue(self, part, dev: dict, permuted: bool):
         """Reduce group partials to the requested order. Un-permuted

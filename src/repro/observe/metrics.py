@@ -24,12 +24,13 @@ from __future__ import annotations
 import contextlib
 import json
 import os
+import random
 import threading
 
 __all__ = [
     "enabled", "enable", "inc", "gauge", "observe", "record_trace",
-    "series_key", "inc_many", "counter_bump", "snapshot", "reset",
-    "export_json", "span",
+    "series_key", "inc_many", "counter_bump", "snapshot", "raw_snapshot",
+    "reset", "export_json", "span",
 ]
 
 
@@ -46,6 +47,11 @@ _GAUGES: dict = {}
 _HISTS: dict = {}          # key -> {"count", "sum", "min", "max", "last"}
 _TRACES: dict = {}         # key -> list of records (bounded)
 _TRACE_CAP = 256           # per-series record cap (drop-oldest)
+_RES_CAP = 256             # per-histogram quantile reservoir size
+_QUANTILES = (("p50", 0.50), ("p95", 0.95), ("p99", 0.99))
+# Algorithm-R replacement draws: a dedicated seeded stream so reservoir
+# contents are reproducible per process and never perturb user RNG state
+_RES_RNG = random.Random(0xC0FFEE)
 
 
 def enabled() -> bool:
@@ -132,8 +138,11 @@ def gauge(name: str, value: float, **labels) -> None:
 
 
 def observe(name: str, value: float, **labels) -> None:
-    """Record ``value`` into histogram ``name{labels}`` (count/sum/min/
-    max/last — enough for rates and ranges without bucket configuration)."""
+    """Record ``value`` into histogram ``name{labels}``: count/sum/min/
+    max/last aggregates plus a bounded reservoir (Algorithm R, cap
+    ``_RES_CAP``) that :func:`snapshot` turns into p50/p95/p99 — serving
+    latency SLOs need percentiles, not means.  Still strictly a no-op
+    when the recorder is disabled."""
     if not _ENABLED:
         return
     k = _key(name, labels)
@@ -141,13 +150,31 @@ def observe(name: str, value: float, **labels) -> None:
     with _LOCK:
         h = _HISTS.get(k)
         if h is None:
-            _HISTS[k] = {"count": 1, "sum": v, "min": v, "max": v, "last": v}
+            _HISTS[k] = {"count": 1, "sum": v, "min": v, "max": v,
+                         "last": v, "res": [v]}
         else:
             h["count"] += 1
             h["sum"] += v
             h["min"] = min(h["min"], v)
             h["max"] = max(h["max"], v)
             h["last"] = v
+            res = h["res"]
+            if len(res) < _RES_CAP:
+                res.append(v)
+            else:
+                # uniform reservoir: each of the count values seen so far
+                # keeps an equal _RES_CAP/count chance of being resident
+                j = _RES_RNG.randrange(h["count"])
+                if j < _RES_CAP:
+                    res[j] = v
+
+
+def _quantiles(res: list) -> dict:
+    """Nearest-rank percentiles from a reservoir sample (exact when the
+    series has fewer than ``_RES_CAP`` observations)."""
+    s = sorted(res)
+    n = len(s)
+    return {tag: s[min(int(q * n), n - 1)] for tag, q in _QUANTILES}
 
 
 def record_trace(name: str, record: dict, **labels) -> None:
@@ -170,6 +197,14 @@ def _fmt_key(k) -> str:
     return name + "{" + ",".join(f"{a}={b}" for a, b in labels) + "}"
 
 
+def _hist_view(h: dict) -> dict:
+    """Exported histogram record: aggregates + reservoir percentiles (the
+    raw reservoir stays private to the registry)."""
+    out = {k: v for k, v in h.items() if k != "res"}
+    out.update(_quantiles(h["res"]))
+    return out
+
+
 def snapshot() -> dict:
     """Point-in-time copy of every series, keyed ``name{k=v,...}``."""
     with _LOCK:
@@ -177,10 +212,24 @@ def snapshot() -> dict:
             "enabled": _ENABLED,
             "counters": {_fmt_key(k): v for k, v in sorted(_COUNTERS.items())},
             "gauges": {_fmt_key(k): v for k, v in sorted(_GAUGES.items())},
-            "histograms": {_fmt_key(k): dict(v)
+            "histograms": {_fmt_key(k): _hist_view(v)
                            for k, v in sorted(_HISTS.items())},
             "traces": {_fmt_key(k): [dict(r) for r in v]
                        for k, v in sorted(_TRACES.items())},
+        }
+
+
+def raw_snapshot() -> dict:
+    """Structured twin of :func:`snapshot` for machine consumers (the
+    exporters): series keyed by the raw ``(name, ((label, value), ...))``
+    tuples instead of formatted strings, so no string parsing is ever
+    needed to recover labels.  Traces are excluded — they are logs, not
+    metrics."""
+    with _LOCK:
+        return {
+            "counters": dict(_COUNTERS),
+            "gauges": dict(_GAUGES),
+            "histograms": {k: _hist_view(v) for k, v in _HISTS.items()},
         }
 
 

@@ -119,6 +119,40 @@ class DecodeEngine:
         self._decode = jax.jit(partial(tfm.forward_decode, cfg))
         self._insert = jax.jit(self._insert_impl, donate_argnums=(0,),
                                static_argnums=(3,))
+        self._exporter = None
+
+    # -- perf sentinel (DESIGN.md §13.2) -------------------------------
+    def metrics_endpoint_text(self) -> str:
+        """The engine's metrics in Prometheus text exposition format —
+        what a ``GET /metrics`` handler would return.  Serving counters
+        (ticks, decode tokens, request latency quantiles) plus whatever
+        else the flight recorder saw this process."""
+        from repro.observe import export as _export
+
+        return _export.prometheus_text()
+
+    def start_metrics_exporter(self, path: str = "artifacts/obs/serving.jsonl",
+                               interval_s: float = 1.0):
+        """Attach a background JSONL exporter (``observe.export``): one
+        snapshot-delta record per interval, plus a flush after every
+        :meth:`run` drain so short-lived engines still land their tallies.
+        Idempotent per engine; returns the :class:`~repro.observe.export.
+        Exporter`."""
+        from repro.observe import export as _export
+
+        if self._exporter is None:
+            meta = _export.run_meta(source="serving.engine",
+                                    slots=self.scfg.slots,
+                                    max_len=self.scfg.max_len)
+            self._exporter = _export.start_exporter(
+                interval_s=interval_s, path=path, meta=meta)
+        return self._exporter
+
+    def stop_metrics_exporter(self) -> None:
+        """Stop the background exporter (final flush included)."""
+        if self._exporter is not None:
+            self._exporter.stop()
+            self._exporter = None
 
     # ------------------------------------------------------------------
     def warmup(self, spec: WarmupSpec | None = None, *, prompt_lens=(),
@@ -318,6 +352,8 @@ class DecodeEngine:
                 and ticks < max_ticks:
             self.step()
             ticks += 1
+        if self._exporter is not None:   # land this batch's tallies now
+            self._exporter.sink.flush()  # rather than at the next interval
         return self.done
 
     # ------------------------------------------------------------------
