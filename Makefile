@@ -2,8 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test verify verify-dist verify-precision verify-composite \
-	verify-fused verify-robust verify-observe bench bench-spmv \
-	bench-dist bench-precision bench-composite bench-robust \
+	verify-fused verify-pallas verify-robust verify-observe bench \
+	bench-spmv bench-dist bench-precision bench-composite bench-robust \
 	bench-roofline bench-memory bench-e8my perf-gate perf-baseline
 
 test:
@@ -34,6 +34,20 @@ verify-precision:
 # trace-count regression guard, and the fused solver step
 verify-fused:
 	python -m pytest -x -q tests/test_fused.py
+
+# fused-stream Pallas kernel (DESIGN.md §14): interpret-mode bit-parity
+# vs the jnp fused decode (codec × wr × boundary sweeps), the 'fused'
+# plan variant (policy, spmm fallback, retile wr rebuild), backend-keyed
+# retile store entries and the fused-variant solver parity — under every
+# cursor-cache mode (the fused variant must force 'checkpoint' and log
+# the override in plan.policy)
+verify-pallas:
+	for mode in checkpoint full 0; do \
+		echo "-- REPRO_PLAN_CURSOR_CACHE=$$mode"; \
+		REPRO_PLAN_CURSOR_CACHE=$$mode \
+			python -m pytest -x -q tests/test_fused_kernel.py \
+			|| exit 1; \
+	done
 
 # block-composition engine: composite/kind-parser/warmup tests plus the
 # mesh-gated dist_mixed × adaptive_pcg_dist acceptance tests under 4

@@ -46,20 +46,48 @@ def _vmem_bytes(mat: pk.PackSELLMatrix, sb: int, wb: int, full_x: bool,
 
 
 def autotune(mat: pk.PackSELLMatrix, x: jnp.ndarray, *,
-             sbs=(2, 4, 8), wbs=(8, 16, 32), force: str = "full",
+             sbs=(2, 4, 8), wbs=(8, 16, 32), wrs=None, force: str = "full",
              hw: int = 4096, interpret: bool | None = None,
-             repeats: int = 3):
-    """Sweep (sb, wb) per bucket shape and install the fastest tiling into
-    the matrix's cached SpMVPlan. Returns (plan, records); each record is
-    ``dict(bucket, sb, wb, seconds)``. No-op for the 'jnp' variant (no
+             repeats: int = 3, store=None, fingerprint: str | None = None,
+             store_key: str | None = None):
+    """Sweep (sb, wb) per bucket shape — and the plan-global fused
+    checkpoint width ``wr`` for fused plans — and install the fastest
+    tiling into the matrix's cached SpMVPlan. Returns (plan, records);
+    each record is ``dict(bucket, sb, wb, seconds)`` (kernel sweep) or
+    ``dict(wr, seconds)`` (width sweep). No-op for the 'jnp' variant (no
     tiles). Winners persist: every later ``ops.packsell_spmv`` /
-    ``plan.spmv`` call with the same plan key dispatches the tuned tiling.
+    ``plan.spmv`` call with the same plan key dispatches the tuned
+    tiling, and when ``store``/``fingerprint``/``store_key`` are given
+    the winners are ALSO persisted backend-keyed in the precision store
+    (``store.put_retile`` — a CPU interpret sweep never poisons a
+    TPU/GPU selection).
     """
     plan = kplan.get_plan(mat, hw=hw, force=force, interpret=interpret)
     if plan.variant == "jnp":
         return plan, []
+    records = []
+    if plan.variant == "fused":
+        # fused plans have no per-bucket kernel tiles to sweep; the knob
+        # is the checkpoint width wr (group granularity + level depth)
+        wrs = kplan._CKPT_WIDTHS if wrs is None else wrs
+        best_wr, best_t = plan.fused_layout.wr, np.inf
+        for wr in wrs:
+            cand = kplan.build_plan(mat, hw=hw, force=force,
+                                    interpret=interpret, ckpt_wr=wr)
+            if cand.variant != "fused" or cand.fused_layout.wr != wr:
+                continue            # infeasible at this width
+            t = common.time_fn(lambda x, c=cand: c.spmv(mat, x), x,
+                               warmup=1, repeats=repeats)
+            records.append(dict(wr=int(wr), seconds=t))
+            if t < best_t:
+                best_wr, best_t = int(wr), t
+        winners = [(sb, wb, best_wr) for sb, wb in plan.tiles]
+        plan.retile(winners)
+        if store is not None and fingerprint and store_key:
+            store.put_retile(fingerprint, store_key, winners)
+        return plan, records
     interp = plan.interpret
-    records, winners = [], []
+    winners = []
     for b, (pack, d0, maxcol) in enumerate(
             zip(mat.packs, mat.d0s, mat.maxcols)):
         best_tile, best_t = plan.tiles[b], np.inf
@@ -88,6 +116,8 @@ def autotune(mat: pk.PackSELLMatrix, x: jnp.ndarray, *,
                     best_tile, best_t = (sb, wb), t
         winners.append(best_tile)
     plan.retile(winners)
+    if store is not None and fingerprint and store_key:
+        store.put_retile(fingerprint, store_key, winners)
     return plan, records
 
 

@@ -108,16 +108,28 @@ def _cells(name: str, a, peak: dict, profile: bool = False) -> list[dict]:
     rng = np.random.default_rng(5)
     x = jnp.asarray(rng.standard_normal(a.shape[1]).astype(np.float32))
 
-    mats, plans = {}, {}
+    mats, plans, plans_pl = {}, {}, {}
     for codec, D in CODECS:
         key = f"{codec}{D}"
         mats[key] = pk.from_csr(a, C=32, sigma=256, D=D, codec=codec)
         plans[key] = kplan.get_plan(mats[key])
+        # the pallas-fused variant of the same cell (kernel over the same
+        # stream; interpret mode off-TPU). Demotes to jnp when the stream
+        # is infeasible — the variant column records which one ran.
+        plans_pl[key] = kplan.build_plan(mats[key], force="fused")
 
     ts = common.time_fns(
         {k: (lambda v, mm=mats[k], p=plans[k]: p.spmv(mm, v))
          for k in mats},
         {k: (x,) for k in mats}, rounds=15, samples=True)
+    # paired jnp-fused vs pallas-fused timings, few rounds (interpret
+    # mode runs the kernel body in Python off-TPU)
+    pl_keys = [k for k in mats if plans_pl[k].variant == "fused"]
+    ts_pl = common.time_fns(
+        {k: (lambda v, mm=mats[k], p=plans_pl[k]: p.spmv(mm, v))
+         for k in pl_keys},
+        {k: (x,) for k in pl_keys},
+        rounds=3, samples=True) if pl_keys else {}
 
     rows = []
     for codec, D in CODECS:
@@ -152,6 +164,11 @@ def _cells(name: str, a, peak: dict, profile: bool = False) -> list[dict]:
             measured_gbs=gbs,
             peak_gbs=peak["bw_bytes_per_s"] / 1e9,
             achieved_frac_of_peak=frac,
+            variant_pallas=plans_pl[key].variant,
+            t_spmv_pallas_s=(float(np.median(ts_pl[key]))
+                             if key in ts_pl else None),
+            pallas_vs_jnp=((t / float(np.median(ts_pl[key])))
+                           if key in ts_pl else None),
         )
         if profile:
             prof = _span_profile(plan, mat, x, hlo_txt)

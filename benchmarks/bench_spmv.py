@@ -108,6 +108,21 @@ def _bench_engine(name: str, a, x: jnp.ndarray) -> dict:
     t_pr1 = float(np.median(ts["pr1"]))
     speedup = common.paired_speedup(ts, "pr1", "fused")
 
+    # pallas-fused variant: the same stream through the fused Pallas
+    # kernel (interpret mode off-TPU — a correctness/variant column
+    # there, a real timing on compiled backends). Few rounds: interpret
+    # mode is Python-speed.
+    t_pallas = pallas_vs_jnp = None
+    plan_pl = kplan.build_plan(mat, force="fused")
+    if plan_pl.variant == "fused":
+        tsp = common.time_fns(
+            {"jnpf": lambda x: plan.spmv(mat, x),
+             "pallas": lambda x: plan_pl.spmv(mat, x)},
+            {"jnpf": (x,), "pallas": (x,)},
+            rounds=5, samples=True)
+        t_pallas = float(np.median(tsp["pallas"]))
+        pallas_vs_jnp = common.paired_speedup(tsp, "jnpf", "pallas")
+
     st = plan.decode_cache_stats()
     lay = plan.fused_layout
     nnz = max(mat.nnz, 1)
@@ -127,6 +142,9 @@ def _bench_engine(name: str, a, x: jnp.ndarray) -> dict:
         fused_speedup_vs_seed_loop=t_loop / t_fused,
         max_rel_diff_vs_pr1=max_rel_diff,
         plan_variant=plan.variant,
+        plan_variant_pallas=plan_pl.variant,
+        pallas_fused_s=t_pallas,
+        pallas_vs_jnp=pallas_vs_jnp,
         decode_cache_mode=st["cache_mode"],
         fused_encoding=None if lay is None else lay.encoding,
         ckpt_width=None if lay is None else lay.wr,

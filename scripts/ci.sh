@@ -43,6 +43,19 @@ if [[ "${1:-}" != "fast" ]]; then
     REPRO_PLAN_CURSOR_CACHE="$mode" python -m pytest -x -q tests/test_fused.py
   done
 
+  echo "== pallas: fused-stream kernel parity (all cursor-cache modes) =="
+  # the fused-stream Pallas kernel (DESIGN.md §14) must match the jnp
+  # fused decode bit-for-bit in interpret mode — codec × wr × boundary
+  # sweeps, the 'fused' plan variant plumbing (spmm fallback, retile wr
+  # rebuild, backend-keyed store entries) and solver iteration parity.
+  # The fused variant pins decode_cache='checkpoint' internally, so the
+  # mode loop proves the override logs and stays correct under each env.
+  for mode in checkpoint full 0; do
+    echo "   -- REPRO_PLAN_CURSOR_CACHE=$mode"
+    REPRO_PLAN_CURSOR_CACHE="$mode" \
+      python -m pytest -x -q tests/test_fused_kernel.py
+  done
+
   echo "== robust: guard/inject/recover + dist fault cases =="
   # guarded execution (DESIGN.md §11): checksum + ABFT detection under
   # seeded injection, store quarantine, cache-bound regression, and the

@@ -165,8 +165,11 @@ def _build_dist_member(idx: int, blocks, rows_local, codec: str, D: int, *,
         mats = [pk.pad_uniform(m, n_slices=S, width=w, device=False)
                 for m in raw]
         # fused_trim=False: the fused layout must be shape-derived so all
-        # shards share one static layout (shapes are pad_uniform'd equal)
-        plans = [kplan.build_plan(m, force="jnp", fused_trim=False)
+        # shards share one static layout (shapes are pad_uniform'd equal).
+        # REPRO_SPMV_POLICY=fused rides the fused Pallas kernel inside the
+        # shard bodies; the default stays the jnp fused-stream body.
+        force_v = "fused" if kplan._env_policy() == "fused" else "jnp"
+        plans = [kplan.build_plan(m, force=force_v, fused_trim=False)
                  for m in mats]
         # ... but the ENCODING is still data-dependent (column-span
         # overflow falls back per shard), so any mismatch demotes the

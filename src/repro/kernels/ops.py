@@ -8,7 +8,7 @@ re-trace. The σ-permutation scatter (paper §4.4 line 15) is applied once over
 the concatenated bucket outputs — or skipped entirely with ``permuted=True``.
 
 Variant policy is explicit (logged in ``plan.policy``) and overridable via
-``force=`` or the ``REPRO_SPMV_POLICY`` env var (``auto|full|band|jnp``).
+``force=`` or the ``REPRO_SPMV_POLICY`` env var (``auto|fused|full|band|jnp``).
 
 On non-TPU backends the Pallas kernels execute with ``interpret=True``
 (kernel body evaluated in Python/XLA on CPU) — numerically identical, used by

@@ -29,6 +29,17 @@ Two x-delivery variants:
   ``XW``-wide window of ``x`` is prefetched per slice-block, selected via a
   scalar-prefetched window id (HBM→VMEM streaming; the GPU kernel gets the
   same effect implicitly through L2).
+
+A third kernel family (:func:`packsell_spmv_fused` / spmm twin) consumes
+the plan engine's **fused ragged checkpoint stream** (DESIGN.md §10/§14)
+instead of the per-bucket packs: ``uint32[G, wr, C]`` words whose offsets
+were prefix-summed at build time and re-based to the per-group ``int32[G,
+C]`` checkpoint, so the in-kernel column reconstruction is ONE add per
+word (dummy-word chains are already folded into the offsets) and the
+group grid axis is embarrassingly parallel. The word decode itself is
+:func:`fused_decode_word` — the single definition the jnp fused body
+(``plan._fused_decode``) delegates to, so kernel/XLA bit-parity holds by
+construction.
 """
 from __future__ import annotations
 
@@ -465,3 +476,190 @@ def packsell_spmm_bucket(pack: jnp.ndarray, d0: jnp.ndarray, x: jnp.ndarray,
         name=f"packsell_spmm_{codec_name}_D{D}",
     )(d0, pack, xp)
     return y[:S, :, :nb]
+
+
+# ---------------------------------------------------------------------------
+# fused-stream variant (the plan engine's ragged checkpoint operand)
+# ---------------------------------------------------------------------------
+
+
+def fused_decode_word(w: jnp.ndarray, codec: cd.Codec, D: int,
+                      encoding: str, scale: float):
+    """(value f32, run-local column offset i32) for fused-stream words.
+
+    The ONE decode definition shared by the jnp fused body
+    (``plan._fused_decode``) and the Pallas fused kernels below —
+    kernel/XLA bit-parity is by construction, not by test luck. The
+    16/16 split encodings are two fixed shifts; ``'words'`` is the
+    canonical branch-free unpack with the delta field already rewritten
+    to the re-based offset."""
+    if encoding == "f16":
+        v16 = (w >> np.uint32(16)).astype(jnp.uint16)
+        v = jax.lax.bitcast_convert_type(v16, jnp.float16)
+        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
+    elif encoding == "top16":
+        v = jax.lax.bitcast_convert_type(w & np.uint32(0xFFFF0000),
+                                         jnp.float32)
+        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
+    elif encoding == "fixed16":
+        v = (jax.lax.bitcast_convert_type(w, jnp.int32)
+             >> np.int32(16)).astype(jnp.float32) * np.float32(scale)
+        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
+    else:                           # 'words'
+        v, local = cd.unpack_words_jnp(w, codec, D)
+        local = local.astype(jnp.int32)
+    return v.astype(jnp.float32), local
+
+
+def _kernel_fused(ckpt_ref, words_ref, x_ref, y_ref, *, codec_name: str,
+                  D: int, encoding: str, scale: float, wk: int):
+    """Fused-stream SpMV kernel body: checkpoint-seeded, carry-free.
+
+    Each (gi, wi) grid instance owns a ``[GB, WK, C]`` word tile plus the
+    matching ``[GB, C]`` checkpoints and reconstructs every column as
+    ``ckpt + offset`` (the offsets are build-time prefix sums re-based to
+    the checkpoint, so dummy-word chains cost nothing at runtime), then
+    runs the unrolled decode → gather → FMA chain over the word axis in
+    stream order — the same accumulation order as the jnp fused body."""
+    codec = cd.make_codec(codec_name)
+    ck = ckpt_ref[...]              # [GB, C] int32
+    words = words_ref[...]          # [GB, WK, C] uint32
+    x = x_ref[...]                  # [m_pad] f32
+    mlim = np.int32(x.shape[0] - 1)
+    acc = jnp.zeros(ck.shape, jnp.float32)
+
+    def body(j, acc):
+        v, local = fused_decode_word(words[:, j, :], codec, D, encoding,
+                                     scale)
+        cols = ck + local
+        xv = jnp.take(x, jnp.minimum(cols, mlim).reshape(-1), axis=0,
+                      mode="clip").reshape(ck.shape)
+        return acc + v * xv
+
+    acc = jax.lax.fori_loop(0, wk, body, acc)
+    y_ref[...] = acc[None]
+
+
+def _kernel_fused_mm(ckpt_ref, words_ref, x_ref, y_ref, *, codec_name: str,
+                     D: int, encoding: str, scale: float, wk: int):
+    """Multi-RHS twin of :func:`_kernel_fused`: one walk over the word
+    tile feeds all nb right-hand sides (nb× arithmetic intensity)."""
+    codec = cd.make_codec(codec_name)
+    ck = ckpt_ref[...]              # [GB, C] int32
+    words = words_ref[...]          # [GB, WK, C] uint32
+    x = x_ref[...]                  # [m_pad, nb] f32
+    mlim = np.int32(x.shape[0] - 1)
+    nb = x.shape[1]
+    acc = jnp.zeros(ck.shape + (nb,), jnp.float32)
+
+    def body(j, acc):
+        v, local = fused_decode_word(words[:, j, :], codec, D, encoding,
+                                     scale)
+        cols = ck + local
+        xv = jnp.take(x, jnp.minimum(cols, mlim).reshape(-1), axis=0,
+                      mode="clip").reshape(ck.shape + (nb,))
+        return acc + v[..., None] * xv
+
+    acc = jax.lax.fori_loop(0, wk, body, acc)
+    y_ref[...] = acc[None]
+
+
+def packsell_spmv_fused(words3d: jnp.ndarray, ckpt: jnp.ndarray,
+                        x: jnp.ndarray, *, codec_name: str, D: int,
+                        encoding: str = "words", scale: float = 0.0,
+                        gb: int = 8, wk: int | None = None,
+                        interpret: bool = True) -> jnp.ndarray:
+    """One Pallas kernel over the whole fused word stream: group partials
+    ``[G, C]`` float32 in stream order. The caller (the plan engine)
+    applies the unrolled level-chain reduction + the 2-D inverse-perm
+    gather epilogue (``plan._fused_epilogue``) — static ``FusedSegment``
+    metadata, so the chain unrolls inside the same jitted dispatch.
+
+    Grid = (group tiles, word-run tiles): both axes are parallel because
+    every word's column offset is re-based to its group checkpoint — no
+    cursor carry exists to serialize on. ``wk`` (word-run tile, default
+    the full ``wr``) keeps a single word tile per group by default so the
+    accumulation order matches the jnp fused body term for term; smaller
+    ``wk`` trades that for more grid parallelism (partial tiles summed
+    by the wrapper, like the checkpoint-seeded bucket kernels)."""
+    G, wr, C = words3d.shape
+    if G == 0:
+        return jnp.zeros((0, C), jnp.float32)
+    wk = wr if wk is None else max(1, min(int(wk), wr))
+    g_pad = -G % gb
+    w_pad = -wr % wk
+    if g_pad or w_pad:
+        # PAD groups/words decode to (v=0, offset=0): they gather x[ckpt]
+        # and contribute 0, and padded group rows are trimmed below
+        words3d = jnp.pad(words3d, ((0, g_pad), (0, w_pad), (0, 0)))
+        ckpt = jnp.pad(ckpt, ((0, g_pad), (0, 0)))
+    Gp, wrp, _ = words3d.shape
+    m_pad = -x.shape[0] % 128
+    xp = jnp.pad(x.astype(jnp.float32), (0, m_pad))
+    nwk = wrp // wk
+    grid = (Gp // gb, nwk)
+    kernel = functools.partial(_kernel_fused, codec_name=codec_name, D=D,
+                               encoding=encoding, scale=scale, wk=wk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((gb, C), lambda gi, wi: (gi, 0)),
+            pl.BlockSpec((gb, wk, C), lambda gi, wi: (gi, wi, 0)),
+            pl.BlockSpec((xp.shape[0],), lambda gi, wi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, gb, C), lambda gi, wi: (wi, gi, 0)),
+        out_shape=jax.ShapeDtypeStruct((nwk, Gp, C), jnp.float32),
+        compiler_params=compat.compiler_params("parallel", "parallel"),
+        interpret=interpret,
+        name=f"packsell_spmv_fused_{encoding}_{codec_name}_D{D}",
+    )(ckpt, words3d, xp)
+    return (y[0] if nwk == 1 else jnp.sum(y, axis=0))[:G]
+
+
+def packsell_spmm_fused(words3d: jnp.ndarray, ckpt: jnp.ndarray,
+                        x: jnp.ndarray, *, codec_name: str, D: int,
+                        encoding: str = "words", scale: float = 0.0,
+                        gb: int = 8, wk: int | None = None,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Multi-RHS fused-stream kernel: ``x`` is [m, nb], returns group
+    partials [G, C, nb] float32 (epilogue as in
+    :func:`packsell_spmv_fused`). ``nb`` is padded to a sublane multiple
+    internally; the whole [m, nb] block is VMEM-resident, so the plan
+    engine applies the same residency limit as the full-x kernels."""
+    G, wr, C = words3d.shape
+    nb = x.shape[1]
+    if G == 0:
+        return jnp.zeros((0, C, nb), jnp.float32)
+    wk = wr if wk is None else max(1, min(int(wk), wr))
+    g_pad = -G % gb
+    w_pad = -wr % wk
+    if g_pad or w_pad:
+        words3d = jnp.pad(words3d, ((0, g_pad), (0, w_pad), (0, 0)))
+        ckpt = jnp.pad(ckpt, ((0, g_pad), (0, 0)))
+    Gp, wrp, _ = words3d.shape
+    m_pad = -x.shape[0] % 128
+    nb_pad = -nb % 8
+    xp = jnp.pad(x.astype(jnp.float32), ((0, m_pad), (0, nb_pad)))
+    nbp = xp.shape[1]
+    nwk = wrp // wk
+    grid = (Gp // gb, nwk)
+    kernel = functools.partial(_kernel_fused_mm, codec_name=codec_name, D=D,
+                               encoding=encoding, scale=scale, wk=wk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((gb, C), lambda gi, wi: (gi, 0)),
+            pl.BlockSpec((gb, wk, C), lambda gi, wi: (gi, wi, 0)),
+            pl.BlockSpec((xp.shape[0], nbp), lambda gi, wi: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gb, C, nbp),
+                               lambda gi, wi: (wi, gi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nwk, Gp, C, nbp), jnp.float32),
+        compiler_params=compat.compiler_params("parallel", "parallel"),
+        interpret=interpret,
+        name=f"packsell_spmm_fused_{encoding}_{codec_name}_D{D}",
+    )(ckpt, words3d, xp)
+    ys = y[0] if nwk == 1 else jnp.sum(y, axis=0)
+    return ys[:G, :, :nb]

@@ -42,14 +42,20 @@ module moves every host-side decision out of the hot path:
   chain (``packsell_spmv.py``).
 * Variant selection is explicit and logged (:attr:`SpMVPlan.policy`):
 
-  - ``'band'``  — band-windowed Pallas kernel (bounded VMEM; RCM/banded
-    regime),
-  - ``'full'``  — full-x-in-VMEM Pallas kernel,
+  - ``'fused'`` — the fused-stream Pallas kernel
+    (``packsell_spmv.packsell_spmv_fused``): ONE kernel over the whole
+    repacked ``uint32[G, wr, C]`` word stream + ``int32[G, C]``
+    checkpoints, grid parallel over group × word-run tiles (no per-bucket
+    dispatch, no cursor carry). The auto default on compiled backends
+    when the stream is feasible and x fits VMEM residency.
+  - ``'band'``  — band-windowed per-bucket Pallas kernel (bounded VMEM;
+    RCM/banded regime),
+  - ``'full'``  — full-x-in-VMEM per-bucket Pallas kernel,
   - ``'jnp'``   — the fused-stream / scan-decode XLA path (the fast path on
     non-TPU backends, where the Pallas kernels only run in interpret mode).
 
   The automatic choice can be overridden per call (``force=``) or globally
-  via the ``REPRO_SPMV_POLICY`` env var (``auto|full|band|jnp``).
+  via the ``REPRO_SPMV_POLICY`` env var (``auto|fused|full|band|jnp``).
 """
 from __future__ import annotations
 
@@ -74,7 +80,7 @@ _DEF_HW = 4096              # default half-window (elements, multiple of 128)
 _FULL_X_LIMIT = int(os.environ.get("REPRO_FULL_X_LIMIT", 2_000_000))
 _BAND_MIN_M = int(os.environ.get("REPRO_BAND_MIN_M", 65_536))
 
-_POLICIES = ("auto", "full", "band", "jnp")
+_POLICIES = ("auto", "full", "band", "jnp", "fused")
 _CACHE_MODES = ("checkpoint", "full", "0")
 
 
@@ -412,7 +418,8 @@ def _split16_encoding(mat: PackSELLMatrix):
     return None
 
 
-def _build_fused_stream(mat: PackSELLMatrix, *, trim: bool = True):
+def _build_fused_stream(mat: PackSELLMatrix, *, trim: bool = True,
+                        wr: int | None = None):
     """Repack the bucketed words into the fused ragged-group layout, once,
     host-side (DESIGN.md §10.1). Returns ``((words3d, ckpt), layout,
     orders)`` — ``orders`` is the per-bucket slice permutation the caller
@@ -436,7 +443,9 @@ def _build_fused_stream(mat: PackSELLMatrix, *, trim: bool = True):
     ``trim=False`` keeps the identity slice order and the full
     shape-derived run count per slice (every level = all S slices): the
     layout then depends only on the bucket SHAPES, which SPMD consumers
-    (the distributed stacker) need uniform across shards.
+    (the distributed stacker) need uniform across shards. ``wr=`` pins
+    the checkpoint width instead of the modeled pick — the autotune
+    sweep's third axis (:meth:`SpMVPlan.retile` triples).
     """
     C, D = mat.C, mat.D
     dmask = np.uint32(cd.delta_mask(D))
@@ -452,7 +461,7 @@ def _build_fused_stream(mat: PackSELLMatrix, *, trim: bool = True):
         else:
             used = np.full(S, w, np.int64)
         used_w.append((used.astype(np.int64), C))
-    wr = _pick_ckpt_width(used_w, total)
+    wr = _pick_ckpt_width(used_w, total) if wr is None else max(int(wr), 1)
 
     per_bucket, segs, orders = [], [], []
     g0 = 0
@@ -534,24 +543,12 @@ def _build_fused_stream(mat: PackSELLMatrix, *, trim: bool = True):
 
 
 def _fused_decode(w, codec, D, layout: FusedLayout):
-    """(value f32, run-local column offset i32) for a stream slice."""
-    enc = layout.encoding
-    if enc == "f16":
-        v16 = (w >> np.uint32(16)).astype(jnp.uint16)
-        v = jax.lax.bitcast_convert_type(v16, jnp.float16)
-        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
-    elif enc == "top16":
-        v = jax.lax.bitcast_convert_type(w & np.uint32(0xFFFF0000),
-                                         jnp.float32)
-        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
-    elif enc == "fixed16":
-        v = (jax.lax.bitcast_convert_type(w, jnp.int32)
-             >> np.int32(16)).astype(jnp.float32) * np.float32(layout.scale)
-        local = (w & np.uint32(0xFFFF)).astype(jnp.int32)
-    else:                           # 'words'
-        v, local = cd.unpack_words_jnp(w, codec, D)
-        local = local.astype(jnp.int32)
-    return v.astype(jnp.float32), local
+    """(value f32, run-local column offset i32) for a stream slice.
+    Delegates to :func:`packsell_spmv.fused_decode_word` — the single
+    decode definition shared with the fused Pallas kernels, so the
+    'jnp' and 'fused' variants stay bit-compatible by construction."""
+    return _pk.fused_decode_word(w, codec, D, layout.encoding,
+                                 layout.scale)
 
 
 def _fused_tail2(part, layout: FusedLayout):
@@ -695,7 +692,7 @@ class SpMVPlan:
     :meth:`spmm` dispatch straight into a cached jitted executable.
     """
 
-    variant: str                      # 'band' | 'full' | 'jnp'
+    variant: str                      # 'fused' | 'band' | 'full' | 'jnp'
     policy: str                       # human-readable decision log
     hw: int
     interpret: bool
@@ -713,6 +710,7 @@ class SpMVPlan:
     fused_layout: Optional[FusedLayout] = None
     kckpts: Optional[tuple] = None    # per-bucket int32 [S, nw, C] (Pallas)
     total_words: int = 0              # bucketed words (decode-cache pricing)
+    fused_trim: bool = True           # fused layout built with trimming?
     ephemeral: bool = False           # built under tracing: never cached/jitted
     _matref: Optional[weakref.ref] = None
     _fns: dict = dataclasses.field(default_factory=LRUDict)
@@ -752,15 +750,36 @@ class SpMVPlan:
             self._fns["_dev"] = dev
         return dev
 
+    def _mm_vmem_fallback(self) -> bool:
+        """Multi-RHS VMEM-residency guard: the spmm kernels (bucket AND
+        fused) hold the whole ``[m, nb]`` x block in VMEM, so past the
+        full-x limit the plan routes spmm through an XLA body instead of
+        raising (the decision is static — logged once in :meth:`spmm`)."""
+        return (self.variant in ("band", "full", "fused")
+                and self.m > _FULL_X_LIMIT)
+
     def _execute(self, mat: PackSELLMatrix, dev: dict, x: jnp.ndarray,
                  permuted: bool) -> jnp.ndarray:
         xc = x.astype(jnp.float32)
         fused = dev.get("fused")
-        if fused is not None and self.variant == "jnp":
-            with _obs.span("packsell.fused_decode"):
-                part = _fused_part_spmv(fused[0], fused[1], xc, mat.codec,
-                                        mat.D, self.fused_layout)
+        if fused is not None and self.variant in ("jnp", "fused"):
+            lay = self.fused_layout
+            if self.variant == "fused":
+                with _obs.span("packsell.fused_kernel"):
+                    part = _pk.packsell_spmv_fused(
+                        fused[0], fused[1], xc,
+                        codec_name=mat.codec_name, D=mat.D,
+                        encoding=lay.encoding, scale=lay.scale,
+                        gb=self.tiles[0][0] if self.tiles else 8,
+                        interpret=self.interpret)
+            else:
+                with _obs.span("packsell.fused_decode"):
+                    part = _fused_part_spmv(fused[0], fused[1], xc,
+                                            mat.codec, mat.D, lay)
             return self._fused_epilogue(part, dev, permuted)
+        if self.variant == "fused":
+            raise ValueError("fused plan dispatched without its stream "
+                             "operand (dev['fused'] is None)")
         with _obs.span("packsell.bucket_decode"):
             t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=False)
         if permuted:
@@ -772,11 +791,26 @@ class SpMVPlan:
                     permuted: bool) -> jnp.ndarray:
         xc = x.astype(jnp.float32)
         fused = dev.get("fused")
-        if fused is not None and self.variant == "jnp":
-            with _obs.span("packsell.fused_decode"):
-                part = _fused_part_spmm(fused[0], fused[1], xc, mat.codec,
-                                        mat.D, self.fused_layout)
+        if fused is not None and self.variant in ("jnp", "fused"):
+            lay = self.fused_layout
+            if self.variant == "fused" and not self._mm_vmem_fallback():
+                with _obs.span("packsell.fused_kernel"):
+                    part = _pk.packsell_spmm_fused(
+                        fused[0], fused[1], xc,
+                        codec_name=mat.codec_name, D=mat.D,
+                        encoding=lay.encoding, scale=lay.scale,
+                        gb=self.tiles[0][0] if self.tiles else 8,
+                        interpret=self.interpret)
+            else:
+                # 'jnp', or a fused plan whose x block breaks VMEM
+                # residency: same decode, XLA body
+                with _obs.span("packsell.fused_decode"):
+                    part = _fused_part_spmm(fused[0], fused[1], xc,
+                                            mat.codec, mat.D, lay)
             return self._fused_epilogue(part, dev, permuted)
+        if self.variant == "fused":
+            raise ValueError("fused plan dispatched without its stream "
+                             "operand (dev['fused'] is None)")
         with _obs.span("packsell.bucket_decode"):
             t_cat = self._bucket_parts(mat, dev, x, xc, multi_rhs=True)
         if permuted:
@@ -807,9 +841,11 @@ class SpMVPlan:
             sb, wb = self.tiles[b]
             ck = None if kck is None else kck[b]
             if multi_rhs:
-                if self.variant in ("band", "full"):
+                if (self.variant in ("band", "full")
+                        and not self._mm_vmem_fallback()):
                     # multi-RHS ships the full-x kernel only; a banded plan
-                    # falls back to it (x·nb residency checked in spmm()).
+                    # falls back to it. Past the VMEM residency limit the
+                    # bucket routes to an XLA body below instead.
                     t = _pk.packsell_spmm_bucket(
                         pack, d0, x, codec_name=mat.codec_name, D=mat.D,
                         sb=sb, wb=wb, interpret=self.interpret, ckpt=ck)
@@ -876,7 +912,7 @@ class SpMVPlan:
         codec metadata, so a placeholder-leaf view keeps the per-call
         pytree flattening down to a handful of arrays (the distributed
         layer's `_member_view` trick)."""
-        if self.fused is None or self.variant != "jnp":
+        if self.fused is None or self.variant not in ("jnp", "fused"):
             return mat
         if self._view is None:
             # numpy placeholders: building the view must never capture a
@@ -937,14 +973,21 @@ class SpMVPlan:
 
     def spmm(self, mat: PackSELLMatrix, x: jnp.ndarray, *,
              permuted: bool = False) -> jnp.ndarray:
-        """Y = A @ X for X: [m, nb] via the multi-RHS kernel."""
-        if self.variant in ("band", "full") and self.m > _FULL_X_LIMIT:
-            # spmm has no banded-window variant yet: the whole [m, nb] x
-            # block must be VMEM-resident, so the full-x limit applies even
-            # to band plans (which exist precisely because m is large).
-            raise ValueError(
-                f"x too large for multi-RHS VMEM residency (m={self.m} > "
-                f"REPRO_FULL_X_LIMIT={_FULL_X_LIMIT}); use force='jnp'")
+        """Y = A @ X for X: [m, nb] via the multi-RHS kernel.
+
+        spmm has no banded-window variant: the whole [m, nb] x block must
+        be VMEM-resident, so past the full-x limit a band/full plan routes
+        to the scan-decode XLA body and a fused plan to the jnp fused
+        body — explicitly, logged once in :attr:`policy` (this used to be
+        a silent undocumented drop / a hard raise)."""
+        if self._mm_vmem_fallback() and "; spmm:" not in self.policy:
+            via = ("jnp fused body" if self.variant == "fused"
+                   else "scan-decode body")
+            self.policy += (
+                f"; spmm: m={self.m} > REPRO_FULL_X_LIMIT="
+                f"{_FULL_X_LIMIT} breaks multi-RHS VMEM residency — "
+                f"routed to {via}")
+            _obs.inc("spmv.mm_fallback", variant=self.variant)
         if self.ephemeral or _is_traced(mat):
             return self._execute_mm(mat, self._device_operands(), x,
                                     permuted)
@@ -1021,13 +1064,25 @@ class SpMVPlan:
 
     # -- autotune hook -----------------------------------------------------
     def retile(self, tiles) -> None:
-        """Install per-bucket (sb, wb) winners (benchmarks/bench_kernels.py
-        autotune). Band windows and width-block checkpoints are recomputed
-        for the new tiles; jitted dispatch functions are invalidated and
-        re-trace on next call."""
-        tiles = tuple((int(sb), int(wb)) for sb, wb in tiles)
+        """Install per-bucket ``(sb, wb)`` — or ``(sb, wb, wr)`` — winners
+        (benchmarks/bench_kernels.py autotune). Band windows and
+        width-block checkpoints are recomputed for the new tiles; a third
+        element pins the fused-stream checkpoint width ``wr`` (plan-global
+        — all triples must agree) and rebuilds the stream plus the
+        σ-permutation maps when it changes. Jitted dispatch functions are
+        invalidated and re-trace on next call."""
+        tiles = tuple(tuple(int(v) for v in t) for t in tiles)
         if len(tiles) != len(self.tiles):
-            raise ValueError(f"need {len(self.tiles)} (sb, wb) pairs")
+            raise ValueError(f"need {len(self.tiles)} (sb, wb[, wr]) "
+                             "tuples")
+        if any(len(t) not in (2, 3) for t in tiles):
+            raise ValueError("tiles must be (sb, wb) or (sb, wb, wr)")
+        wrs = {t[2] for t in tiles if len(t) == 3}
+        if len(wrs) > 1:
+            raise ValueError("the fused checkpoint width wr is plan-"
+                             f"global; got conflicting values {sorted(wrs)}")
+        new_wr = wrs.pop() if wrs else None
+        tiles = tuple(t[:2] for t in tiles)
         mat = self._matref() if self._matref is not None else None
         if self.variant == "band":
             if mat is None:
@@ -1044,6 +1099,33 @@ class SpMVPlan:
             if mat is None:
                 raise ValueError("cannot retile checkpoints: matrix is gone")
             self.kckpts = _build_block_checkpoints(mat, tiles)
+        if (new_wr is not None and self.fused is not None
+                and self.fused_layout is not None
+                and new_wr != self.fused_layout.wr):
+            if mat is None:
+                raise ValueError(
+                    "cannot re-width the fused stream: matrix is gone")
+            fused, layout, orders = _build_fused_stream(
+                mat, trim=self.fused_trim, wr=new_wr)
+            if fused is None:
+                raise ValueError(
+                    f"wr={new_wr}: fused stream infeasible (group column "
+                    "span overflows every compact offset encoding)")
+            self.fused, self.fused_layout = fused, layout
+            # the slice sort depends on runs-per-slice = f(wr): re-bake the
+            # stored order and both inverse-permutation forms
+            outs = [np.asarray(o).reshape(len(ordr), -1)[ordr].reshape(-1)
+                    for o, ordr in zip(mat.outrows, orders)]
+            self.outrow_cat = (jnp.asarray(np.concatenate(outs)) if outs
+                               else jnp.zeros((0,), jnp.int32))
+            self.inv_cat = _build_inverse_perm(mat, self.outrow_cat)
+            inv = np.asarray(self.inv_cat)
+            self.inv2_cat = jnp.asarray(np.stack(
+                [inv // mat.C, inv % mat.C], axis=1).astype(np.int32))
+            self.tiles = tiles
+            self._fns.clear()
+            _quick_validate(mat, self)
+            return
         self.tiles = tiles
         self._fns.clear()
 
@@ -1057,7 +1139,8 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
                hw: int = _DEF_HW, force: str | None = None,
                interpret: bool | None = None,
                decode_cache: str | None = None,
-               fused_trim: bool = True) -> SpMVPlan:
+               fused_trim: bool = True,
+               ckpt_wr: int | None = None) -> SpMVPlan:
     """Host-side plan construction (the slow path — run once per matrix).
 
     ``decode_cache`` in {'checkpoint', 'full', '0'} (default: the
@@ -1066,13 +1149,15 @@ def build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     whether the Pallas variants get width-block checkpoints.
     ``fused_trim=False`` keeps the fused layout shape-derived (no
     data-dependent slice sort / all-pad-run trimming) so SPMD consumers
-    get identical layouts across shards.
+    get identical layouts across shards. ``ckpt_wr=`` pins the fused
+    checkpoint width instead of the modeled pick (the autotune sweep's
+    third axis).
     """
     t0 = time.perf_counter()
     with _obs.span("packsell.plan_build"):
         plan = _build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
                            interpret=interpret, decode_cache=decode_cache,
-                           fused_trim=fused_trim)
+                           fused_trim=fused_trim, ckpt_wr=ckpt_wr)
     if not plan.ephemeral:
         _obs.inc("plan.build", variant=plan.variant,
                  cache_mode=plan.cache_mode)
@@ -1085,7 +1170,8 @@ def _build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
                 hw: int = _DEF_HW, force: str | None = None,
                 interpret: bool | None = None,
                 decode_cache: str | None = None,
-                fused_trim: bool = True) -> SpMVPlan:
+                fused_trim: bool = True,
+                ckpt_wr: int | None = None) -> SpMVPlan:
     interpret = _interpret_default() if interpret is None else interpret
     policy = (force or _env_policy()).lower()
     if policy not in _POLICIES:
@@ -1105,7 +1191,7 @@ def _build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
             raise ValueError(
                 "force='band' requires a concrete matrix (host-side window "
                 "planning); build the plan outside jit via get_plan(mat)")
-        variant = "jnp" if policy in ("auto", "jnp") else "full"
+        variant = "jnp" if policy in ("auto", "jnp", "fused") else "full"
         return SpMVPlan(
             variant=variant,
             policy=f"{variant} (tracing: host-side band planning "
@@ -1123,6 +1209,18 @@ def _build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     if policy in ("auto", "band") and mat.m > 0:
         wins = band_plan(mat, sb, hw)
 
+    # Probe fused-stream feasibility up front where the fused Pallas
+    # variant is in play: forced, or the auto default on compiled backends
+    # (the kernel gathers the whole x, so the full-x residency limit
+    # applies to it like the 'full' bucket kernel).
+    fused, layout, orders = (None, None, None)
+    want_fused = (policy == "fused"
+                  or (policy == "auto" and not interpret
+                      and mat.m <= _FULL_X_LIMIT))
+    if want_fused:
+        fused, layout, orders = _build_fused_stream(mat, trim=fused_trim,
+                                                    wr=ckpt_wr)
+
     if policy == "band":
         if wins is None:
             raise ValueError("band kernel infeasible for this matrix/hw")
@@ -1134,18 +1232,45 @@ def _build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
     elif policy == "jnp":
         variant, reason = "jnp", "forced via " + (
             f"force={force!r}" if force else "REPRO_SPMV_POLICY")
+    elif policy == "fused":
+        if mat.m > _FULL_X_LIMIT:
+            raise ValueError(
+                f"x too large for VMEM residency (m={mat.m}); the fused "
+                "kernel gathers the whole x — use band/jnp")
+        src = f"force={force!r}" if force else "REPRO_SPMV_POLICY"
+        if fused is None:
+            # forced fused but no compact encoding fits: demote to the
+            # jnp variant on the full cursor cache, loudly
+            variant = "jnp"
+            reason = (f"forced fused via {src} demoted to jnp: fused "
+                      "stream infeasible (group column span overflows "
+                      "every compact offset encoding)")
+            mode = "full"
+        else:
+            variant, reason = "fused", f"forced via {src}"
     else:  # auto
         if interpret:
             variant = "jnp"
-            reason = ("auto: non-TPU backend — Pallas would run in "
-                      "interpret mode, fused-stream XLA path is faster")
+            reason = ("auto: non-TPU backend — Pallas (incl. the fused-"
+                      "stream kernel) would run in interpret mode, fused-"
+                      "stream XLA path is faster (force='fused' runs the "
+                      "interpret kernel anyway)")
+        elif fused is not None:
+            variant = "fused"
+            reason = (f"auto: compiled backend, fused stream feasible and "
+                      f"m={mat.m} fits VMEM residency — fused-stream "
+                      "Pallas kernel")
         elif wins is not None and mat.m >= _BAND_MIN_M:
             variant = "band"
             reason = (f"auto: band feasible and m={mat.m} >= "
-                      f"REPRO_BAND_MIN_M={_BAND_MIN_M} (bounds VMEM)")
+                      f"REPRO_BAND_MIN_M={_BAND_MIN_M} (bounds VMEM)"
+                      + ("; fused stream infeasible (span overflow)"
+                         if want_fused else ""))
         elif mat.m <= _FULL_X_LIMIT:
             variant = "full"
             reason = (f"auto: m={mat.m} fits VMEM residency"
+                      + ("; fused stream infeasible (span overflow)"
+                         if want_fused else "")
                       + ("" if wins is None else
                          f" (band feasible but m < REPRO_BAND_MIN_M="
                          f"{_BAND_MIN_M}: window bookkeeping not worth it)"))
@@ -1161,14 +1286,25 @@ def _build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
             f"x too large for VMEM residency (m={mat.m}); use band/jnp")
     if variant != "band":
         wins = None
+    if variant != "fused" and policy != "fused":
+        # a probe-built stream the selected variant will not consume
+        fused, layout, orders = (None, None, None)
 
-    fused, layout, orders = (None, None, None)
     cols = None
     kckpts = None
-    if variant == "jnp":
-        if mode == "checkpoint":
+    if variant == "fused":
+        if mode != "checkpoint":
+            # the fused stream IS the decode cache: offsets are baked into
+            # the words, checkpoints are the only auxiliary stream
+            reason += (f"; decode_cache={mode!r} overridden to "
+                       "'checkpoint' (the fused stream is the decode "
+                       "cache)")
+            mode = "checkpoint"
+    elif variant == "jnp":
+        if mode == "checkpoint" and fused is None:
             fused, layout, orders = _build_fused_stream(mat,
-                                                        trim=fused_trim)
+                                                        trim=fused_trim,
+                                                        wr=ckpt_wr)
             if fused is None:
                 # a group's column span overflows every compact offset
                 # encoding — fall back to the full cursor cache, loudly
@@ -1204,6 +1340,7 @@ def _build_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
         cols=cols, cache_mode=mode, fused=fused, fused_layout=layout,
         kckpts=kckpts,
         total_words=sum(int(np.prod(p.shape)) for p in mat.packs),
+        fused_trim=fused_trim,
         _matref=weakref.ref(mat))
     _quick_validate(mat, plan)
     return plan
@@ -1278,11 +1415,12 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
              hw: int = _DEF_HW, force: str | None = None,
              interpret: bool | None = None,
              decode_cache: str | None = None,
-             fused_trim: bool = True) -> SpMVPlan:
+             fused_trim: bool = True,
+             ckpt_wr: int | None = None) -> SpMVPlan:
     """Cached plan lookup. Keyed on ``(mat._plan_token, sb, wb, hw, policy,
-    interpret, decode-cache mode, trim)`` — a monotonically assigned
-    per-matrix token (see :func:`_plan_token`); entries are dropped
-    (weakref) when the matrix dies."""
+    interpret, decode-cache mode, trim, ckpt_wr)`` — a monotonically
+    assigned per-matrix token (see :func:`_plan_token`); entries are
+    dropped (weakref) when the matrix dies."""
     interpret = _interpret_default() if interpret is None else interpret
     policy = (force or _env_policy()).lower()
     mode = (decode_cache or _env_cache_mode()).lower()
@@ -1291,7 +1429,7 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
         return build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
                           interpret=interpret, decode_cache=decode_cache)
     key = (_plan_token(mat), sb, wb, hw, policy, interpret, mode,
-           fused_trim)
+           fused_trim, ckpt_wr)
     ent = _PLANS.get(key)
     if ent is not None and ent[0]() is mat:
         _STATS["hits"] += 1
@@ -1300,7 +1438,7 @@ def get_plan(mat: PackSELLMatrix, *, sb: int = 8, wb: int = 32,
         return ent[1]
     plan = build_plan(mat, sb=sb, wb=wb, hw=hw, force=force,
                       interpret=interpret, decode_cache=decode_cache,
-                      fused_trim=fused_trim)
+                      fused_trim=fused_trim, ckpt_wr=ckpt_wr)
 
     def _drop(_ref, key=key):
         if _PLANS.pop(key, None) is not None:

@@ -54,6 +54,7 @@ __all__ = ["SPAN_NAMES", "SpanProfile", "hlo_span_map", "profile_dispatch"]
 SPAN_NAMES = (
     "packsell.plan_build",
     "packsell.fused_decode",
+    "packsell.fused_kernel",
     "packsell.bucket_decode",
     "packsell.gather_epilogue",
     "packsell.halo_prestage",

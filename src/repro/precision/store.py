@@ -250,25 +250,54 @@ class PrecisionStore:
         return plan, False
 
     # -- retile winners ----------------------------------------------------
+    @staticmethod
+    def _backend(backend: str | None) -> str:
+        """The accelerator qualifier for retile keys. Lazy: jax is only
+        touched when no explicit ``backend=`` is given, and a failure to
+        resolve one degrades to ``'unknown'`` rather than raising inside
+        a store write."""
+        if backend is not None:
+            return str(backend)
+        try:
+            import jax
+            return jax.default_backend()
+        except Exception:
+            return "unknown"
+
     def put_retile(self, fingerprint: str, key: str, tiles, *,
-                   save: bool = True) -> None:
-        """Record kernel-autotune ``(sb, wb)`` winners under a plan key
-        (e.g. ``'plan_e8m8'`` or a bucket signature)."""
+                   backend: str | None = None, save: bool = True) -> None:
+        """Record kernel-autotune ``(sb, wb)`` or ``(sb, wb, wr)`` winners
+        under a plan key (e.g. ``'plan_e8m8'`` or a bucket signature).
+
+        Winners are stored under a backend-qualified key
+        (``'<key>@<jax.default_backend()>'``): tile/width choices tuned
+        on a CPU interpret sweep must never be applied to a TPU/GPU plan
+        (and vice versa). ``backend=`` overrides the qualifier."""
+        bk = self._backend(backend)
         ent = self._entries.setdefault(fingerprint, {})
-        ent.setdefault("retile", {})[key] = [
-            [int(sb), int(wb)] for sb, wb in tiles]
+        ent.setdefault("retile", {})[f"{key}@{bk}"] = [
+            [int(v) for v in t] for t in tiles]
         if save:
             self.save()
 
-    def get_retile(self, fingerprint: str, key: str):
+    def get_retile(self, fingerprint: str, key: str, *,
+                   backend: str | None = None):
+        """Backend-qualified lookup with read-compatible migration:
+        legacy un-qualified entries (written before winners were keyed
+        per backend) still resolve when no qualified entry shadows
+        them."""
         ent = self._entries.get(fingerprint, {})
-        tiles = ent.get("retile", {}).get(key)
+        retile = ent.get("retile", {})
+        tiles = retile.get(f"{key}@{self._backend(backend)}")
+        if tiles is None:
+            tiles = retile.get(key)      # legacy un-keyed entry
         return None if tiles is None else [tuple(t) for t in tiles]
 
-    def apply_retile(self, fingerprint: str, key: str, plan) -> bool:
+    def apply_retile(self, fingerprint: str, key: str, plan, *,
+                     backend: str | None = None) -> bool:
         """Install stored tile winners into an
         :class:`~repro.kernels.plan.SpMVPlan`; True when applied."""
-        tiles = self.get_retile(fingerprint, key)
+        tiles = self.get_retile(fingerprint, key, backend=backend)
         if tiles is None or len(tiles) != len(plan.tiles):
             _obs.inc("store.retile", applied="no")
             return False
