@@ -2,9 +2,10 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test verify verify-dist verify-precision verify-composite \
-	verify-fused verify-pallas verify-robust verify-observe bench \
-	bench-spmv bench-dist bench-precision bench-composite bench-robust \
-	bench-roofline bench-memory bench-e8my perf-gate perf-baseline
+	verify-fused verify-pallas verify-robust verify-observe \
+	verify-serving bench bench-spmv bench-dist bench-precision \
+	bench-composite bench-robust bench-roofline bench-memory \
+	bench-e8my bench-serving perf-gate perf-baseline
 
 test:
 	python -m pytest -x -q
@@ -75,6 +76,16 @@ verify-observe:
 		python -m pytest -x -q tests/test_observe.py -k "dist"
 	python scripts/check_observe_overhead.py
 
+# serving front end (DESIGN.md §15): policy/frontend semantics on the
+# manual clock, the inject.py chaos campaigns (breaker open -> fallback
+# -> rebuild -> re-close; zero out-of-budget deliveries), and a
+# tiny-scale open-loop Poisson bench smoke
+verify-serving:
+	python -m pytest -x -q tests/test_serving.py tests/test_serving_chaos.py
+	REPRO_BENCH_SERVING_JSON=/tmp/BENCH_serving_smoke.json \
+		REPRO_OBS_ARCHIVE_DIR="" \
+		python -m benchmarks.run --only serving --scale tiny
+
 bench:
 	python -m benchmarks.run
 
@@ -111,6 +122,10 @@ bench-memory:
 # regenerate the checked-in E8MY D-sweep (small scale)
 bench-e8my:
 	python -m benchmarks.run --only e8my --scale small
+
+# regenerate the checked-in serving QPS/latency/shed trace (small scale)
+bench-serving:
+	python -m benchmarks.run --only serving --scale small
 
 # perf sentinel (DESIGN.md §13.3): gate the working tree against the
 # committed noise-aware baseline — runs the gated benches (spmv +

@@ -1,0 +1,199 @@
+"""Serving front-end benchmark: open-loop Poisson traffic with an
+overload phase and a fault slice (DESIGN.md §15.7).
+
+An open-loop arrival process (arrivals are scheduled ahead of time and
+never wait for the service — the honest way to measure a saturated
+queue) drives :class:`~repro.serving.frontend.ServingFrontend` on the
+REAL monotonic clock through three phases:
+
+* ``normal``   — 0.8x measured capacity: the no-stress baseline.
+* ``overload`` — 2.0x measured capacity: sheds, demotions, and the
+  p99 under sustained saturation.
+* ``fault``    — 2.0x capacity PLUS a fused/pack word-flip campaign:
+  what the guard + breaker + rebuild machinery costs when operands rot
+  mid-service, and the delivered-accuracy ledger (``out_of_budget``
+  must be 0 — corrupted answers are retried or rerouted, not shipped).
+
+Capacity is measured, not assumed: the slot service time is timed on
+warmed plans, so arrival rates track the host the bench runs on.
+
+Per phase -> BENCH_serving.json (schema-versioned, trajectory-
+ingestable; serving metrics stay ADVISORY — they are intentionally not
+in ``observe.trajectory.GATED_METRICS``): sustained QPS, p50/p99
+latency, shed rate, deadline-miss rate, and the per-tier matvec
+fractions showing the precision ladder absorbing the overload.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import time
+
+import numpy as np
+
+from repro.core import testmats
+from repro.robust import inject as inj
+from repro.serving import frontend as fe
+from repro.serving import policy as pol
+
+from . import common
+
+_JSON_PATH = os.environ.get(
+    "REPRO_BENCH_SERVING_JSON",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "BENCH_serving.json"))
+
+SLOTS = 4
+MAX_QUEUE = 64
+
+#: per-scale (phase seconds, fault injections)
+_SCALES = {"tiny": (0.6, 10), "small": (2.0, 25), "medium": (5.0, 50)}
+
+
+def _frontend() -> fe.ServingFrontend:
+    cfg = fe.FrontendConfig(
+        slots=SLOTS, background=False, C=32, sigma=64,
+        admission=pol.AdmissionPolicy(max_queue=MAX_QUEUE,
+                                      shed_watermark=0.9),
+        fail_threshold=1, cooldown_s=0.005,
+        backoff=pol.BackoffPolicy(base=0.002, max_attempts=3))
+    return fe.ServingFrontend(cfg)
+
+
+def _measure_capacity(f: fe.ServingFrontend, fp: str, xs: list) -> float:
+    """Requests/second one slot pipeline sustains on warmed plans."""
+    for rep in range(2):                       # warm every tier's trace
+        for j in range(SLOTS):
+            f.submit(fp, xs[j], klass="interactive")
+        f.run_until_drained()
+    t0 = time.perf_counter()
+    rounds = 5
+    for _ in range(rounds):
+        for j in range(SLOTS):
+            f.submit(fp, xs[j], klass="interactive")
+        f.run_until_drained()
+    dt = time.perf_counter() - t0
+    return rounds * SLOTS / dt
+
+
+def _inject_one(f: fe.ServingFrontend, fp: str, rng) -> bool:
+    entry = f._entry(fp)
+    kinds = list(entry.guards)
+    if not kinds:
+        return False
+    kind = kinds[int(rng.integers(len(kinds)))]
+    mat, plan, _ = entry.bind(kind)
+    try:
+        inj.flip_fused_word(mat, plan, seed=int(rng.integers(1 << 30)))
+    except ValueError:                         # plan carries no fused
+        inj.flip_pack_word(mat, plan, seed=int(rng.integers(1 << 30)))
+    return True
+
+
+def _phase(f: fe.ServingFrontend, fp: str, xs: list, *, rate: float,
+           duration: float, rng, injections: int = 0) -> list:
+    """Open-loop Poisson arrivals at ``rate`` for ``duration`` seconds;
+    optional evenly-spread word-flip campaign.  Returns the phase's
+    requests (drained)."""
+    classes = ("interactive", "standard", "batch")
+    t0 = time.perf_counter()
+    next_arrival = t0 + float(rng.exponential(1.0 / rate))
+    inject_at = [t0 + duration * (i + 1) / (injections + 1)
+                 for i in range(injections)]
+    reqs = []
+    while True:
+        now = time.perf_counter()
+        if now >= t0 + duration:
+            break
+        while next_arrival <= now:
+            reqs.append(f.submit(
+                fp, xs[int(rng.integers(len(xs)))],
+                klass=classes[int(rng.integers(3))]))
+            next_arrival += float(rng.exponential(1.0 / rate))
+        while inject_at and inject_at[0] <= now:
+            inject_at.pop(0)
+            _inject_one(f, fp, rng)
+        f.step()
+    f.run_until_drained(max_ticks=100_000)
+    return reqs
+
+
+def _summarize(name: str, reqs: list, duration: float, a_csr,
+               budget_safety: float = 16.0) -> dict:
+    oks = [r for r in reqs if r.status == "ok" and r.op == "spmv"]
+    lat = np.sort([r.latency for r in oks]) if oks else np.array([0.0])
+    n = max(len(reqs), 1)
+    shed = sum(1 for r in reqs if r.status in ("shed", "rejected"))
+    missed = sum(1 for r in reqs
+                 if r.status == "deadline_miss" or r.missed_deadline)
+    tiers: dict = {}
+    for r in oks:
+        tiers[r.tier_kind] = tiers.get(r.tier_kind, 0) + 1
+    a64 = a_csr.astype(np.float64)
+    anorm = float(np.max(np.abs(a_csr).sum(axis=1)))
+    oob = 0
+    for r in oks:
+        kind = "fp32" if r.tier_kind == "fp32_fallback" else r.tier_kind
+        x64 = np.asarray(r.x, np.float64)
+        err = float(np.max(np.abs(np.asarray(r.y, np.float64) - a64 @ x64)))
+        tol = pol.tier_error_budget(kind, safety=budget_safety)
+        if err > tol * max(anorm * float(np.max(np.abs(x64))), 1e-300):
+            oob += 1
+    row = dict(
+        requests=len(reqs), completed_ok=len(oks),
+        qps=len(oks) / duration,
+        p50_latency_s=float(lat[int(0.5 * (len(lat) - 1))]),
+        p99_latency_s=float(lat[int(0.99 * (len(lat) - 1))]),
+        shed_rate=shed / n, deadline_miss_rate=missed / n,
+        out_of_budget=oob,
+        **{f"frac_{k}": v / max(len(oks), 1) for k, v in sorted(
+            tiers.items())})
+    common.emit("serving", name, **row)
+    return row
+
+
+def run(scale: str | None = None) -> None:
+    scale = scale or common.SCALE
+    duration, injections = _SCALES.get(scale, _SCALES["small"])
+    # per-request shed/reject warnings are the service's loud-rejection
+    # contract, but at 2x-capacity open-loop rates the logging I/O alone
+    # would throttle the system under test — counters carry the tally
+    logging.getLogger("repro.serving.frontend").setLevel(logging.ERROR)
+    a = testmats.suite("tiny")["stencil1d"]
+    rng = np.random.default_rng(42)
+    xs = [rng.standard_normal(a.shape[1]).astype(np.float32)
+          for _ in range(8)]
+
+    with _frontend() as f:
+        fp = f.register(a, warm=False)
+        # warm EVERY ladder tier (overload will demote into all of them)
+        # plus the fp32 fallback, so phases measure serving, not jit
+        f._entry(fp).warmup(list(pol.DEFAULT_LADDER), SLOTS)
+        cap = _measure_capacity(f, fp, xs)
+        common.emit("serving", "capacity", slots=SLOTS,
+                    capacity_qps=cap)
+
+        _summarize("normal",
+                   _phase(f, fp, xs, rate=0.5 * cap, duration=duration,
+                          rng=rng), duration, a)
+        _summarize("overload",
+                   _phase(f, fp, xs, rate=2.0 * cap, duration=duration,
+                          rng=rng), duration, a)
+        fault = _phase(f, fp, xs, rate=2.0 * cap, duration=duration,
+                       rng=rng, injections=injections)
+        row = _summarize("fault", fault, duration, a)
+        common.emit("serving", "fault_campaign", injections=injections,
+                    out_of_budget=row["out_of_budget"],
+                    breaker_transitions=len(
+                        f._entry(fp).breaker.transitions))
+
+    rows = [r for r in common.rows() if r["bench"] == "serving"]
+    common.save_bench_json(_JSON_PATH, rows)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default=None)
+    run(ap.parse_args().scale)

@@ -14,7 +14,7 @@ import time
 from . import common
 
 MODULES = ("spmv", "memory", "e8my", "f3r", "iocg", "kernels", "roofline",
-           "distributed", "precision", "composite", "robust")
+           "distributed", "precision", "composite", "robust", "serving")
 
 
 def main() -> None:

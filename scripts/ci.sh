@@ -81,6 +81,15 @@ if [[ "${1:-}" != "fast" ]]; then
   REPRO_OBS=1 python -m pytest -x -q tests/test_sentinel.py
   python scripts/check_observe_overhead.py --with-exporter
 
+  echo "== serving: frontend/policy tests + chaos campaigns =="
+  # the resilient serving front end (DESIGN.md §15): admission/backoff/
+  # breaker/degradation semantics on the manual clock, coalesced multi-
+  # RHS bit-exactness, exporter lifecycle — then the inject.py chaos
+  # campaigns including the acceptance trace (2x-capacity overload +
+  # 50-injection campaign: zero out-of-budget deliveries, >=70% goodput,
+  # breaker recovery)
+  python -m pytest -x -q tests/test_serving.py tests/test_serving_chaos.py
+
   echo "== precision: subsystem tests + adaptive_pcg smoke =="
   # the example's adaptive section must converge to 1e-8 with a
   # low-precision (sub-32-bit) operator/preconditioner; the store

@@ -379,6 +379,14 @@ class Exporter:
     def alive(self) -> bool:
         return self._thread.is_alive()
 
+    def __enter__(self) -> "Exporter":
+        if not self._thread.is_alive() and not self._stop.is_set():
+            self.start()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
+
 
 def start_exporter(interval_s: float = 1.0,
                    path: str = "artifacts/obs/metrics.jsonl",

@@ -358,22 +358,9 @@ def guarded_spmv(mat: PackSELLMatrix, plan, gs: GuardState, x, *,
         def impl(matv, dev, gdev, xx):
             y = plan._execute(matv, dev, xx, False)
             ok, rel = _guard_terms(gdev, xx, y)
-            arrs = []
-            if dev.get("fused") is not None and plan.variant == "jnp":
-                arrs += [dev["fused"][0], dev["fused"][1]]
-            else:
-                arrs += list(matv.packs) + list(matv.d0s)
-                if dev.get("cols") is not None:
-                    arrs += list(dev["cols"])
-                if dev.get("kckpt") is not None:
-                    arrs += list(dev["kckpt"])
-            if dev.get("inv2") is not None:
-                arrs.append(dev["inv2"])
-            elif dev.get("inv") is not None:
-                arrs.append(dev["inv"])
-            arrs.append(dev["outrow"])
             with _obs.span("packsell.guard_checksum"):
-                cs0, cs1 = _checksum_jnp(arrs)
+                cs0, cs1 = _checksum_jnp(_guard_arrays_traced(matv, dev,
+                                                              plan))
             return (y, ok & (cs0 == gdev["ref"][0])
                     & (cs1 == gdev["ref"][1]), rel)
 
@@ -384,6 +371,106 @@ def guarded_spmv(mat: PackSELLMatrix, plan, gs: GuardState, x, *,
     # ship the placeholder view when the packs are NOT read
     matv = plan._exec_mat(mat)
     return fn(matv, plan._device_operands(), gs.dev(), x)
+
+
+def _guard_arrays_traced(matv, dev, plan):
+    """The :func:`guard_arrays` coverage set from jit-argument operands
+    (shared by the spmv and spmm guarded bodies)."""
+    arrs = []
+    if dev.get("fused") is not None and plan.variant == "jnp":
+        arrs += [dev["fused"][0], dev["fused"][1]]
+    else:
+        arrs += list(matv.packs) + list(matv.d0s)
+        if dev.get("cols") is not None:
+            arrs += list(dev["cols"])
+        if dev.get("kckpt") is not None:
+            arrs += list(dev["kckpt"])
+    if dev.get("inv2") is not None:
+        arrs.append(dev["inv2"])
+    elif dev.get("inv") is not None:
+        arrs.append(dev["inv"])
+    arrs.append(dev["outrow"])
+    return arrs
+
+
+def _guard_terms_mm(gdev: dict, x, y):
+    """Per-column ABFT identity for multi-RHS: ``eᵀ(AX) = (eᵀA)X``
+    column by column.  Returns (ok over all columns, max column rel)."""
+    x64 = x.astype(jnp.float64)
+    s_y = jnp.sum(y.astype(jnp.float64), axis=0)          # [nb]
+    s_c = gdev["c"] @ x64                                  # [nb]
+    mag = gdev["cabs"] @ jnp.abs(x64)                      # [nb]
+    tau = gdev["tau"][0] * (mag + jnp.abs(s_c)) + gdev["tau"][1] * mag
+    err = jnp.abs(s_y - s_c)
+    ok = jnp.all(err <= tau) & jnp.all(jnp.isfinite(y)) \
+        & jnp.all(jnp.isfinite(mag))
+    rel = jnp.max(err / jnp.where(mag > 0, mag, 1.0))
+    return ok, rel
+
+
+def guarded_spmm(mat: PackSELLMatrix, plan, gs: GuardState, x, *,
+                 full: bool | None = None):
+    """``(Y, ok, rel_err)`` — the multi-RHS analogue of
+    :func:`guarded_spmv` for the serving front end's coalesced slots:
+    ``plan.spmm``'s execution body plus a per-column ABFT identity and
+    the exact operand checksum in ONE jitted dispatch.  The checksum is
+    shared across all ``nb`` columns, so the guard amortizes over the
+    batch — guarding a full slot costs the same integer pass as
+    guarding one request.  ``full`` semantics match
+    :func:`guarded_spmv` (a batch counts as ONE guarded call in the
+    stride accounting)."""
+    if not isinstance(x, jax.Array):
+        x = jnp.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"guarded_spmm wants x of shape [m, nb], got "
+                         f"{x.shape}")
+    if full is None:
+        full = gs.every <= 1 or (gs.calls % gs.every == 0)
+        gs.calls += 1
+    traced = plan.ephemeral or isinstance(x, jax.core.Tracer)
+    if not traced:
+        gs.last_check_latency = gs.calls_since_full + 1
+        gs.calls_since_full = 0 if full else gs.calls_since_full + 1
+        _obs.inc("guard.check", depth="full" if full else "light",
+                 op="spmm")
+    if traced:
+        dev = plan._device_operands()
+        y = plan._execute_mm(mat, dev, x, False)
+        gdev = gs.dev()
+        ok, rel = _guard_terms_mm(gdev, x, y)
+        if not full:
+            return y, jnp.all(jnp.isfinite(y)), jnp.zeros((), jnp.float64)
+        cs0, cs1 = _checksum_jnp(guard_arrays(mat, plan))
+        return (y, ok & (cs0 == gdev["ref"][0]) & (cs1 == gdev["ref"][1]),
+                rel)
+    if not full:
+        key = ("guarded_spmm_light", x.shape, x.dtype)
+        fn = plan._fns.get(key)
+        if fn is None:
+            def impl_light(matv, dev, xx):
+                y = plan._execute_mm(matv, dev, xx, False)
+                return (y, jnp.all(jnp.isfinite(y)),
+                        jnp.zeros((), jnp.float64))
+
+            fn = jax.jit(impl_light)
+            plan._fns[key] = fn
+        return fn(plan._exec_mat(mat), plan._device_operands(), x)
+
+    key = ("guarded_spmm", x.shape, x.dtype)
+    fn = plan._fns.get(key)
+    if fn is None:
+        def impl(matv, dev, gdev, xx):
+            y = plan._execute_mm(matv, dev, xx, False)
+            ok, rel = _guard_terms_mm(gdev, xx, y)
+            with _obs.span("packsell.guard_checksum"):
+                cs0, cs1 = _checksum_jnp(_guard_arrays_traced(matv, dev,
+                                                              plan))
+            return (y, ok & (cs0 == gdev["ref"][0])
+                    & (cs1 == gdev["ref"][1]), rel)
+
+        fn = jax.jit(impl)
+        plan._fns[key] = fn
+    return fn(plan._exec_mat(mat), plan._device_operands(), gs.dev(), x)
 
 
 def check_integrity(mat: PackSELLMatrix, plan, gs: GuardState) -> bool:

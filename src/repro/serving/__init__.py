@@ -1,3 +1,10 @@
-"""Serving substrate: KV-cache decode engine with continuous batching."""
+"""Serving substrate: KV-cache decode engine with continuous batching,
+plus the resilient spmv/solve request front end (DESIGN.md §15)."""
 from .engine import (DecodeEngine, Request, ServeConfig,  # noqa: F401
                      WarmupSpec)
+from .frontend import (AdmissionError, FrontendConfig,  # noqa: F401
+                       PlanEntry, ServingFrontend)
+from .frontend import Request as ServeRequest  # noqa: F401
+from .policy import (AdmissionPolicy, BackoffPolicy,  # noqa: F401
+                     CircuitBreaker, DegradationPolicy, ManualClock,
+                     RequestClass, tier_error_budget)

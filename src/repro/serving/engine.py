@@ -154,6 +154,14 @@ class DecodeEngine:
             self._exporter.stop()
             self._exporter = None
 
+    def __enter__(self) -> "DecodeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # lifecycle guarantee: however the with-block exits, the daemon
+        # flusher is stopped and its last partial interval lands on disk
+        self.stop_metrics_exporter()
+
     # ------------------------------------------------------------------
     def warmup(self, spec: WarmupSpec | None = None, *, prompt_lens=(),
                sparse_layers=(), dist_plans=(), composites=(),
@@ -348,12 +356,14 @@ class DecodeEngine:
     def run(self, max_ticks: int = 100_000) -> list[Request]:
         """Drain the queue; returns completed requests."""
         ticks = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) \
-                and ticks < max_ticks:
-            self.step()
-            ticks += 1
-        if self._exporter is not None:   # land this batch's tallies now
-            self._exporter.sink.flush()  # rather than at the next interval
+        try:
+            while (self.queue or any(r is not None for r in self.slot_req)) \
+                    and ticks < max_ticks:
+                self.step()
+                ticks += 1
+        finally:
+            if self._exporter is not None:   # land this batch's tallies now
+                self._exporter.sink.flush()  # even when a step raised
         return self.done
 
     # ------------------------------------------------------------------

@@ -1,0 +1,368 @@
+"""Serving front-end semantics (DESIGN.md §15).
+
+Everything here is deterministic: policies run on a
+:class:`~repro.serving.policy.ManualClock`, the frontend runs with
+``background=False`` (warmup/rebuild inline), and backoff schedules are
+seeded — deadline math, breaker transitions, and shed order become
+exact assertions, never sleeps.
+"""
+import numpy as np
+import pytest
+
+from repro.core import testmats
+from repro.observe import export as _export
+from repro.observe import metrics as _obs
+from repro.serving import frontend as fe
+from repro.serving import policy as pol
+
+
+@pytest.fixture(scope="module")
+def tiny_csr():
+    return testmats.suite("tiny")["stencil1d"]
+
+
+@pytest.fixture()
+def obs():
+    """Recorder on + clean registry for metric assertions; restored."""
+    was = _obs.enabled()
+    _obs.enable(True)
+    _obs.reset()
+    yield _obs
+    _obs.reset()
+    _obs.enable(was)
+
+
+def mk_frontend(clock=None, **kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("background", False)
+    kw.setdefault("C", 32)
+    kw.setdefault("sigma", 64)
+    return fe.ServingFrontend(fe.FrontendConfig(**kw),
+                              clock=clock or pol.ManualClock())
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+class TestPolicies:
+    def test_manual_clock_is_monotonic(self):
+        c = pol.ManualClock()
+        c.advance(1.5)
+        assert c() == 1.5
+        with pytest.raises(ValueError):
+            c.advance(-0.1)
+
+    def test_backoff_schedule_is_deterministic(self):
+        bp = pol.BackoffPolicy(base=0.01, mult=2.0, max_delay=0.05,
+                               max_attempts=4)
+        assert [bp.delay(k) for k in (1, 2, 3, 4)] == \
+            [0.01, 0.02, 0.04, 0.05]           # exponential, capped
+        assert not bp.exhausted(3)
+        assert bp.exhausted(4)
+        with pytest.raises(ValueError):
+            bp.delay(0)                        # attempts are 1-based
+
+    def test_backoff_jitter_is_seeded(self):
+        a = pol.BackoffPolicy(jitter=0.5, seed=7)
+        b = pol.BackoffPolicy(jitter=0.5, seed=7)
+        seq_a = [a.delay(k) for k in (1, 2, 3)]
+        seq_b = [b.delay(k) for k in (1, 2, 3)]
+        assert seq_a == seq_b                  # same seed, same schedule
+        assert all(d <= pol.BackoffPolicy().delay(k)
+                   for d, k in zip(seq_a, (1, 2, 3)))
+
+    def test_breaker_full_lifecycle(self):
+        clk = pol.ManualClock()
+        cb = pol.CircuitBreaker(fail_threshold=2, cooldown_s=1.0,
+                                probe_successes=2, clock=clk)
+        cb.record_failure()
+        assert cb.state == pol.CLOSED          # below threshold
+        cb.record_failure()
+        assert cb.state == pol.OPEN
+        assert not cb.allow()
+        cb.note_rebuilt()
+        assert not cb.allow()                  # cooldown not elapsed
+        clk.advance(1.0)
+        assert cb.allow()                      # lazy OPEN -> HALF_OPEN
+        assert cb.state == pol.HALF_OPEN
+        cb.record_success()
+        assert cb.state == pol.HALF_OPEN       # needs 2 probes
+        cb.record_success()
+        assert cb.state == pol.CLOSED
+        assert [(s, d) for _, s, d in cb.transitions] == \
+            [(pol.CLOSED, pol.OPEN), (pol.OPEN, pol.HALF_OPEN),
+             (pol.HALF_OPEN, pol.CLOSED)]
+
+    def test_breaker_probe_failure_reopens(self):
+        clk = pol.ManualClock()
+        cb = pol.CircuitBreaker(fail_threshold=1, cooldown_s=0.0, clock=clk)
+        cb.record_failure()
+        cb.note_rebuilt()
+        assert cb.allow() and cb.state == pol.HALF_OPEN
+        cb.record_failure()
+        assert cb.state == pol.OPEN
+        assert not cb.rebuilt                  # needs a FRESH rebuild
+
+    def test_breaker_open_without_rebuild_never_probes(self):
+        clk = pol.ManualClock()
+        cb = pol.CircuitBreaker(fail_threshold=1, cooldown_s=0.1, clock=clk)
+        cb.record_failure()
+        clk.advance(100.0)
+        assert not cb.allow()                  # nobody repaired it
+
+    def test_admission_vmem_residency_math(self):
+        adm = pol.AdmissionPolicy(max_queue=4, vmem_limit_words=1000)
+        assert adm.vmem_ok(n=300, m=200, nb=2)       # (m+n)*nb = 1000
+        assert not adm.vmem_ok(n=300, m=200, nb=3)
+        assert adm.queue_ok(3) and not adm.queue_ok(4)
+        assert adm.occupancy(2) == 0.5
+
+    def test_degradation_hysteresis(self):
+        dp = pol.DegradationPolicy(demote1=0.5, demote2=0.8, recover=0.35)
+        assert dp.level(0.2) == 0
+        assert dp.level(0.6) == 1
+        assert dp.level(0.85) == 2
+        assert dp.level(0.4, prev_level=2) == 2      # hold band
+        assert dp.level(0.3, prev_level=2) == 0      # recovered
+        ic = pol.DEFAULT_CLASSES[0]                  # interactive, tier 2
+        assert dp.tier_for(ic, 0, 4) == 2
+        assert dp.tier_for(ic, 2, 4) == 3            # floor-clamped
+
+    def test_request_class_floor_validation(self):
+        with pytest.raises(ValueError):
+            pol.RequestClass("bad", priority=0, deadline_s=1.0,
+                             tier=2, tier_floor=1)
+
+    def test_tier_budgets_widen_down_the_ladder(self):
+        budgets = [pol.tier_error_budget(k) for k in pol.DEFAULT_LADDER]
+        assert budgets == sorted(budgets)            # fp32 tightest
+        assert budgets[0] < budgets[-1]
+
+
+# ---------------------------------------------------------------------------
+# frontend semantics
+# ---------------------------------------------------------------------------
+
+
+class TestFrontend:
+    def test_deadline_miss_on_monotonic_clock(self, tiny_csr):
+        clk = pol.ManualClock()
+        with mk_frontend(clk) as f:
+            fp = f.register(tiny_csr, warm=False)
+            rng = np.random.default_rng(0)
+            late = f.submit(fp, rng.standard_normal(tiny_csr.shape[1]),
+                            klass="standard", deadline_s=0.1)
+            ok = f.submit(fp, rng.standard_normal(tiny_csr.shape[1]),
+                          klass="standard", deadline_s=10.0)
+            clk.advance(0.2)                   # past `late`, not `ok`
+            f.run_until_drained()
+            assert late.status == "deadline_miss"
+            assert late.y is None
+            assert ok.status == "ok" and not ok.missed_deadline
+            assert f.stats()["deadline_misses"] == 1
+
+    def test_completed_late_is_accounted(self, tiny_csr, monkeypatch):
+        clk = pol.ManualClock()
+        with mk_frontend(clk) as f:
+            fp = f.register(tiny_csr, warm=False)
+            r = f.submit(fp, np.ones(tiny_csr.shape[1]), deadline_s=0.1)
+            orig = fe.ServingFrontend._run_batch
+
+            def slow(self, *a, **kw):          # service time > deadline
+                clk.advance(0.5)
+                return orig(self, *a, **kw)
+
+            monkeypatch.setattr(fe.ServingFrontend, "_run_batch", slow)
+            f.run_until_drained()
+            assert r.status == "ok"            # answered, but late
+            assert r.missed_deadline
+            assert f.stats()["deadline_misses"] == 1
+
+    def test_queue_full_rejects_loudly(self, tiny_csr, caplog, obs):
+        import logging
+
+        with mk_frontend(admission=pol.AdmissionPolicy(max_queue=2)) as f:
+            fp = f.register(tiny_csr, warm=False)
+            x = np.ones(tiny_csr.shape[1])
+            a, b = f.submit(fp, x), f.submit(fp, x)
+            with caplog.at_level(logging.WARNING):
+                c = f.submit(fp, x)
+            assert (a.status, b.status) == ("queued", "queued")
+            assert c.status == "rejected" and c.reason == "queue_full"
+            assert any("REJECTED" in m for m in caplog.messages)
+            shed = {k: v for k, v in _obs.snapshot()["counters"].items()
+                    if k.startswith("frontend.shed")}
+            assert sum(shed.values()) == 1
+
+    def test_vmem_admission_guard_rejects(self, tiny_csr):
+        n, m = tiny_csr.shape
+        adm = pol.AdmissionPolicy(vmem_limit_words=(n + m) * 2)
+        with mk_frontend(slots=4, admission=adm) as f:
+            fp = f.register(tiny_csr, warm=False)
+            r = f.submit(fp, np.ones(m))       # (n+m)*4 > limit
+            assert r.status == "rejected" and r.reason == "vmem"
+        with mk_frontend(slots=2, admission=adm) as f:
+            fp = f.register(tiny_csr, warm=False)
+            assert f.submit(fp, np.ones(m)).status == "queued"
+
+    def test_unknown_fingerprint_and_class_raise(self, tiny_csr):
+        with mk_frontend() as f:
+            with pytest.raises(fe.AdmissionError):
+                f.submit("deadbeef", np.ones(4))
+            fp = f.register(tiny_csr, warm=False)
+            with pytest.raises(fe.AdmissionError):
+                f.submit(fp, np.ones(tiny_csr.shape[1]), klass="nope")
+            with pytest.raises(fe.AdmissionError):
+                f.submit(fp, np.ones(3))       # shape mismatch
+
+    def test_coalesced_spmm_bitexact_vs_spmv(self, tiny_csr):
+        # integer data => fp32 arithmetic is exact => the batched spmm
+        # slot must reproduce per-request spmv answers BIT FOR BIT
+        a = tiny_csr.copy()
+        rng = np.random.default_rng(3)
+        a.data = rng.integers(-4, 5, size=a.nnz).astype(np.float64)
+        a.eliminate_zeros()
+        with mk_frontend(slots=4) as f:
+            fp = f.register(a, warm=False)
+            xs = [rng.integers(-8, 9, size=a.shape[1]).astype(np.float32)
+                  for _ in range(4)]
+            reqs = [f.submit(fp, x, klass="interactive") for x in xs]
+            f.run_until_drained()
+            assert all(r.status == "ok" for r in reqs)
+            kind = reqs[0].tier_kind
+            assert kind.startswith("plan_")
+            entry = f._entry(fp)
+            mat, plan, _ = entry.bind(kind)
+            for r, x in zip(reqs, xs):
+                single = np.asarray(plan.spmv(mat, x))
+                np.testing.assert_array_equal(r.y, single)
+
+    def test_lru_pool_eviction_and_rewarm(self, obs):
+        mats = testmats.suite("tiny")
+        names = ["stencil1d", "banded", "scattered"]
+        with mk_frontend(plan_pool=2) as f:
+            fps = [f.register(mats[k], warm=False) for k in names]
+            x = {fp: np.random.default_rng(1).standard_normal(
+                mats[k].shape[1]) for fp, k in zip(fps, names)}
+            for fp in fps:                     # third build evicts the LRU
+                f.submit(fp, x[fp])
+                f.run_until_drained()
+            assert len(f.pool) == 2
+            assert fps[0] not in f.pool        # oldest evicted
+            assert _obs.snapshot()["counters"]["frontend.pool_evict"] == 1
+            r = f.submit(fps[0], x[fps[0]])    # re-warm from registry
+            f.run_until_drained()
+            assert r.status == "ok"
+            assert fps[0] in f.pool and fps[1] not in f.pool
+            a64 = mats["stencil1d"].astype(np.float64)
+            ref = a64 @ np.asarray(x[fps[0]], np.float64)
+            assert np.max(np.abs(r.y - ref)) <= \
+                pol.tier_error_budget(r.tier_kind) * np.max(np.abs(ref))
+
+    def test_shed_order_drops_best_effort_first(self, tiny_csr):
+        adm = pol.AdmissionPolicy(max_queue=10, shed_watermark=0.5)
+        clk = pol.ManualClock()
+        with mk_frontend(clk, admission=adm) as f:
+            fp = f.register(tiny_csr, warm=False)
+            x = np.ones(tiny_csr.shape[1])
+            batch = []
+            for _ in range(4):
+                batch.append(f.submit(fp, x, klass="batch"))
+                clk.advance(0.001)
+            inter = []
+            for _ in range(4):
+                inter.append(f.submit(fp, x, klass="interactive"))
+                clk.advance(0.001)
+            f.step()                           # sheds down to watermark
+            shed = [r for r in batch + inter if r.status == "shed"]
+            assert len(shed) == 3              # 8 queued -> 5 kept
+            assert all(r.klass.name == "batch" for r in shed)
+            # newest best-effort requests go first
+            assert [r.uid for r in shed] == [r.uid for r in batch[1:]]
+            f.run_until_drained()
+            assert all(r.status == "ok" for r in inter)
+
+    def test_overload_demotes_down_the_ladder(self, tiny_csr):
+        adm = pol.AdmissionPolicy(max_queue=10, shed_watermark=0.95)
+        with mk_frontend(admission=adm) as f:
+            fp = f.register(tiny_csr, warm=False)
+            x = np.ones(tiny_csr.shape[1])
+            reqs = [f.submit(fp, x, klass="interactive") for _ in range(9)]
+            f.run_until_drained()              # occupancy 0.9 -> level 2
+            assert all(r.status == "ok" for r in reqs)
+            # interactive tier 2 + level 2, floor-clamped to tier 3
+            assert reqs[0].tier_kind == pol.DEFAULT_LADDER[3]
+            # once drained, later traffic recovers full precision
+            r = f.submit(fp, x, klass="interactive")
+            f.run_until_drained()
+            assert r.tier_kind == pol.DEFAULT_LADDER[2]
+
+    def test_solve_requests_are_served(self, tiny_csr):
+        with mk_frontend() as f:
+            fp = f.register(tiny_csr, warm=False)
+            b = tiny_csr.astype(np.float64) @ np.ones(tiny_csr.shape[0])
+            r = f.submit(fp, b, klass="batch", op="solve")
+            f.run_until_drained()
+            assert r.status == "ok"
+            assert r.tier_kind.startswith("solve:")
+            assert r.solve_info.relres <= 1e-7
+
+
+# ---------------------------------------------------------------------------
+# exporter lifecycle (satellite: engine/exporter teardown guarantees)
+# ---------------------------------------------------------------------------
+
+
+class TestExporterLifecycle:
+    def test_exporter_context_manager_stops_and_flushes(self, tmp_path,
+                                                        obs):
+        _obs.inc("lifecycle.probe")
+        path = str(tmp_path / "m.jsonl")
+        with _export.Exporter(_export.JsonlSink(path), 60.0) as ex:
+            assert ex.alive
+        assert not ex.alive
+        assert ex.flushes >= 1                 # final flush on __exit__
+        assert (tmp_path / "m.jsonl").exists()
+
+    def test_frontend_context_manager_stops_exporter(self, tmp_path,
+                                                     tiny_csr, obs):
+        path = str(tmp_path / "fe.jsonl")
+        with mk_frontend() as f:
+            fp = f.register(tiny_csr, warm=False)
+            ex = f.start_metrics_exporter(path=path, interval_s=60.0)
+            f.submit(fp, np.ones(tiny_csr.shape[1]))
+            f.run_until_drained()
+            assert ex.alive
+        assert not ex.alive and f._exporter is None
+        assert (tmp_path / "fe.jsonl").exists()
+
+    def test_engine_exit_and_run_flush_guarantees(self, tmp_path, obs,
+                                                  monkeypatch):
+        import jax
+
+        from repro import configs
+        from repro.models import transformer as tfm
+        from repro.serving import DecodeEngine, ServeConfig
+
+        cfg = configs.reduce(configs.get("qwen2-0.5b"))
+        params, _ = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        path = str(tmp_path / "eng.jsonl")
+        with DecodeEngine(cfg, params, ServeConfig(slots=1,
+                                                   max_len=32)) as eng:
+            ex = eng.start_metrics_exporter(path=path, interval_s=60.0)
+            assert ex.alive
+            # regression: an exception mid-run must still land tallies
+            eng.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=2)
+
+            def boom(self):
+                raise RuntimeError("boom")
+
+            monkeypatch.setattr(DecodeEngine, "step", boom)
+            with pytest.raises(RuntimeError):
+                eng.run()
+            assert (tmp_path / "eng.jsonl").exists()
+        # __exit__ guarantee: exporter stopped + detached however we left
+        assert not ex.alive
+        assert eng._exporter is None

@@ -1,0 +1,261 @@
+"""Chaos harness for the serving front end (DESIGN.md §15.6).
+
+``robust/inject.py``-driven campaigns against a LIVE frontend:
+fused-word bit flips mid-service, precision-store garbling, and
+plan-token staleness.  The contract under attack is always the same
+three-part promise:
+
+1. the breaker opens on persistent corruption (and the fp32 fallback
+   keeps answering while it is open),
+2. every response the service COMPLETES stays within its tier's error
+   budget against the fp64 oracle — corrupted answers are retried or
+   rerouted, never delivered,
+3. after the background rebuild, half-open probes re-close the breaker
+   and the packed tier serves again.
+
+The final test is the acceptance trace: sustained 2x-capacity overload
+plus a 50-injection campaign, holding zero out-of-budget deliveries,
+>= 70% of pre-overload goodput, and full breaker recovery.
+"""
+import numpy as np
+import pytest
+
+from repro.core import testmats
+from repro.observe import metrics as _obs
+from repro.robust import inject as inj
+from repro.serving import frontend as fe
+from repro.serving import policy as pol
+
+#: chaos-harness tier budget safety: tight enough that a delivered
+#: corrupted answer (not just quantization noise) would fail the check
+SAFETY = 16.0
+
+
+@pytest.fixture(scope="module")
+def amat():
+    return testmats.suite("tiny")["stencil1d"]
+
+
+@pytest.fixture()
+def obs():
+    was = _obs.enabled()
+    _obs.enable(True)
+    _obs.reset()
+    yield _obs
+    _obs.reset()
+    _obs.enable(was)
+
+
+def mk_frontend(clock=None, **kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("background", False)
+    kw.setdefault("C", 32)
+    kw.setdefault("sigma", 64)
+    return fe.ServingFrontend(fe.FrontendConfig(**kw),
+                              clock=clock or pol.ManualClock())
+
+
+def in_budget(req, a_csr) -> bool:
+    """Paper eq. (5) backward error of a completed spmv response vs the
+    fp64 oracle, against the responding tier's budget."""
+    kind = "fp32" if req.tier_kind == "fp32_fallback" else req.tier_kind
+    budget = pol.tier_error_budget(kind, safety=SAFETY)
+    x = np.asarray(req.x, np.float64)
+    exact = a_csr.astype(np.float64) @ x
+    num = float(np.max(np.abs(np.asarray(req.y, np.float64) - exact)))
+    anorm = float(np.max(np.abs(a_csr).sum(axis=1)))
+    xnorm = float(np.max(np.abs(x)))
+    return num <= budget * max(anorm * xnorm, 1e-300)
+
+
+class TestChaosCampaigns:
+    def test_breaker_opens_on_persistent_corruption_then_recloses(
+            self, amat):
+        clk = pol.ManualClock()
+        # cooldown strictly below the attempt-2 backoff delay (0.01 s),
+        # so the first post-rebuild retry is an eligible half-open probe
+        with mk_frontend(clk, fail_threshold=2, cooldown_s=0.008,
+                         backoff=pol.BackoffPolicy(base=0.005,
+                                                   max_attempts=6)) as f:
+            fp = f.register(amat, warm=False)
+            rng = np.random.default_rng(0)
+            r0 = f.submit(fp, rng.standard_normal(amat.shape[1]),
+                          klass="interactive")
+            f.run_until_drained()
+            kind = r0.tier_kind
+            entry = f._entry(fp)
+
+            # corruption that SURVIVES the first repair: re-flip a fused
+            # word after the first rebuild, so the breaker must actually
+            # reach its consecutive-failure threshold
+            mat, plan, _ = entry.bind(kind)
+            inj.flip_fused_word(mat, plan, seed=1)
+            real_rebuild, sabotage = entry.rebuild, {"left": 1}
+
+            def sabotaged(k):
+                real_rebuild(k)
+                if sabotage["left"] > 0:
+                    sabotage["left"] -= 1
+                    m2, p2, _ = entry.bind(k)
+                    inj.flip_fused_word(m2, p2, seed=2)
+
+            entry.rebuild = sabotaged
+            reqs = [f.submit(fp, rng.standard_normal(amat.shape[1]),
+                             klass="interactive") for _ in range(3)]
+            f.run_until_drained(max_ticks=500)
+
+            assert all(r.status == "ok" for r in reqs)
+            assert all(in_budget(r, amat) for r in reqs + [r0])
+            edges = [(s, d) for _, s, d in entry.breaker.transitions]
+            assert (pol.CLOSED, pol.OPEN) in edges          # quarantined
+            assert (pol.HALF_OPEN, pol.CLOSED) in edges     # re-admitted
+            assert entry.breaker.state == pol.CLOSED
+            assert entry.healthy(kind)
+            # the packed tier is serving again post-recovery
+            r2 = f.submit(fp, rng.standard_normal(amat.shape[1]),
+                          klass="interactive")
+            f.run_until_drained()
+            assert r2.tier_kind == kind and in_budget(r2, amat)
+
+    def test_store_garbling_never_reaches_responses(self, amat, tmp_path,
+                                                    obs):
+        from repro.precision import PrecisionStore
+
+        path = str(tmp_path / "store.json")
+        PrecisionStore(path).lookup_or_select(amat, 1e-3, sigma=64)
+        inj.corrupt_store(path, seed=0, mode="garble")
+        with mk_frontend(store=path) as f:
+            fp = f.register(amat, warm=False)
+            rng = np.random.default_rng(1)
+            reqs = [f.submit(fp, rng.standard_normal(amat.shape[1]),
+                             klass="interactive") for _ in range(3)]
+            f.run_until_drained()
+            assert all(r.status == "ok" for r in reqs)
+            assert all(in_budget(r, amat) for r in reqs)
+
+    def test_plan_token_staleness_forces_rebuild(self, amat, obs):
+        with mk_frontend() as f:
+            fp = f.register(amat, warm=False)
+            rng = np.random.default_rng(2)
+            r0 = f.submit(fp, rng.standard_normal(amat.shape[1]),
+                          klass="interactive")
+            f.run_until_drained()
+            kind = r0.tier_kind
+            entry = f._entry(fp)
+            mat, _, _ = entry.bind(kind)
+            mat._plan_token = object()         # operand refreshed under us
+            assert entry.stale(kind)
+            r = f.submit(fp, rng.standard_normal(amat.shape[1]),
+                         klass="interactive")
+            f.run_until_drained()
+            assert r.status == "ok" and in_budget(r, amat)
+            assert not entry.stale(kind)       # token re-recorded
+            stale = [v for k, v in _obs.snapshot()["counters"].items()
+                     if k.startswith("frontend.stale_plan")]
+            assert sum(stale) == 1
+
+
+class TestAcceptanceTrace:
+    """The ISSUE acceptance criterion: 2x-capacity sustained overload +
+    a 50-injection chaos campaign, in simulated time."""
+
+    def test_overload_plus_fault_trace(self, amat, obs):
+        DT = 0.01                              # simulated step duration
+        SLOTS = 4                              # capacity: SLOTS/DT req/s
+        clk = pol.ManualClock()
+        adm = pol.AdmissionPolicy(max_queue=32, shed_watermark=0.9)
+        cfg = dict(slots=SLOTS, admission=adm, fail_threshold=1,
+                   cooldown_s=0.02, plan_pool=4,
+                   backoff=pol.BackoffPolicy(base=0.005, max_attempts=3))
+        rng = np.random.default_rng(7)
+        classes = ["interactive", "standard", "batch"]
+
+        with mk_frontend(clk, **cfg) as f:
+            fp = f.register(amat, warm=False)
+            entry_holder = {}
+
+            def arrive(rate_per_s):
+                k = rng.poisson(rate_per_s * DT)
+                out = []
+                for _ in range(k):
+                    out.append(f.submit(
+                        fp, rng.standard_normal(amat.shape[1]),
+                        klass=classes[int(rng.integers(3))]))
+                return out
+
+            def inject_burst(n, seed0):
+                entry = f._entry(fp)
+                entry_holder["e"] = entry
+                kinds = [k for k in entry.guards] or []
+                done = 0
+                for i in range(n):
+                    if not kinds:
+                        break
+                    kind = kinds[int(rng.integers(len(kinds)))]
+                    mat, plan, _ = entry.bind(kind)
+                    try:
+                        inj.flip_fused_word(mat, plan, seed=seed0 + i)
+                    except ValueError:         # plan carries no fused
+                        inj.flip_pack_word(mat, plan, seed=seed0 + i)
+                    done += 1
+                return done
+
+            cap = SLOTS / DT                   # 400 req/s service ceiling
+            all_reqs = []
+            # phase 1 — normal load at 0.8x capacity
+            for _ in range(60):
+                all_reqs += arrive(0.8 * cap)
+                f.step()
+                clk.advance(DT)
+            t_pre_end = clk()
+            # phase 2 — 2x capacity overload + 50-injection campaign
+            injected = 0
+            for t in range(150):
+                all_reqs += arrive(2.0 * cap)
+                if t % 15 == 5 and injected < 50:
+                    injected += inject_burst(5, seed0=100 + injected)
+                f.step()
+                clk.advance(DT)
+            t_over_end = clk()
+            assert injected == 50              # full campaign landed
+            # phase 3 — recovery: clean light traffic, then drain
+            for _ in range(40):
+                all_reqs += arrive(0.3 * cap)
+                f.step()
+                clk.advance(DT)
+            f.run_until_drained(max_ticks=2000)
+
+            oks = [r for r in all_reqs if r.status == "ok"
+                   and r.op == "spmv"]
+            # 1) ZERO out-of-budget deliveries, fp64-oracle checked
+            bad = [r for r in oks if not in_budget(r, amat)]
+            assert not bad, f"{len(bad)} out-of-budget responses"
+            # 2) goodput under overload >= 70% of pre-overload QPS
+            pre_ok = sum(1 for r in oks if r.t_done <= t_pre_end)
+            over_ok = sum(1 for r in oks
+                          if t_pre_end < r.t_done <= t_over_end)
+            pre_qps = pre_ok / t_pre_end
+            over_qps = over_ok / (t_over_end - t_pre_end)
+            assert over_qps >= 0.7 * pre_qps, (pre_qps, over_qps)
+            # 3) overload actually engaged the valves: sheds happened and
+            # tight-SLO traffic demoted down the ladder instead of dying
+            st = f.stats()
+            assert st["by_status"].get("shed", 0) > 0
+            assert any(r.tier_kind == pol.DEFAULT_LADDER[3] for r in oks
+                       if r.klass.name == "interactive")
+            # every terminal status is a DEFINED behavior (loud rejection
+            # at the full queue included) — never 'failed'
+            assert all(r.status in ("ok", "shed", "rejected",
+                                    "deadline_miss") for r in all_reqs)
+            # 4) quarantined plans recovered within the trace
+            entry = entry_holder["e"]
+            edges = [(s, d) for _, s, d in entry.breaker.transitions]
+            assert (pol.CLOSED, pol.OPEN) in edges
+            assert entry.breaker.state == pol.CLOSED
+            for kind in list(entry.guards):
+                assert entry.healthy(kind)
+            # and the service still answers on packed tiers afterwards
+            r = f.submit(fp, rng.standard_normal(amat.shape[1]),
+                         klass="interactive")
+            f.run_until_drained()
+            assert r.status == "ok" and r.tier_kind.startswith("plan_")
